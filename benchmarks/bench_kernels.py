@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: Pallas kernels (interpret mode) vs their jnp
+oracles — correctness deltas + CPU wall-times for the jnp paths.
+
+On CPU the interpret-mode kernel is NOT a performance path (it executes
+Python per grid cell); the numbers that matter here are (a) max|err| vs
+the oracle across a shape sweep and (b) the jnp fallback's throughput,
+which IS the shipped CPU path. TPU wall-time belongs to real hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, iters=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    shapes = [(1, 256, 4, 64), (2, 512, 8, 64)] if quick else [
+        (1, 256, 4, 64), (2, 512, 8, 64), (2, 1024, 8, 128), (4, 2048, 16, 128)]
+    for (B, S, H, hd) in shapes:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        err = float(jnp.abs(out - want).max())
+        t_ref = _time(lambda: ref.flash_attention_ref(q, k, v, causal=True))
+        rows.append({"kernel": "flash_attention", "shape": f"B{B} S{S} H{H} hd{hd}",
+                     "max|err|": f"{err:.1e}",
+                     "jnp-ref ms": f"{t_ref*1e3:.1f}"})
+        assert err < 1e-4
+
+    for (R, D) in [(4096, 1024), (16384, 4096)][: 1 if quick else 2]:
+        x = jax.random.normal(key, (R, D), jnp.float32)
+        w = jnp.ones((D,))
+        err = float(jnp.abs(ops.rmsnorm(x, w) - ref.rmsnorm_ref(x, w)).max())
+        t_ref = _time(lambda: ref.rmsnorm_ref(x, w))
+        rows.append({"kernel": "rmsnorm", "shape": f"{R}x{D}",
+                     "max|err|": f"{err:.1e}", "jnp-ref ms": f"{t_ref*1e3:.1f}"})
+        assert err < 1e-5
+
+    N = 100_000 if quick else 2_000_000
+    ks = jax.random.split(key, 3)
+    mu = jax.random.normal(ks[0], (N,))
+    ls = -1 + 0.2 * jax.random.normal(ks[1], (N,))
+    eps = jax.random.normal(ks[2], (N,))
+    z, lq = ops.reparam_stl(mu, ls, eps)
+    z_r, lq_r = ref.reparam_stl_ref(mu, ls, eps)
+    err = max(float(jnp.abs(z - z_r).max()),
+              float(abs(lq - lq_r.sum())) / N)
+    t_ref = _time(lambda: ref.reparam_stl_ref(mu, ls, eps))
+    rows.append({"kernel": "reparam_stl", "shape": f"N={N}",
+                 "max|err|": f"{err:.1e}", "jnp-ref ms": f"{t_ref*1e3:.1f}"})
+    assert err < 1e-5
+
+    print_table("Pallas kernels (interpret mode) vs jnp oracles", rows,
+                ["kernel", "shape", "max|err|", "jnp-ref ms"])
+    return {"kernels": len(rows)}
+
+
+if __name__ == "__main__":
+    run(quick=True)

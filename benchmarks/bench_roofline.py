@@ -1,0 +1,87 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+results JSON produced by ``repro.launch.dryrun --out``.
+
+    PYTHONPATH=src python -m benchmarks.bench_roofline \
+        [--json benchmarks/data/roofline_single_pod.json] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import print_table
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "data",
+                       "roofline_single_pod.json")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path: str):
+    with open(path) as f:
+        recs = json.load(f)
+    key = lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))  # noqa: E731
+    return sorted(recs, key=lambda r: (r.get("mesh", ""),) + key(r))
+
+
+def fmt(x, digits=3):
+    return f"{x:.{digits}e}" if isinstance(x, float) else str(x)
+
+
+def rows_from(recs):
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "t_comp (s)": "skip", "t_mem (s)": "-", "t_coll (s)": "-",
+                         "bound": "-", "useful": "-", "HBM GiB/chip": "-"})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "t_comp (s)": "FAIL", "t_mem (s)": "-", "t_coll (s)": "-",
+                         "bound": "-", "useful": "-", "HBM GiB/chip": "-"})
+            continue
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "t_comp (s)": fmt(r["t_compute"]),
+            "t_mem (s)": fmt(r["t_memory"]),
+            "t_coll (s)": fmt(r["t_collective"]),
+            "bound": r["bottleneck"],
+            "useful": f"{r['useful_flops_ratio']:.2f}",
+            "HBM GiB/chip": f"{r['peak_bytes_per_chip']/2**30:.2f}",
+        })
+    return rows
+
+
+def run(json_path: str = DEFAULT, markdown: bool = False,
+        quick: bool = True) -> dict:  # quick: accepted for harness parity
+    recs = load(json_path)
+    cols = ["arch", "shape", "t_comp (s)", "t_mem (s)", "t_coll (s)", "bound",
+            "useful", "HBM GiB/chip"]
+    rows = rows_from(recs)
+    if markdown:
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "|".join("---" for _ in cols) + "|")
+        for row in rows:
+            print("| " + " | ".join(str(row[c]) for c in cols) + " |")
+    else:
+        print_table(f"Roofline terms per (arch x shape) [{recs[0].get('mesh')}]",
+                    rows, cols)
+    ok = [r for r in recs if r["status"] == "ok"]
+    by_bound = {}
+    for r in ok:
+        by_bound.setdefault(r["bottleneck"], []).append(
+            f"{r['arch']}/{r['shape']}")
+    print("\nbottleneck distribution:",
+          {k: len(v) for k, v in by_bound.items()})
+    return {"records": len(recs), "ok": len(ok), "by_bound": by_bound}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=DEFAULT)
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    run(a.json, a.markdown)

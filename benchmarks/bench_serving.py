@@ -1,0 +1,66 @@
+"""Serving micro-benchmark: prefill + decode throughput on CPU for the
+reduced configs (the mesh-scale serving path is lowered in the dry-run;
+these numbers verify the END-TO-END serve loop executes and give a CPU
+baseline for regression tracking)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table
+from repro.configs import get_config
+from repro.launch import steps as S
+
+
+def run(quick: bool = True) -> dict:
+    archs = ["qwen3-4b", "zamba2-7b", "olmoe-1b-7b"] if quick else [
+        "qwen3-4b", "zamba2-7b", "olmoe-1b-7b", "xlstm-1.3b", "qwen2-vl-2b",
+        "llama3.2-3b"]
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        J, B, P, G = 2, 4, 32, 8
+        state, _ = S.init_train_state(key, cfg, J)
+        prefill = jax.jit(S.make_serve_prefill(cfg, J, max_len=P + G
+                                               + cfg.num_vision_tokens))
+        decode = jax.jit(S.make_serve_decode(cfg, J))
+        batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.random.normal(
+                key, (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        if cfg.num_vision_tokens:
+            batch["vision"] = jax.random.normal(
+                key, (B, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+        logits, cache = prefill(state.theta, state.eta_G, state.eta_L, batch)
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        logits, cache2 = prefill(state.theta, state.eta_G, state.eta_L, batch)
+        jax.block_until_ready(logits)
+        t_pre = time.perf_counter() - t0
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+        # warm decode
+        lg, cache2 = decode(state.theta, state.eta_G, state.eta_L,
+                            tok[:, None], cache2)
+        jax.block_until_ready(lg)
+        t0 = time.perf_counter()
+        for _ in range(G):
+            lg, cache2 = decode(state.theta, state.eta_G, state.eta_L,
+                                tok[:, None], cache2)
+            tok = jnp.argmax(lg[:, -1], axis=-1)
+        jax.block_until_ready(tok)
+        t_dec = time.perf_counter() - t0
+        rows.append({
+            "arch": cfg.name,
+            "prefill tok/s": f"{B * P / t_pre:.0f}",
+            "decode tok/s": f"{B * G / t_dec:.0f}",
+        })
+    print_table("CPU serving throughput (reduced configs, B=4)", rows,
+                ["arch", "prefill tok/s", "decode tok/s"])
+    return {"rows": len(rows)}
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+@contextmanager
+def timed(label: str, results: dict):
+    t0 = time.perf_counter()
+    yield
+    results[f"{label}_seconds"] = round(time.perf_counter() - t0, 2)
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]) -> None:
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+    header = " | ".join(c.ljust(widths[c]) for c in cols)
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(" | ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+
+
+def fmt(x, nd=3):
+    if isinstance(x, float):
+        return round(x, nd)
+    return x

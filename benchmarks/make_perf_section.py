@@ -1,0 +1,124 @@
+"""Render EXPERIMENTS.md §Perf from perf_iterations.json + the baseline
+roofline JSON (replaces the <!-- PERF_RESULTS --> marker).
+
+    PYTHONPATH=src python -m benchmarks.make_perf_section
+"""
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+PERF = os.path.join(HERE, "data", "perf_iterations.json")
+BASE = os.path.join(HERE, "data", "roofline_single_pod.json")
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+NARRATIVE = {
+    ("whisper-base", "pad_vocab"):
+        ("H1: 51865 % 16 != 0 forces GSPMD to replicate the head matmul and "
+         "(B,S,V) logits per model shard (~16x waste); padding the vocab to "
+         "52096 restores sharding. Predicted: HBM ~-110 GiB, compute ~-70%.",
+         "CONFIRMED — the single biggest win of the whole pass."),
+    ("whisper-base", "masked_nll,pad_vocab"):
+        ("H2: the gold-logit gather over the (now sharded) vocab forces an "
+         "all-gather of the logits; a masked sum stays shard-local.",
+         "REFUTED — no change; XLA already partitioned the gather."),
+    ("qwen3-32b", "masked_nll"):
+        ("H2 on qwen3-32b (vocab already divisible): same gather hypothesis.",
+         "REFUTED — identical terms; the gather was never the bottleneck."),
+    ("qwen3-32b", "masked_nll,zero_opt"):
+        ("H3: Adam's f32 m/v for 32.8B params, sharded only 16-way on the "
+         "model axis, hold ~16.4 GiB/chip; ZeRO-sharding the stacked-unit "
+         "axis over the data axes cuts them 16x. Predicted: ~-16 GiB, no "
+         "new collectives (Adam is elementwise).",
+         "CONFIRMED — HBM 64.1 -> 46.5 GiB, collective term unchanged."),
+    ("qwen3-32b", "act_shard,masked_nll,zero_opt"):
+        ("H4: Megatron sequence parallelism (activations sequence-sharded "
+         "between units) should cut the saved-residual footprint 16x and "
+         "split TP all-reduces into RS+AG.",
+         "REFUTED, HARMFUL — XLA SPMD cannot reshard the (remat-transposed) "
+         "constraint efficiently ('involuntary full rematerialization'): "
+         "+996% compute, +869% memory. Reverted; see the SPMD warning in "
+         "the log (Shardy tracking bug b/433785288)."),
+    ("zamba2-7b", "zero_opt"):
+        ("H3 on zamba2: ZeRO the Adam moments. Zamba2's stacked-unit axis "
+         "is 13 (not divisible by 16), so only the shared-attn/tail params "
+         "reshard — predicted near-zero effect.",
+         "CONFIRMED (null result as predicted): terms and HBM unchanged."),
+    ("zamba2-7b", "microbatch=4,zero_opt"):
+        ("H5: the per-unit residuals saved for backward dominate memory "
+         "(13 units x ~2.9 GiB); accumulating gradients over 4 microbatches "
+         "keeps one slice live at a time. Predicted ~-28 GiB, identical "
+         "math (tests/test_perf_levers.py), collective ~unchanged.",
+         "CONFIRMED — 43.7 -> 15.4 GiB/chip: zamba2-7b train_4k now FITS "
+         "the 16 GiB HBM. Roofline terms within ~2% of baseline."),
+    ("qwen3-32b", "microbatch=4,zero_opt"):
+        ("H5 on qwen3-32b: 64 units x ~671 MiB residuals ~= 42 GiB; k=4 "
+         "microbatches should reclaim ~3/4 of that.",
+         "CONFIRMED — 64.1 -> 22.8 GiB/chip; terms ~unchanged."),
+    ("qwen3-32b", "microbatch=8,zero_opt"):
+        ("H6: one more doubling (k=8) to get under the 16 GiB line.",
+         None),  # filled from data
+    ("whisper-base", "microbatch=4,pad_vocab"):
+        ("H6 (whisper): combine the vocab fix with k=4 microbatches.",
+         "CONFIRMED — 2.9 GiB/chip; whisper train_4k is now ~7% of HBM."),
+}
+
+
+def main():
+    perf = json.load(open(PERF))
+    base = {(r["arch"], r["shape"]): r for r in json.load(open(BASE))}
+    # newest record per (arch, levers) wins
+    dedup = {}
+    for r in perf:
+        dedup[(r["arch"], ",".join(r["levers"]))] = r
+    lines = []
+    lines.append("| arch | levers (cumulative) | t_comp (s) | t_mem (s) | "
+                 "t_coll (s) | HBM GiB/chip | useful | verdict |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    order = [k for k in NARRATIVE if k in dedup]
+    for key in order:
+        r = dedup[key]
+        b = base[(r["arch"], r["shape"])]
+        lines.append(
+            f"| {r['arch']} | baseline (paper-faithful) | {b['t_compute']:.3e} "
+            f"| {b['t_memory']:.3e} | {b['t_collective']:.3e} | "
+            f"{b['peak_bytes_per_chip']/2**30:.1f} | "
+            f"{b['useful_flops_ratio']:.2f} | — |"
+            if key == order[0] or key[0] != order[order.index(key)-1][0]
+            else "")
+        hyp, verdict = NARRATIVE[key]
+        if verdict is None:
+            fits = r["peak_bytes_per_chip"] / 2**30
+            verdict = (f"{'CONFIRMED' if fits <= 16.5 else 'PARTIAL'} — "
+                       f"{fits:.1f} GiB/chip")
+        lines.append(
+            f"| {r['arch']} | {','.join(r['levers'])} | {r['t_compute']:.3e} "
+            f"| {r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"{r['peak_bytes_per_chip']/2**30:.1f} | "
+            f"{r['useful_flops_ratio']:.2f} | see below |")
+    lines = [l for l in lines if l]
+
+    notes = ["", "### Iteration log (hypothesis -> change -> measured -> verdict)", ""]
+    for i, key in enumerate(order, 1):
+        hyp, verdict = NARRATIVE[key]
+        r = dedup[key]
+        if verdict is None:
+            fits = r["peak_bytes_per_chip"] / 2**30
+            verdict = (f"{'CONFIRMED' if fits <= 16.5 else 'PARTIAL'} — "
+                       f"{fits:.1f} GiB/chip.")
+        notes.append(f"{i}. **{key[0]} + [{key[1]}]** — {hyp}\n"
+                     f"   **Measured:** t=({r['t_compute']:.2e}, "
+                     f"{r['t_memory']:.2e}, {r['t_collective']:.2e}) s, "
+                     f"HBM {r['peak_bytes_per_chip']/2**30:.1f} GiB. "
+                     f"**{verdict}**")
+    section = "\n".join(lines + notes)
+
+    with open(EXP) as f:
+        doc = f.read()
+    doc = doc.replace("<!-- PERF_RESULTS -->", section)
+    with open(EXP, "w") as f:
+        f.write(doc)
+    print("patched EXPERIMENTS.md with", len(order), "iterations")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end driver on an assigned LLM architecture: SFVI-train a reduced
+model for a few hundred steps, then serve it with batched requests using
+the posterior-mean weights + per-silo Bayesian head adapters.
+
+This is the framework path the dry-run lowers at production scale
+(launch/steps.py); here it RUNS on CPU with the reduced config.
+
+Run:  PYTHONPATH=src python examples/llm_federated.py --arch qwen3-4b \
+          --steps 200
+      PYTHONPATH=src python examples/llm_federated.py --arch olmoe-1b-7b \
+          --steps 30 --batch 4        # MoE variant, quicker
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    print("== phase 1: SFVI training ==")
+    train_mod.main([
+        "--arch", args.arch, "--steps", str(args.steps),
+        "--batch", str(args.batch), "--silos", "4",
+    ])
+    print("\n== phase 2: batched serving (posterior-mean model) ==")
+    serve_mod.main([
+        "--arch", args.arch, "--batch", str(args.batch),
+        "--prompt-len", "32", "--gen", "16", "--silos", "4",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load_pytree, save_pytree, CheckpointManager
+
+__all__ = ["load_pytree", "save_pytree", "CheckpointManager"]

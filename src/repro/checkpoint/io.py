@@ -1,0 +1,116 @@
+"""Pytree checkpointing via msgpack (orbax unavailable offline).
+
+Federated nuance: silo-private state (η_{L_j}, local optimizer moments) is
+checkpointed *per silo* into separate files so a restored deployment keeps
+the paper's privacy boundary — the server checkpoint never contains local
+variational parameters.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_KIND_ARRAY = 0
+_KIND_SCALAR = 1
+
+
+def _encode_leaf(x):
+    arr = np.asarray(x)
+    # dtype *name* (not .str): extended dtypes like bfloat16 round-trip by
+    # name through ml_dtypes but serialize as opaque '|V2' via .str.
+    return {
+        b"k": _KIND_ARRAY,
+        b"d": arr.dtype.name,
+        b"s": list(arr.shape),
+        b"b": arr.tobytes(),
+    }
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # vendored with jax
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _decode_leaf(obj):
+    name = obj[b"d"].decode() if isinstance(obj[b"d"], bytes) else obj[b"d"]
+    arr = np.frombuffer(obj[b"b"], dtype=_resolve_dtype(name)).reshape(obj[b"s"])
+    return jnp.asarray(arr)
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        b"treedef": str(treedef).encode(),
+        b"leaves": [_encode_leaf(l) for l in leaves],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)  # atomic
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (structure is not serialized
+    executably; the caller supplies the template, as with orbax)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves = [_decode_leaf(l) for l in payload[b"leaves"]]
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template has {len(like_leaves)}"
+        )
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention, plus per-silo private shards."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int, shard: Optional[str] = None) -> str:
+        name = f"step_{step:08d}" + (f".{shard}" if shard else "") + ".msgpack"
+        return os.path.join(self.directory, name)
+
+    def save(self, step: int, tree: PyTree, shard: Optional[str] = None) -> str:
+        path = self._path(step, shard)
+        save_pytree(path, tree)
+        self._gc(shard)
+        return path
+
+    def restore(self, step: int, like: PyTree, shard: Optional[str] = None) -> PyTree:
+        return load_pytree(self._path(step, shard), like)
+
+    def latest_step(self, shard: Optional[str] = None) -> Optional[int]:
+        steps = self._steps(shard)
+        return steps[-1] if steps else None
+
+    def _steps(self, shard: Optional[str]):
+        suffix = (f".{shard}" if shard else "") + ".msgpack"
+        steps = []
+        for fn in os.listdir(self.directory):
+            if fn.startswith("step_") and fn.endswith(suffix):
+                core = fn[len("step_") :][: -len(suffix)]
+                if core.isdigit():
+                    steps.append(int(core))
+        return sorted(steps)
+
+    def _gc(self, shard: Optional[str]):
+        steps = self._steps(shard)
+        for s in steps[: -self.keep]:
+            os.remove(self._path(s, shard))

@@ -1,0 +1,58 @@
+"""Core SFVI library — the paper's contribution as composable JAX modules."""
+from repro.core.families import (
+    BatchedDiagGaussian,
+    CholeskyGaussian,
+    ConditionalGaussian,
+    DiagGaussian,
+)
+from repro.core.model import StructuredModel, empty_theta
+from repro.core.elbo import (elbo_objective, elbo_value, iwae_objective,
+                             iwae_value, stl_objective)
+from repro.core.sfvi import SFVIProblem
+from repro.core.barycenter import (
+    diag_barycenter,
+    gaussian_barycenter,
+    gaussian_barycenter_cov,
+    sqrtm_eigh,
+    sqrtm_newton_schulz,
+    wasserstein2_gaussian,
+)
+from repro.core.runtime import (
+    CommLog,
+    SFVIAvgServer,
+    SFVIServer,
+    Silo,
+    tree_add,
+    tree_bytes,
+    tree_mean,
+    tree_scale,
+)
+
+__all__ = [
+    "BatchedDiagGaussian",
+    "CholeskyGaussian",
+    "ConditionalGaussian",
+    "DiagGaussian",
+    "StructuredModel",
+    "empty_theta",
+    "elbo_objective",
+    "elbo_value",
+    "iwae_objective",
+    "iwae_value",
+    "stl_objective",
+    "SFVIProblem",
+    "diag_barycenter",
+    "gaussian_barycenter",
+    "gaussian_barycenter_cov",
+    "sqrtm_eigh",
+    "sqrtm_newton_schulz",
+    "wasserstein2_gaussian",
+    "CommLog",
+    "SFVIAvgServer",
+    "SFVIServer",
+    "Silo",
+    "tree_add",
+    "tree_bytes",
+    "tree_mean",
+    "tree_scale",
+]

@@ -1,0 +1,55 @@
+"""Amortized inference (paper Remark, §3.2): instead of training η_{L_j}
+directly, an inference network f_φ maps each observation to its local
+variational parameters — η_{L_{j,k}} = f_φ(y_{j,k}, Z_G), with φ ∈ θ.
+
+In SFVI this slots in transparently: φ is part of θ, so it is trained by
+the same summed silo gradients g_j^θ and never exposes per-observation
+posteriors; the silo evaluates its own encoder on its own data. The
+encoder is a small MLP producing (μ, log σ) per observation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+def encoder_init(key, in_dim: int, hidden: int, latent_dim: int) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = 1.0 / math.sqrt(in_dim)
+    s2 = 1.0 / math.sqrt(hidden)
+    return {
+        "w1": s1 * jax.random.normal(k1, (in_dim, hidden)),
+        "b1": jnp.zeros((hidden,)),
+        "w_mu": s2 * jax.random.normal(k2, (hidden, latent_dim)),
+        "b_mu": jnp.zeros((latent_dim,)),
+        "w_ls": 0.1 * s2 * jax.random.normal(k3, (hidden, latent_dim)),
+        "b_ls": jnp.full((latent_dim,), -1.0),
+    }
+
+
+def encode(phi: Dict[str, Any], y: jnp.ndarray):
+    """y: (N, in_dim) -> (mu, log_sigma), each (N, latent_dim)."""
+    h = jnp.tanh(y @ phi["w1"] + phi["b1"])
+    return h @ phi["w_mu"] + phi["b_mu"], h @ phi["w_ls"] + phi["b_ls"]
+
+
+def sample_local(phi, y, eps):
+    """z_{L,k} = mu_k + sigma_k * eps_k per observation; eps: (N, latent)."""
+    mu, ls = encode(phi, y)
+    return mu + jnp.exp(ls) * eps
+
+
+def log_q_local(phi, y, z, stop_params: bool = True):
+    """Σ_k log q(z_k ; f_φ(y_k)) with the STL stop-gradient on φ."""
+    if stop_params:
+        phi = jax.tree_util.tree_map(jax.lax.stop_gradient, phi)
+    mu, ls = encode(phi, y)
+    e = (z - mu) * jnp.exp(-ls)
+    return (
+        -0.5 * jnp.sum(e * e) - jnp.sum(ls) - 0.5 * z.size * _LOG_2PI
+    )

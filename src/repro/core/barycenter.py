@@ -1,0 +1,135 @@
+"""2-Wasserstein barycenters of Gaussians (paper §3.2, point 3).
+
+For Gaussians {N(μ_j, Σ_j)} the barycenter is Gaussian (Mallasto & Feragen
+2017, Thm 4) with
+
+    μ* = J⁻¹ Σ_j μ_j
+    Σ* = the unique PSD root of   Σ* = J⁻¹ Σ_j (Σ*^{1/2} Σ_j Σ*^{1/2})^{1/2}
+
+solved by fixed-point iteration (Álvarez-Esteban et al., 2016). When every
+Σ_j is diagonal the solution is analytic:  Σ* = (J⁻¹ Σ_j Σ_j^{1/2})².
+
+Two matrix-sqrt backends are provided:
+  * ``sqrtm_eigh``  — eigendecomposition; exact, host/runtime friendly.
+  * ``sqrtm_newton_schulz`` — pure-matmul Newton–Schulz iteration; this is
+    the TPU-native form (MXU-friendly, no data-dependent control flow) used
+    inside jitted/sharded graphs.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def diag_barycenter(mus: jnp.ndarray, sigmas: jnp.ndarray, weights=None):
+    """Analytic barycenter for diagonal Gaussians.
+
+    Args:
+      mus:    (J, d) stacked means.
+      sigmas: (J, d) stacked marginal standard deviations.
+      weights: optional (J,) simplex weights (default uniform — the paper's J⁻¹).
+
+    Returns (mu*, sigma*): each (d,).
+    """
+    if weights is None:
+        mu = jnp.mean(mus, axis=0)
+        sigma = jnp.mean(sigmas, axis=0)  # ((1/J) Σ Σ_j^{1/2}) — std is sqrt(Σ) already
+    else:
+        w = weights[:, None]
+        mu = jnp.sum(w * mus, axis=0)
+        sigma = jnp.sum(w * sigmas, axis=0)
+    return mu, sigma
+
+
+def sqrtm_eigh(mat: jnp.ndarray) -> jnp.ndarray:
+    """PSD matrix square root via symmetric eigendecomposition."""
+    vals, vecs = jnp.linalg.eigh(mat)
+    vals = jnp.clip(vals, 0.0, None)
+    return (vecs * jnp.sqrt(vals)) @ vecs.T
+
+
+def sqrtm_newton_schulz(mat: jnp.ndarray, num_iters: int = 25) -> jnp.ndarray:
+    """Newton–Schulz iteration for the PSD square root — matmuls only.
+
+    Converges quadratically for ||I − A/||A||||₂ < 1, which holds for PSD A.
+    This is the in-graph (TPU/MXU) backend: no eigh, no branching.
+    """
+    dim = mat.shape[-1]
+    norm = jnp.sqrt(jnp.sum(mat * mat)) + 1e-12
+    y = mat / norm
+    z = jnp.eye(dim, dtype=mat.dtype)
+    eye3 = 3.0 * jnp.eye(dim, dtype=mat.dtype)
+
+    def body(_, carry):
+        y, z = carry
+        t = 0.5 * (eye3 - z @ y)
+        return (y @ t, t @ z)
+
+    y, _ = jax.lax.fori_loop(0, num_iters, body, (y, z))
+    return y * jnp.sqrt(norm)
+
+
+def gaussian_barycenter_cov(
+    covs: jnp.ndarray,
+    weights=None,
+    num_fp_iters: int = 50,
+    sqrtm=sqrtm_eigh,
+) -> jnp.ndarray:
+    """Fixed-point iteration for the barycenter covariance (full Σ_j).
+
+    Args:
+      covs: (J, d, d) stacked covariance matrices.
+      weights: optional (J,) simplex weights.
+      num_fp_iters: outer fixed-point iterations.
+      sqrtm: matrix-sqrt backend (eigh or Newton–Schulz).
+    """
+    J, d, _ = covs.shape
+    w = jnp.full((J,), 1.0 / J) if weights is None else weights
+
+    def step(_, cov):
+        root = sqrtm(cov)
+        inner = jax.vmap(lambda c: sqrtm(root @ c @ root))(covs)
+        mixed = jnp.einsum("j,jab->ab", w, inner)
+        # Enforce symmetry against fp drift.
+        return 0.5 * (mixed + mixed.T)
+
+    init = jnp.einsum("j,jab->ab", w, covs)  # start from the linear mixture
+    return jax.lax.fori_loop(0, num_fp_iters, step, init)
+
+
+def gaussian_barycenter(mus: jnp.ndarray, covs: jnp.ndarray, weights=None, **kw):
+    """(μ*, Σ*) for full-covariance Gaussians."""
+    if weights is None:
+        mu = jnp.mean(mus, axis=0)
+    else:
+        mu = jnp.einsum("j,jd->d", weights, mus)
+    return mu, gaussian_barycenter_cov(covs, weights=weights, **kw)
+
+
+def wasserstein2_gaussian(mu1, cov1, mu2, cov2, sqrtm=sqrtm_eigh) -> jnp.ndarray:
+    """Squared 2-Wasserstein distance between Gaussians (Bures metric).
+
+    W₂² = ||μ₁−μ₂||² + tr(Σ₁ + Σ₂ − 2 (Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2})
+    """
+    root1 = sqrtm(cov1)
+    cross = sqrtm(root1 @ cov2 @ root1)
+    bures = jnp.trace(cov1) + jnp.trace(cov2) - 2.0 * jnp.trace(cross)
+    return jnp.sum((mu1 - mu2) ** 2) + jnp.clip(bures, 0.0, None)
+
+
+def barycenter_params_diag(family, params_list: Sequence[dict]) -> dict:
+    """Barycenter in *parameter space representation* for DiagGaussian params."""
+    mus = jnp.stack([p["mu"] for p in params_list])
+    sigmas = jnp.stack([jnp.exp(p["log_sigma"]) for p in params_list])
+    mu, sigma = diag_barycenter(mus, sigmas)
+    return family.from_moments(mu, sigma)
+
+
+def barycenter_params_full(family, params_list: Sequence[dict], **kw) -> dict:
+    """Barycenter for CholeskyGaussian params (full covariance)."""
+    mus = jnp.stack([p["mu"] for p in params_list])
+    covs = jnp.stack([family.covariance(p) for p in params_list])
+    mu, cov = gaussian_barycenter(mus, covs, **kw)
+    return family.from_moments(mu, cov)

@@ -1,0 +1,220 @@
+"""Variational families (paper §2–3.1).
+
+The paper's structured Gaussian family:
+
+    Z_G           = mu_G + sigma_G ⊙ (L_G @ eps_G)
+    Z_{L_j} | Z_G = mu_bar_j + C_j (Z_G − mu_G) + sigma_j ⊙ (L_j @ eps_{L_j})
+
+with L_G, L_j lower-unitriangular. ``DiagGaussian`` is the special case
+L ≡ I (used in the paper's MNIST/ProdLDA experiments); ``CholeskyGaussian``
+carries the full unitriangular factor; ``ConditionalGaussian`` adds the
+coupling C_j that models Cov(Z_G, Z_{L_j}) = Σ_GG C_jᵀ.
+
+All families are immutable descriptors; parameters live in plain dict
+pytrees so they flow through jit/grad/psum and the Wasserstein barycenter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+def _tril_indices(dim: int):
+    return jnp.tril_indices(dim, k=-1)
+
+
+def _unpack_unitriangular(packed: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Packed strictly-lower entries -> lower-unitriangular (dim, dim) matrix."""
+    rows, cols = _tril_indices(dim)
+    mat = jnp.eye(dim, dtype=packed.dtype)
+    if dim > 1:
+        mat = mat.at[rows, cols].set(packed)
+    return mat
+
+
+@dataclasses.dataclass(frozen=True)
+class DiagGaussian:
+    """Mean-field Gaussian: z = mu + sigma ⊙ eps. The paper's workhorse family."""
+
+    dim: int
+
+    def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
+        return {
+            "mu": mu_scale * jax.random.normal(key, (self.dim,)),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+        }
+
+    def sample(self, params: Params, eps: jnp.ndarray) -> jnp.ndarray:
+        return params["mu"] + jnp.exp(params["log_sigma"]) * eps
+
+    def log_prob(self, params: Params, z: jnp.ndarray) -> jnp.ndarray:
+        sigma = jnp.exp(params["log_sigma"])
+        eps = (z - params["mu"]) / sigma
+        return -0.5 * jnp.sum(eps**2) - jnp.sum(params["log_sigma"]) - 0.5 * self.dim * _LOG_2PI
+
+    def entropy(self, params: Params) -> jnp.ndarray:
+        return jnp.sum(params["log_sigma"]) + 0.5 * self.dim * (1.0 + _LOG_2PI)
+
+    def to_moments(self, params: Params):
+        """(mean, marginal std) — consumed by the Wasserstein barycenter."""
+        return params["mu"], jnp.exp(params["log_sigma"])
+
+    def from_moments(self, mu: jnp.ndarray, sigma: jnp.ndarray) -> Params:
+        return {"mu": mu, "log_sigma": jnp.log(sigma)}
+
+    @property
+    def num_params(self) -> int:
+        return 2 * self.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class CholeskyGaussian:
+    """z = mu + sigma ⊙ (L eps), L lower-unitriangular (paper §3.1).
+
+    Covariance = D L Lᵀ D with D = diag(sigma); log|det| = Σ log sigma.
+    """
+
+    dim: int
+
+    def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
+        n_off = self.dim * (self.dim - 1) // 2
+        return {
+            "mu": mu_scale * jax.random.normal(key, (self.dim,)),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+            "L_packed": jnp.zeros((n_off,)),
+        }
+
+    def _chol(self, params: Params) -> jnp.ndarray:
+        sigma = jnp.exp(params["log_sigma"])
+        L = _unpack_unitriangular(params["L_packed"], self.dim)
+        return sigma[:, None] * L  # scaled Cholesky factor of the covariance
+
+    def sample(self, params: Params, eps: jnp.ndarray) -> jnp.ndarray:
+        L = _unpack_unitriangular(params["L_packed"], self.dim)
+        return params["mu"] + jnp.exp(params["log_sigma"]) * (L @ eps)
+
+    def log_prob(self, params: Params, z: jnp.ndarray) -> jnp.ndarray:
+        scaled = self._chol(params)
+        eps = jax.scipy.linalg.solve_triangular(scaled, z - params["mu"], lower=True)
+        return -0.5 * jnp.sum(eps**2) - jnp.sum(params["log_sigma"]) - 0.5 * self.dim * _LOG_2PI
+
+    def entropy(self, params: Params) -> jnp.ndarray:
+        return jnp.sum(params["log_sigma"]) + 0.5 * self.dim * (1.0 + _LOG_2PI)
+
+    def covariance(self, params: Params) -> jnp.ndarray:
+        chol = self._chol(params)
+        return chol @ chol.T
+
+    def to_moments(self, params: Params):
+        """(mean, full covariance) — consumed by the full-Σ barycenter."""
+        return params["mu"], self.covariance(params)
+
+    def from_moments(self, mu: jnp.ndarray, cov: jnp.ndarray) -> Params:
+        chol = jnp.linalg.cholesky(cov)
+        diag = jnp.diagonal(chol)
+        L = chol / diag[:, None]
+        rows, cols = _tril_indices(self.dim)
+        packed = L[rows, cols] if self.dim > 1 else jnp.zeros((0,))
+        return {"mu": mu, "log_sigma": jnp.log(diag), "L_packed": packed}
+
+    @property
+    def num_params(self) -> int:
+        return 2 * self.dim + self.dim * (self.dim - 1) // 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ConditionalGaussian:
+    """q(Z_L | Z_G) = N(mu_bar + C (z_G − mu_G), D L Lᵀ D)  (paper §3.1).
+
+    ``use_coupling=False`` drops C (mean-field across the G/L boundary);
+    ``use_chol=False`` sets L ≡ I (the paper does this for the GLMM, where
+    the local latents are conditionally independent a posteriori).
+    """
+
+    dim: int
+    global_dim: int
+    use_coupling: bool = True
+    use_chol: bool = False
+
+    def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
+        k1, _ = jax.random.split(key)
+        params = {
+            "mu_bar": mu_scale * jax.random.normal(k1, (self.dim,)),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+        }
+        if self.use_coupling:
+            params["C"] = jnp.zeros((self.dim, self.global_dim))
+        if self.use_chol:
+            params["L_packed"] = jnp.zeros((self.dim * (self.dim - 1) // 2,))
+        return params
+
+    def _cond_mean(self, params: Params, z_G, mu_G):
+        mean = params["mu_bar"]
+        if self.use_coupling:
+            mean = mean + params["C"] @ (z_G - mu_G)
+        return mean
+
+    def sample(self, params: Params, z_G: jnp.ndarray, mu_G: jnp.ndarray, eps: jnp.ndarray):
+        noise = eps
+        if self.use_chol:
+            L = _unpack_unitriangular(params["L_packed"], self.dim)
+            noise = L @ eps
+        return self._cond_mean(params, z_G, mu_G) + jnp.exp(params["log_sigma"]) * noise
+
+    def log_prob(self, params: Params, z_L: jnp.ndarray, z_G: jnp.ndarray, mu_G: jnp.ndarray):
+        resid = z_L - self._cond_mean(params, z_G, mu_G)
+        if self.use_chol:
+            L = _unpack_unitriangular(params["L_packed"], self.dim)
+            scaled = jnp.exp(params["log_sigma"])[:, None] * L
+            eps = jax.scipy.linalg.solve_triangular(scaled, resid, lower=True)
+        else:
+            eps = resid / jnp.exp(params["log_sigma"])
+        return -0.5 * jnp.sum(eps**2) - jnp.sum(params["log_sigma"]) - 0.5 * self.dim * _LOG_2PI
+
+    @property
+    def num_params(self) -> int:
+        n = 2 * self.dim
+        if self.use_coupling:
+            n += self.dim * self.global_dim
+        if self.use_chol:
+            n += self.dim * (self.dim - 1) // 2
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedDiagGaussian:
+    """A batch of independent diagonal Gaussians, e.g. per-document W_k in
+    ProdLDA or per-silo adapters in the LLM configs. Shape (batch, dim)."""
+
+    batch: int
+    dim: int
+
+    def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
+        return {
+            "mu": mu_scale * jax.random.normal(key, (self.batch, self.dim)),
+            "log_sigma": jnp.full((self.batch, self.dim), log_sigma_init),
+        }
+
+    def sample(self, params: Params, eps: jnp.ndarray) -> jnp.ndarray:
+        return params["mu"] + jnp.exp(params["log_sigma"]) * eps
+
+    def log_prob(self, params: Params, z: jnp.ndarray) -> jnp.ndarray:
+        sigma = jnp.exp(params["log_sigma"])
+        eps = (z - params["mu"]) / sigma
+        return (
+            -0.5 * jnp.sum(eps**2)
+            - jnp.sum(params["log_sigma"])
+            - 0.5 * self.batch * self.dim * _LOG_2PI
+        )
+
+    @property
+    def num_params(self) -> int:
+        return 2 * self.batch * self.dim

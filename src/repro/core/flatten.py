@@ -1,0 +1,37 @@
+"""Flat-vector <-> structured-latent packing.
+
+Variational families operate on flat latent vectors; models think in named
+blocks (weights, biases, variance parameters). ``VectorSpec`` provides the
+bijection, jit-safely (static shapes/slices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorSpec:
+    shapes: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @staticmethod
+    def create(shapes: Dict[str, Tuple[int, ...]]) -> "VectorSpec":
+        return VectorSpec(tuple((k, tuple(v)) for k, v in shapes.items()))
+
+    @property
+    def dim(self) -> int:
+        return int(sum(np.prod(s, dtype=np.int64) for _, s in self.shapes))
+
+    def unpack(self, vec: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out, start = {}, 0
+        for name, shape in self.shapes:
+            size = int(np.prod(shape, dtype=np.int64))
+            out[name] = vec[start : start + size].reshape(shape)
+            start += size
+        return out
+
+    def pack(self, parts: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return jnp.concatenate([parts[name].reshape(-1) for name, _ in self.shapes])

@@ -1,0 +1,356 @@
+"""Host-level federated runtime — literal transcriptions of Algorithms 1 & 2.
+
+This runtime keeps the hub-and-spoke structure of the paper: a ``Server``
+object and J ``Silo`` objects exchange explicit message pytrees, and every
+message is metered (bytes up / bytes down) so the communication-efficiency
+claims of §3.2 are measurable. The silo's data, its η_{L_j}, and its
+optimizer state for η_{L_j} live *inside* the Silo object and never appear
+in any message — the privacy structure of the paper enforced by construction.
+
+The mesh/SPMD execution path (launch/train.py) reuses the same per-silo math
+(`SFVIProblem.silo_grads`) but virtualizes the server into a psum; see
+DESIGN.md §5.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.barycenter import barycenter_params_diag, barycenter_params_full
+from repro.core.families import CholeskyGaussian, DiagGaussian
+from repro.core.sfvi import SFVIProblem
+from repro.optim.base import GradientTransformation, apply_updates
+
+PyTree = Any
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Metered size of a message pytree in bytes."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a: PyTree, s: float) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_mean(trees: Sequence[PyTree]) -> PyTree:
+    return jax.tree_util.tree_map(lambda *xs: sum(xs) / len(xs), *trees)
+
+
+@dataclasses.dataclass
+class CommLog:
+    """Per-round communication accounting."""
+
+    rounds: int = 0
+    bytes_up: int = 0  # silo -> server
+    bytes_down: int = 0  # server -> silo
+
+    def record(self, up: int, down: int):
+        self.rounds += 1
+        self.bytes_up += up
+        self.bytes_down += down
+
+    @property
+    def total(self) -> int:
+        return self.bytes_up + self.bytes_down
+
+
+class Silo:
+    """One data owner. Holds y_j, η_{L_j} and its local optimizer privately."""
+
+    def __init__(
+        self,
+        silo_id: int,
+        problem: SFVIProblem,
+        data: Any,
+        eta_L: Optional[PyTree],
+        local_optimizer: Optional[GradientTransformation],
+        num_obs: int,
+        seed: int = 0,
+    ):
+        self.silo_id = silo_id
+        self.problem = problem
+        self.data = data
+        self.eta_L = eta_L
+        self.num_obs = num_obs
+        self._key = jax.random.PRNGKey(seed * 7919 + silo_id)
+        self._local_opt = local_optimizer
+        self._local_opt_state = (
+            local_optimizer.init(eta_L) if (local_optimizer and eta_L is not None) else None
+        )
+        self._jit_step = jax.jit(self._step_impl, static_argnames=("likelihood_scale",))
+        self._jit_local_rounds = jax.jit(
+            self._local_rounds_impl, static_argnames=("num_steps", "likelihood_scale")
+        )
+
+    # ---------------- Algorithm 1 body ----------------
+
+    def _step_impl(self, theta, eta_G, eta_L, local_opt_state, eps_G, eps_L, likelihood_scale=1.0):
+        g_theta, g_eta, g_local, hatLj = self.problem.silo_grads(
+            theta, eta_G, eta_L, eps_G, eps_L, self.data, likelihood_scale
+        )
+        if g_local is not None and self._local_opt is not None:
+            # Optimizers are descent-convention; we ascend the ELBO.
+            descent = tree_scale(g_local, -1.0)
+            updates, local_opt_state = self._local_opt.update(descent, local_opt_state, eta_L)
+            eta_L = apply_updates(eta_L, updates)
+        return g_theta, g_eta, eta_L, local_opt_state, hatLj
+
+    def sfvi_step(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Receive (θ, η_G, ε_G); update η_{L_j} in place; reply (g_j^θ, g_j^η)."""
+        eps_L = None
+        if self.problem.model.has_local:
+            self._key, sub = jax.random.split(self._key)
+            eps_L = jax.random.normal(sub, self._local_eps_shape())
+        g_theta, g_eta, self.eta_L, self._local_opt_state, hatLj = self._jit_step(
+            msg["theta"], msg["eta_G"], self.eta_L, self._local_opt_state,
+            msg["eps_G"], eps_L,
+        )
+        return {"g_theta": g_theta, "g_eta": g_eta, "hat_Lj": hatLj}
+
+    def _local_eps_shape(self):
+        fam = self.problem.local_family
+        if hasattr(fam, "batch"):
+            return (fam.batch, fam.dim)
+        return (fam.dim,)
+
+    # ---------------- Algorithm 2 body ----------------
+
+    def _local_rounds_impl(
+        self, theta, eta_G, eta_L, key, opt_states, num_steps, likelihood_scale
+    ):
+        """m steps of *local* stochastic-gradient VI on L̂_0 + (N/N_j) L̂_j."""
+        server_opt, local_opt = self._avg_opts
+
+        def objective(th, eg, el, eps_G, eps_L):
+            val = self.problem.hat_L0(th, eg, eps_G)
+            val = val + self.problem.hat_Lj(
+                th, eg, el, eps_G, eps_L, self.data, likelihood_scale
+            )
+            return val
+
+        def body(carry, key_i):
+            th, eg, el, (s_state, l_state) = carry
+            kG, kL = jax.random.split(key_i)
+            eps_G = jax.random.normal(kG, (self.problem.model.global_dim,))
+            eps_L = (
+                jax.random.normal(kL, self._local_eps_shape())
+                if self.problem.model.has_local
+                else None
+            )
+            if el is not None:
+                val, grads = jax.value_and_grad(objective, argnums=(0, 1, 2))(
+                    th, eg, el, eps_G, eps_L
+                )
+                g_th, g_eg, g_el = grads
+                upd_l, l_state = local_opt.update(tree_scale(g_el, -1.0), l_state, el)
+                el = apply_updates(el, upd_l)
+            else:
+                val, (g_th, g_eg) = jax.value_and_grad(objective, argnums=(0, 1))(
+                    th, eg, el, eps_G, eps_L
+                )
+            descent = tree_scale({"theta": g_th, "eta_G": g_eg}, -1.0)
+            upd_s, s_state = server_opt.update(descent, s_state, {"theta": th, "eta_G": eg})
+            merged = apply_updates({"theta": th, "eta_G": eg}, upd_s)
+            return (merged["theta"], merged["eta_G"], el, (s_state, l_state)), val
+
+        keys = jax.random.split(key, num_steps)
+        (theta, eta_G, eta_L, opt_states), elbos = jax.lax.scan(
+            body, (theta, eta_G, eta_L, opt_states), keys
+        )
+        return theta, eta_G, eta_L, opt_states, elbos
+
+    def sfvi_avg_round(self, msg: Dict[str, Any], num_steps: int, total_obs: int,
+                       server_opt: GradientTransformation) -> Dict[str, Any]:
+        """Algorithm 2 inner loop: m local VI steps, reply (θ^(j), η_G^(j))."""
+        self._avg_opts = (server_opt, self._local_opt)
+        scale = float(total_obs) / float(self.num_obs)
+        self._key, sub = jax.random.split(self._key)
+        s_state = server_opt.init({"theta": msg["theta"], "eta_G": msg["eta_G"]})
+        l_state = self._local_opt_state
+        theta_j, eta_G_j, self.eta_L, (s_state, self._local_opt_state), elbos = (
+            self._jit_local_rounds(
+                msg["theta"], msg["eta_G"], self.eta_L, sub, (s_state, l_state),
+                num_steps=num_steps, likelihood_scale=scale,
+            )
+        )
+        return {"theta": theta_j, "eta_G": eta_G_j, "elbos": elbos}
+
+
+class SFVIServer:
+    """Algorithm 1 driver. Owns (θ, η_G) and the server-side optimizer."""
+
+    def __init__(
+        self,
+        problem: SFVIProblem,
+        silos: List[Silo],
+        theta: PyTree,
+        eta_G: PyTree,
+        optimizer: GradientTransformation,
+        seed: int = 0,
+    ):
+        self.problem = problem
+        self.silos = silos
+        self.theta = theta
+        self.eta_G = eta_G
+        self.optimizer = optimizer
+        self.opt_state = optimizer.init({"theta": theta, "eta_G": eta_G})
+        self.key = jax.random.PRNGKey(seed)
+        self.comm = CommLog()
+        self._jit_update = jax.jit(self._update_impl)
+
+    def _update_impl(self, theta, eta_G, opt_state, eps_G, g_theta_sum, g_eta_sum):
+        # Server's own L̂_0 terms (S4)/(S7) — prior of Z_G and q_G entropy.
+        g_theta0, g_eta0, hatL0 = self.problem.server_grads(theta, eta_G, eps_G)
+        g = {"theta": tree_add(g_theta_sum, g_theta0), "eta_G": tree_add(g_eta_sum, g_eta0)}
+        # Ascent on the ELBO: flip sign via maximize-style application.
+        g = tree_scale(g, -1.0)  # optimizers are descent-convention
+        updates, opt_state = self.optimizer.update(g, opt_state, {"theta": theta, "eta_G": eta_G})
+        merged = apply_updates({"theta": theta, "eta_G": eta_G}, updates)
+        return merged["theta"], merged["eta_G"], opt_state, hatL0
+
+    def run(
+        self,
+        num_iters: int,
+        participation: float = 1.0,
+        callback: Optional[Callable[[int, dict], None]] = None,
+    ) -> Dict[str, list]:
+        """Run Algorithm 1 for ``num_iters`` rounds.
+
+        ``participation`` < 1 activates partial silo participation: each round
+        a random subset of silos contributes (gradients are rescaled by
+        J/|participants| to keep the estimator unbiased).
+        """
+        history = {"elbo": [], "bytes_up": [], "bytes_down": []}
+        J = len(self.silos)
+        for it in range(num_iters):
+            self.key, k_eps, k_part = jax.random.split(self.key, 3)
+            eps_G = jax.random.normal(k_eps, (self.problem.model.global_dim,))
+            msg_down = {"theta": self.theta, "eta_G": self.eta_G, "eps_G": eps_G}
+
+            if participation >= 1.0:
+                active = list(range(J))
+            else:
+                n_active = max(1, int(round(participation * J)))
+                active = list(
+                    np.asarray(
+                        jax.random.choice(k_part, J, shape=(n_active,), replace=False)
+                    )
+                )
+            rescale = float(J) / float(len(active))
+
+            g_theta_sum = g_eta_sum = None
+            elbo = 0.0
+            up = down = 0
+            for j in active:
+                down += tree_bytes(msg_down)
+                reply = self.silos[j].sfvi_step(msg_down)
+                up += tree_bytes({"g_theta": reply["g_theta"], "g_eta": reply["g_eta"]})
+                g_theta_sum = (
+                    reply["g_theta"] if g_theta_sum is None else tree_add(g_theta_sum, reply["g_theta"])
+                )
+                g_eta_sum = (
+                    reply["g_eta"] if g_eta_sum is None else tree_add(g_eta_sum, reply["g_eta"])
+                )
+                elbo += float(reply["hat_Lj"])
+            g_theta_sum = tree_scale(g_theta_sum, rescale)
+            g_eta_sum = tree_scale(g_eta_sum, rescale)
+
+            self.theta, self.eta_G, self.opt_state, hatL0 = self._jit_update(
+                self.theta, self.eta_G, self.opt_state, eps_G, g_theta_sum, g_eta_sum
+            )
+            self.comm.record(up, down)
+            history["elbo"].append(elbo * rescale + float(hatL0))
+            history["bytes_up"].append(up)
+            history["bytes_down"].append(down)
+            if callback:
+                callback(it, {"elbo": history["elbo"][-1]})
+        return history
+
+
+class SFVIAvgServer:
+    """Algorithm 2 driver: m local steps per silo, then θ-average + η_G barycenter."""
+
+    def __init__(
+        self,
+        problem: SFVIProblem,
+        silos: List[Silo],
+        theta: PyTree,
+        eta_G: PyTree,
+        local_optimizer_factory: Callable[[], GradientTransformation],
+        seed: int = 0,
+    ):
+        self.problem = problem
+        self.silos = silos
+        self.theta = theta
+        self.eta_G = eta_G
+        self.local_optimizer_factory = local_optimizer_factory
+        self.key = jax.random.PRNGKey(seed)
+        self.comm = CommLog()
+
+    def _barycenter(self, eta_G_list: List[PyTree]) -> PyTree:
+        fam = self.problem.global_family
+        if isinstance(fam, DiagGaussian):
+            return barycenter_params_diag(fam, eta_G_list)
+        if isinstance(fam, CholeskyGaussian):
+            return barycenter_params_full(fam, eta_G_list)
+        raise TypeError(f"No barycenter rule for family {type(fam).__name__}")
+
+    def run(
+        self,
+        num_rounds: int,
+        local_steps: int,
+        participation: float = 1.0,
+        callback: Optional[Callable[[int, dict], None]] = None,
+    ) -> Dict[str, list]:
+        history = {"elbo": [], "bytes_up": [], "bytes_down": []}
+        J = len(self.silos)
+        total_obs = sum(s.num_obs for s in self.silos)
+        for rnd in range(num_rounds):
+            self.key, k_part = jax.random.split(self.key)
+            if participation >= 1.0:
+                active = list(range(J))
+            else:
+                n_active = max(1, int(round(participation * J)))
+                active = list(
+                    np.asarray(
+                        jax.random.choice(k_part, J, shape=(n_active,), replace=False)
+                    )
+                )
+
+            msg_down = {"theta": self.theta, "eta_G": self.eta_G}
+            thetas, etas, elbo = [], [], 0.0
+            up = down = 0
+            for j in active:
+                down += tree_bytes(msg_down)
+                reply = self.silos[j].sfvi_avg_round(
+                    msg_down, local_steps, total_obs, self.local_optimizer_factory()
+                )
+                up += tree_bytes({"theta": reply["theta"], "eta_G": reply["eta_G"]})
+                thetas.append(reply["theta"])
+                etas.append(reply["eta_G"])
+                elbo += float(reply["elbos"][-1])
+
+            if jax.tree_util.tree_leaves(thetas[0]):
+                self.theta = tree_mean(thetas)  # FedAvg in parameter space for θ
+            self.eta_G = self._barycenter(etas)
+            self.comm.record(up, down)
+            history["elbo"].append(elbo / len(active))
+            history["bytes_up"].append(up)
+            history["bytes_down"].append(down)
+            if callback:
+                callback(rnd, {"elbo": history["elbo"][-1]})
+        return history

@@ -1,0 +1,173 @@
+"""SFVI — Structured Federated Variational Inference (paper Algorithm 1 + supplement S1).
+
+The federated decomposition rests on the block upper-triangular reparametrization
+Jacobian (S1): the STL gradient splits into
+
+    ∇̂_{η_G} L   = (∂f_G/∂η_G)ᵀ ∇_{Z_G} L̂_0  +  Σ_j g_j^η          (S4)
+    g_j^η       = (∂f_G/∂η_G)ᵀ ∇_{Z_G} L̂_j + (∂f_{η'_j}/∂η_G)ᵀ ∇_{Z_L} L̂_j   (S5)
+    ∇̂_{η_{L_j}} L = (∂f_{η'_j}/∂η_{L_j})ᵀ ∇_{Z_L} L̂_j               (S6)
+    ∇_θ L̂       = ∇_θ log p_θ(Z_G) + Σ_j g_j^θ                      (S7)
+
+with L̂_0 = log[p_θ(Z_G)/q_{η_G}(Z_G)] and L̂_j = log[p_θ(y_j, Z_{L_j}|Z_G)/q(Z_{L_j}|Z_G)].
+
+Everything a silo ships to the server is (g_j^θ, g_j^η) — sums of
+global-shaped pytrees. Nothing about η_{L_j}, Z_{L_j} or y_j leaves the silo.
+
+All four gradients fall out of ``jax.grad`` applied to the right closures with
+stop-gradient on the variational parameters *inside the log q terms only*
+(the STL trick); this module is therefore a direct executable transcription
+of the supplement's algebra.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.families import ConditionalGaussian
+from repro.core.model import StructuredModel
+
+PyTree = Any
+
+
+def _stop(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jax.lax.stop_gradient, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class SFVIProblem:
+    """Bundles the generative model with the variational families."""
+
+    model: StructuredModel
+    global_family: Any  # DiagGaussian | CholeskyGaussian over Z_G
+    local_family: Optional[Any] = None  # ConditionalGaussian over Z_{L_j} (or batched)
+
+    # ---- objective pieces -------------------------------------------------
+
+    def hat_L0(self, theta: PyTree, eta_G: PyTree, eps_G: jnp.ndarray) -> jnp.ndarray:
+        """L̂_0 = log p_θ(Z_G) − log q_{η_G}(Z_G), STL-stopped inside log q."""
+        z_G = self.global_family.sample(eta_G, eps_G)
+        logq = self.global_family.log_prob(_stop(eta_G), z_G)
+        return self.model.log_prior_global(theta, z_G) - logq
+
+    def hat_Lj(
+        self,
+        theta: PyTree,
+        eta_G: PyTree,
+        eta_Lj: Optional[PyTree],
+        eps_G: jnp.ndarray,
+        eps_Lj: Optional[jnp.ndarray],
+        data_j: Any,
+        likelihood_scale: float = 1.0,
+    ) -> jnp.ndarray:
+        """L̂_j = log p_θ(y_j, Z_{L_j}|Z_G) − log q_{η_{L_j}}(Z_{L_j}|Z_G).
+
+        ``likelihood_scale`` implements SFVI-Avg's N/N_j rescaling (§3.2, point 2);
+        SFVI uses 1.0.
+        """
+        z_G = self.global_family.sample(eta_G, eps_G)
+        if self.model.has_local:
+            z_L = self._sample_local(eta_Lj, z_G, eta_G, eps_Lj)
+            logq = self._log_prob_local(_stop(eta_Lj), z_L, z_G, _stop(eta_G))
+        else:
+            z_L, logq = None, 0.0
+        loglik = self.model.log_local(theta, z_G, z_L, data_j)
+        return likelihood_scale * (loglik - logq)
+
+    def _sample_local(self, eta_Lj, z_G, eta_G, eps_Lj):
+        fam = self.local_family
+        if isinstance(fam, ConditionalGaussian):
+            return fam.sample(eta_Lj, z_G, eta_G["mu"], eps_Lj)
+        # Unconditional local family (no C coupling): ignore z_G.
+        return fam.sample(eta_Lj, eps_Lj)
+
+    def _log_prob_local(self, eta_Lj, z_L, z_G, eta_G):
+        fam = self.local_family
+        if isinstance(fam, ConditionalGaussian):
+            return fam.log_prob(eta_Lj, z_L, z_G, eta_G["mu"])
+        return fam.log_prob(eta_Lj, z_L)
+
+    # ---- per-silo gradient computation (the silo's inner loop body) -------
+
+    def silo_grads(
+        self,
+        theta: PyTree,
+        eta_G: PyTree,
+        eta_Lj: Optional[PyTree],
+        eps_G: jnp.ndarray,
+        eps_Lj: Optional[jnp.ndarray],
+        data_j: Any,
+        likelihood_scale: float = 1.0,
+    ) -> Tuple[PyTree, PyTree, Optional[PyTree], jnp.ndarray]:
+        """Returns (g_j^θ, g_j^η, ∇̂_{η_{L_j}}L, L̂_j).
+
+        A single jax.grad over (θ, η_G, η_{L_j}) of L̂_j realizes (S5)–(S8):
+        the autodiff path through the reparametrized samples *is* the
+        vector-Jacobian product structure of the supplement.
+        """
+        if self.model.has_local:
+            def obj(th, eg, el):
+                return self.hat_Lj(th, eg, el, eps_G, eps_Lj, data_j, likelihood_scale)
+
+            val, grads = jax.value_and_grad(obj, argnums=(0, 1, 2))(theta, eta_G, eta_Lj)
+            g_theta, g_eta, g_local = grads
+        else:
+            def obj(th, eg):
+                return self.hat_Lj(th, eg, None, eps_G, None, data_j, likelihood_scale)
+
+            val, grads = jax.value_and_grad(obj, argnums=(0, 1))(theta, eta_G)
+            g_theta, g_eta = grads
+            g_local = None
+        return g_theta, g_eta, g_local, val
+
+    def server_grads(
+        self, theta: PyTree, eta_G: PyTree, eps_G: jnp.ndarray
+    ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+        """The server's own contribution: gradients of L̂_0 (prior & entropy terms)."""
+        val, (g_theta, g_eta) = jax.value_and_grad(self.hat_L0, argnums=(0, 1))(
+            theta, eta_G, eps_G
+        )
+        return g_theta, g_eta, val
+
+    # ---- single-machine reference (for the partition-invariance Remark) ---
+
+    def centralized_objective(
+        self,
+        theta: PyTree,
+        eta_G: PyTree,
+        eta_L_all: Optional[list],
+        eps_G: jnp.ndarray,
+        eps_L_all: Optional[list],
+        data_all: list,
+    ) -> jnp.ndarray:
+        """L̂ = L̂_0 + Σ_j L̂_j computed in one graph — the single-silo answer.
+
+        The paper's Remark (§3): SFVI is invariant to data partitioning; this
+        function is the oracle the property test compares against.
+        """
+        total = self.hat_L0(theta, eta_G, eps_G)
+        for j, data_j in enumerate(data_all):
+            eta_Lj = eta_L_all[j] if eta_L_all is not None else None
+            eps_Lj = eps_L_all[j] if eps_L_all is not None else None
+            total = total + self.hat_Lj(theta, eta_G, eta_Lj, eps_G, eps_Lj, data_j)
+        return total
+
+    # ---- convenience ------------------------------------------------------
+
+    def sample_posterior(self, eta_G, eta_L, key, num_samples: int = 1):
+        """Draw (Z_G, Z_L) from the variational posterior (for prediction)."""
+        kG, kL = jax.random.split(key)
+        eps_G = jax.random.normal(kG, (num_samples, self.model.global_dim))
+        z_G = jax.vmap(lambda e: self.global_family.sample(eta_G, e))(eps_G)
+        if not self.model.has_local or eta_L is None:
+            return z_G, None
+        fam = self.local_family
+        if hasattr(fam, "batch"):
+            shape = (fam.batch, fam.dim)
+        else:
+            shape = (fam.dim,)
+        eps_L = jax.random.normal(kL, (num_samples,) + shape)
+        z_L = jax.vmap(lambda zg, e: self._sample_local(eta_L, zg, eta_G, e))(z_G, eps_L)
+        return z_G, z_L

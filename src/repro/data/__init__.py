@@ -1,0 +1,31 @@
+"""Data pipeline: synthetic dataset generators + federated silo partitioners.
+
+The container is offline, so the paper's datasets (MNIST, 20Newsgroups,
+six-cities) are simulated by generators that preserve every property the
+algorithms interact with: dimensionality, class structure, label skew across
+silos (the paper's 90%-one-digit protocol), document length distributions,
+and the longitudinal covariate structure of the GLMM.
+"""
+from repro.data.synthetic import (
+    SyntheticClassification,
+    make_synthetic_mnist,
+    make_lda_corpus,
+    make_six_cities,
+    make_token_stream,
+)
+from repro.data.partition import (
+    heterogeneous_label_partition,
+    iid_partition,
+    sizes_partition,
+)
+
+__all__ = [
+    "SyntheticClassification",
+    "make_synthetic_mnist",
+    "make_lda_corpus",
+    "make_six_cities",
+    "make_token_stream",
+    "heterogeneous_label_partition",
+    "iid_partition",
+    "sizes_partition",
+]

@@ -1,0 +1,3 @@
+from repro.inference.hmc import hmc_sample
+
+__all__ = ["hmc_sample"]

@@ -1,0 +1,103 @@
+"""Self-contained Hamiltonian Monte Carlo (the paper's MCMC oracle role).
+
+The paper compares SFVI's GLMM posterior against NUTS (NumPyro); NumPyro is
+unavailable offline, so we provide HMC with dual-averaging step-size
+adaptation and diagonal mass-matrix adaptation — ample for the 542-dim
+GLMM posterior whose marginals we compare.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _leapfrog(grad_fn, position, momentum, step_size, num_steps, inv_mass):
+    def body(_, carry):
+        q, p = carry
+        p = p + 0.5 * step_size * grad_fn(q)
+        q = q + step_size * inv_mass * p
+        p = p + 0.5 * step_size * grad_fn(q)
+        return (q, p)
+
+    return jax.lax.fori_loop(0, num_steps, body, (position, momentum))
+
+
+@partial(jax.jit, static_argnames=("log_prob_fn", "num_samples", "num_warmup", "num_leapfrog"))
+def hmc_sample(
+    log_prob_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    init_position: jnp.ndarray,
+    key,
+    num_samples: int = 1000,
+    num_warmup: int = 1000,
+    num_leapfrog: int = 32,
+    target_accept: float = 0.8,
+):
+    """Returns (samples (num_samples, dim), accept_rate)."""
+    dim = init_position.shape[0]
+    grad_fn = jax.grad(log_prob_fn)
+
+    # Dual averaging (Hoffman & Gelman 2014, §3.2) during warmup.
+    mu = jnp.log(10.0 * 0.1)
+    gamma, t0, kappa = 0.05, 10.0, 0.75
+
+    def kinetic(p, inv_mass):
+        return 0.5 * jnp.sum(p * p * inv_mass)
+
+    def step(carry, inp):
+        q, log_eps, log_eps_bar, h_bar, warm_i, inv_mass, welford = carry
+        key_i, is_warmup = inp
+        k1, k2 = jax.random.split(key_i)
+        eps = jnp.exp(log_eps)
+        p0 = jax.random.normal(k1, (dim,)) / jnp.sqrt(inv_mass)
+        q_new, p_new = _leapfrog(grad_fn, q, p0, eps, num_leapfrog, inv_mass)
+        h0 = -log_prob_fn(q) + kinetic(p0, inv_mass)
+        h1 = -log_prob_fn(q_new) + kinetic(p_new, inv_mass)
+        log_alpha = jnp.clip(h0 - h1, -1e3, 0.0)
+        alpha = jnp.exp(log_alpha)
+        accept = jax.random.uniform(k2) < alpha
+        q = jnp.where(accept, q_new, q)
+
+        # Dual averaging updates (warmup only).
+        warm_i = warm_i + is_warmup
+        eta = 1.0 / (warm_i + t0)
+        h_bar = jnp.where(
+            is_warmup > 0, (1.0 - eta) * h_bar + eta * (target_accept - alpha), h_bar
+        )
+        log_eps_w = mu - jnp.sqrt(warm_i) / gamma * h_bar
+        pow_ = warm_i ** (-kappa)
+        log_eps_bar_w = pow_ * log_eps_w + (1.0 - pow_) * log_eps_bar
+        log_eps = jnp.where(is_warmup > 0, log_eps_w, log_eps_bar)
+        log_eps_bar = jnp.where(is_warmup > 0, log_eps_bar_w, log_eps_bar)
+
+        # Welford variance accumulation for the mass matrix (warmup only).
+        count, mean, m2 = welford
+        count_n = count + is_warmup
+        delta = q - mean
+        mean_n = mean + jnp.where(is_warmup > 0, delta / jnp.maximum(count_n, 1.0), 0.0)
+        m2_n = m2 + jnp.where(is_warmup > 0, delta * (q - mean_n), 0.0)
+        welford = (count_n, mean_n, m2_n)
+        # Refresh the mass matrix halfway through warmup.
+        var = m2_n / jnp.maximum(count_n - 1.0, 1.0)
+        refresh = (warm_i == num_warmup // 2).astype(q.dtype)
+        inv_mass = refresh * jnp.clip(var, 1e-4, 1e4) + (1.0 - refresh) * inv_mass
+
+        return (q, log_eps, log_eps_bar, h_bar, warm_i, inv_mass, welford), (q, alpha)
+
+    total = num_warmup + num_samples
+    keys = jax.random.split(key, total)
+    is_warm = (jnp.arange(total) < num_warmup).astype(jnp.float32)
+    welford0 = (jnp.zeros(()), jnp.zeros(dim), jnp.zeros(dim))
+    carry0 = (
+        init_position,
+        jnp.log(0.1),
+        jnp.log(0.1),
+        jnp.zeros(()),
+        jnp.zeros(()),
+        jnp.ones(dim),
+        welford0,
+    )
+    _, (qs, alphas) = jax.lax.scan(step, carry0, (keys, is_warm))
+    return qs[num_warmup:], jnp.mean(alphas[num_warmup:])

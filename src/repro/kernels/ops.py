@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the
+kernel body executes in Python per grid cell — bit-accurate to the TPU
+lowering's semantics); on a TPU runtime ``interpret=False`` compiles to
+Mosaic. ``INTERPRET`` flips the default globally.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import flash_attention_bhsd
+from repro.kernels.gla import gla_bhsd
+from repro.kernels.reparam import reparam_stl as _reparam_stl
+from repro.kernels.rmsnorm import rmsnorm_rows
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "block_q",
+                                   "block_kv", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Layout adapter: (B, S, H, hd) API -> (B, H, S, hd) kernel, with
+    padding to block multiples (masked inside the kernel)."""
+    interpret = INTERPRET if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, _round_up(Sq, 8))
+    block_kv = min(block_kv, _round_up(Skv, 8))
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    pq = (-Sq) % block_q
+    pkv = (-Skv) % block_kv
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+        true_sq=Sq, true_skv=Skv,
+    )
+    return jnp.moveaxis(out[:, :, :Sq], 2, 1)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+            block_rows: int = 256, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """RMSNorm over the last axis for arbitrary leading shape."""
+    interpret = INTERPRET if interpret is None else interpret
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    R = 1
+    for s in lead:
+        R *= s
+    xf = x.reshape(R, D)
+    br = block_rows
+    while R % br:
+        br //= 2
+    br = max(br, 1)
+    out = rmsnorm_rows(xf, weight, eps=eps, block_rows=br, interpret=interpret)
+    return out.reshape(*lead, D)
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def reparam_stl(mu, log_sigma, eps, block: int = 4096,
+                interpret: Optional[bool] = None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _reparam_stl(mu, log_sigma, eps, block=block, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla(q, k, v, log_a, chunk: int = 128, interpret: Optional[bool] = None):
+    """Gated linear attention (Mamba2-SSD/mLSTM recurrence).
+
+    q/k: (B, S, H, dk); v: (B, S, H, dv); log_a: (B, S, H). Pads S to a
+    chunk multiple with identity steps (log_a = 0, k/v = 0 -> the padded
+    steps neither read nor write the state)."""
+    interpret = INTERPRET if interpret is None else interpret
+    B, S, H, dk = q.shape
+    chunk = min(chunk, _round_up(S, 8))
+    pad = (-S) % chunk
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    at = jnp.moveaxis(log_a, 1, 2)
+    if pad:
+        zpad = ((0, 0), (0, 0), (0, pad), (0, 0))
+        qt = jnp.pad(qt, zpad)
+        kt = jnp.pad(kt, zpad)
+        vt = jnp.pad(vt, zpad)
+        at = jnp.pad(at, ((0, 0), (0, 0), (0, pad)))
+    out = gla_bhsd(qt, kt, vt, at, chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(out[:, :, :S], 2, 1)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition, written for clarity not
+speed; kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, H, hd)
+    v: jnp.ndarray,  # (B, Skv, H, hd)
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Softmax attention with optional causal / sliding-window masking."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    q_pos = jnp.arange(Sq) + q_offset
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if sliding_window is not None:
+        mask &= kv_pos[None, :] > q_pos[:, None] - sliding_window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * rms) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def reparam_stl_ref(mu: jnp.ndarray, log_sigma: jnp.ndarray, eps: jnp.ndarray):
+    """Fused Gaussian reparametrization + STL log q evaluation.
+
+    Returns (z, logq_contrib) where z = mu + exp(log_sigma) * eps and
+    logq_contrib are the per-element terms of log q_eta(z)|stop-grad(eta):
+        -0.5 * eps^2 - log_sigma - 0.5 log(2 pi)
+    (summing them gives the scalar STL log q; keeping them elementwise lets
+    the caller fuse the reduction with other work).
+    """
+    z = mu + jnp.exp(log_sigma) * eps
+    lq = -0.5 * eps.astype(jnp.float32) ** 2 - log_sigma.astype(jnp.float32) \
+        - 0.5 * math.log(2.0 * math.pi)
+    return z, lq
+
+
+def gla_chunk_ref(q, k, v, log_a):
+    """One gated-linear-attention chunk, exact recurrence (no chunking).
+
+    q/k: (S, H, dk); v: (S, H, dv); log_a: (S, H). Returns (y, final_state)
+    with y: (S, H, dv), state: (H, dk, dv). Used as oracle for the Pallas
+    GLA kernel (single-chunk grid cell) AND for ssm.chunked_gla.
+    """
+    S, H, dk = q.shape
+    dv = v.shape[-1]
+
+    def step(state, inp):
+        qt, kt, vt, at = inp
+        state = state * jnp.exp(at.astype(jnp.float32))[:, None, None] + jnp.einsum(
+            "hd,hv->hdv", kt.astype(jnp.float32), vt.astype(jnp.float32)
+        )
+        y = jnp.einsum("hd,hdv->hv", qt.astype(jnp.float32), state)
+        return state, y
+
+    init = jnp.zeros((H, dk, dv), jnp.float32)
+    state, ys = jax.lax.scan(step, init, (q, k, v, log_a))
+    return ys.astype(q.dtype), state

@@ -1,0 +1,44 @@
+"""RMSNorm as a Pallas kernel: one VMEM pass per row block.
+
+The reduction (mean of squares) and the scale are fused so each activation
+row is read from HBM exactly once and written once — RMSNorm is purely
+memory-bound, so the kernel's job is to hit streaming bandwidth with
+(8k-aligned) row tiles and do the arithmetic in f32 on the fly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (br, D)
+    rms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = (x * rms * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(
+    x: jnp.ndarray,  # (R, D) — caller flattens leading dims
+    weight: jnp.ndarray,  # (D,)
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    R, D = x.shape
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(x, weight)

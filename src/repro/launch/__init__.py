@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharding rules, SPMD train/serve steps,
+multi-pod dry-run, and roofline extraction."""

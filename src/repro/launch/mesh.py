@@ -1,0 +1,45 @@
+"""Production mesh definition (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16).
+
+The paper's federation maps onto the mesh as: silos ride the data-parallel
+axes (pod x data); the server reduction g = sum_j g_j is a psum over those
+axes; the model axis is ordinary tensor/expert parallelism inside each
+silo's shard (DESIGN.md §3/§5).
+
+``make_production_mesh`` is a function — importing this module never
+touches jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that carry silos / the batch (the 'federation' axes)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_world(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_world(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,85 @@
+"""Batched serving driver: posterior-mean model, prefill + decode loop.
+
+Serving uses the SFVI posterior means (θ, E[Z_G], E[Z_Lj]) — every silo
+keeps its personal head adapter, so one batch can serve requests from
+different silos simultaneously (requests are grouped by silo along the
+batch axis, exactly how the decode shapes shard on the mesh).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --batch 8 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch import steps as S
+from repro.models.backbone import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--silos", type=int, default=4)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    state, _ = S.init_train_state(key, cfg, args.silos)
+    max_len = args.prompt_len + args.gen + cfg.num_vision_tokens
+
+    prefill = jax.jit(S.make_serve_prefill(cfg, args.silos, max_len=max_len))
+    decode = jax.jit(S.make_serve_decode(cfg, args.silos))
+
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    if cfg.num_vision_tokens:
+        batch["vision"] = jax.random.normal(
+            key, (args.batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    logits, cache = prefill(state.theta, state.eta_G, state.eta_L, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}: "
+          f"prefill {t_prefill*1e3:.1f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+
+    def sample(logits, k):
+        if args.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1)
+        return jax.random.categorical(k, logits[:, -1] / args.temperature)
+
+    tok = sample(logits, key)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(state.theta, state.eta_G, state.eta_L,
+                               tok[:, None], cache)
+        tok = sample(logits, jax.random.fold_in(key, i))
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    print(f"decode {args.gen-1} steps: {t_dec*1e3:.1f} ms "
+          f"({args.batch*(args.gen-1)/max(t_dec,1e-9):.0f} tok/s)")
+    gen = jnp.stack(out, axis=1)
+    print("generated token ids (first request):", gen[0][:16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) combination.
+
+Nothing here allocates device memory: parameters and optimizer state come
+from ``jax.eval_shape`` over the real initializers, inputs are structs,
+and shardings are attached directly to the structs so ``jit(...).lower``
+sees the production layout.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import steps as S
+from repro.launch.mesh import data_axes, data_world
+from repro.launch.shardings import batch_spec, opt_state_shardings, param_shardings
+from repro.models.backbone import transformer as T
+from repro.models.backbone.config import ArchConfig, InputShape
+
+PyTree = Any
+
+
+def num_silos_for(shape: InputShape, mesh) -> int:
+    """Silos ride the data axes; a batch smaller than the data world means
+    fewer active silos (long_500k: one)."""
+    return math.gcd(shape.global_batch, data_world(mesh))
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(mesh, struct_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree,
+        sharding_tree,
+    )
+
+
+def _batch_structs(cfg: ArchConfig, shape: InputShape, mesh, with_labels: bool):
+    dp = data_axes(mesh)
+    B, Sq = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {
+        "tokens": _sds((B, Sq), jnp.int32, mesh, batch_spec(mesh, (B, Sq), dp))
+    }
+    if with_labels:
+        out["labels"] = _sds((B, Sq), jnp.int32, mesh, batch_spec(mesh, (B, Sq), dp))
+    if cfg.is_encoder_decoder:
+        fs = (B, cfg.encoder_seq_len, cfg.d_model)
+        out["frames"] = _sds(fs, jnp.dtype(cfg.dtype), mesh, batch_spec(mesh, fs, dp))
+    if cfg.num_vision_tokens:
+        vs = (B, cfg.num_vision_tokens, cfg.d_model)
+        out["vision"] = _sds(vs, jnp.dtype(cfg.dtype), mesh, batch_spec(mesh, vs, dp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding rules (decode shapes)
+# ---------------------------------------------------------------------------
+
+def _cache_spec(mesh, name: str, leaf, dp) -> P:
+    m = mesh.shape.get("model", 1)
+    dpsz = data_world(mesh)
+    nd = leaf.ndim
+    spec = [None] * nd
+
+    def div(i):
+        return leaf.shape[i] % m == 0 and leaf.shape[i] >= m
+
+    # Leading stacked-unit axis present for unit caches: detect via name tag.
+    if name in ("pos", "t"):
+        return P()
+    # batch axis: first axis unless leaf is stacked (then second).
+    b_ax = 1 if name.startswith("stacked:") else 0
+    if nd > b_ax and leaf.shape[b_ax] % dpsz == 0 and leaf.shape[b_ax] >= dpsz:
+        spec[b_ax] = dp
+    base = name.split(":")[-1]
+    if base in ("k", "v") and nd >= b_ax + 4:
+        kv_ax, hd_ax = nd - 2, nd - 1
+        if div(kv_ax):
+            spec[kv_ax] = "model"
+        elif div(hd_ax):
+            spec[hd_ax] = "model"
+    elif base == "ssm" and nd >= b_ax + 4:
+        if div(b_ax + 1):
+            spec[b_ax + 1] = "model"  # heads
+    elif base == "conv" and nd >= b_ax + 3:
+        if div(nd - 1):
+            spec[nd - 1] = "model"
+    elif base in ("state", "c", "n", "h", "m") and nd >= b_ax + 3:
+        if div(nd - 2) and base == "state":
+            spec[nd - 2] = "model"
+        elif div(nd - 1) and base != "state":
+            spec[nd - 1] = "model"
+    elif base == "memory" and nd >= 2:
+        pass  # batch-only
+    return P(*spec)
+
+
+def cache_shardings(mesh, cache_struct: PyTree) -> PyTree:
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        stacked = "units" in names
+        name = (("stacked:" if stacked else "") + (names[-1] if names else ""))
+        return NamedSharding(mesh, _cache_spec(mesh, name, leaf, dp))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# Per-(arch, shape) lowering spec
+# ---------------------------------------------------------------------------
+
+def build_lowering(cfg: ArchConfig, shape: InputShape, mesh,
+                   lr: float = 3e-4) -> Tuple[Any, tuple]:
+    """Returns (step_fn, arg_structs) ready for jit(...).lower(*args)."""
+    if shape.kind == "decode" and shape.name == "long_500k":
+        cfg = cfg.long_context_variant()
+    silos = num_silos_for(shape, mesh)
+
+    key = jax.random.PRNGKey(0)
+    uneven = False  # vocab lever realized via padding (cfg.padded_vocab)
+    theta_struct = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+    theta_sh = param_shardings(mesh, theta_struct, uneven_vocab=uneven)
+    theta = _with_shardings(mesh, theta_struct, theta_sh)
+
+    eG_struct = jax.eval_shape(lambda k: S.init_eta_G(k, cfg), key)
+    eG = _with_shardings(
+        mesh, eG_struct, jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), eG_struct)
+    )
+    dp = data_axes(mesh)
+    eL_struct = jax.eval_shape(lambda k: S.init_eta_L(k, cfg, silos), key)
+    eL = _with_shardings(
+        mesh, eL_struct, jax.tree_util.tree_map(
+            lambda leaf: NamedSharding(
+                mesh, P(dp, *([None] * (leaf.ndim - 1)))
+                if leaf.shape[0] % data_world(mesh) == 0 and leaf.shape[0] >= data_world(mesh)
+                else P()),
+            eL_struct),
+    )
+
+    if shape.kind == "train":
+        from repro.optim.adam import adam
+
+        opt = adam(lr)
+        batch = _batch_structs(cfg, shape, mesh, with_labels=True)
+        opt_t_struct = jax.eval_shape(opt.init, theta_struct)
+        if cfg.perf.zero_opt:
+            opt_t_sh = opt_state_shardings(mesh, opt_t_struct, dp,
+                                           uneven_vocab=uneven)
+        else:
+            opt_t_sh = param_shardings(mesh, opt_t_struct, uneven_vocab=uneven)
+        opt_t = _with_shardings(mesh, opt_t_struct, opt_t_sh)
+        opt_g = _with_shardings(
+            mesh, jax.eval_shape(opt.init, eG_struct),
+            jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P()), jax.eval_shape(opt.init, eG_struct)),
+        )
+        eL_opt_struct = jax.eval_shape(opt.init, eL_struct)
+        opt_l = _with_shardings(
+            mesh, eL_opt_struct,
+            jax.tree_util.tree_map(
+                lambda leaf: NamedSharding(
+                    mesh, P(dp, *([None] * (leaf.ndim - 1)))
+                    if leaf.ndim >= 1 and leaf.shape[:1] == (silos,) and silos % data_world(mesh) == 0
+                    else P()),
+                eL_opt_struct),
+        )
+        step_sds = _sds((), jnp.int32, mesh, P())
+        state = S.TrainState(theta, eG, eL, opt_t, opt_g, opt_l, step_sds)
+        seed = _sds((), jnp.int32, mesh, P())
+        fn = S.make_train_step(cfg, silos, lr=lr)
+        return fn, (state, batch, seed)
+
+    if shape.kind == "prefill":
+        batch = _batch_structs(cfg, shape, mesh, with_labels=False)
+        fn = S.make_serve_prefill(cfg, silos, max_len=shape.seq_len)
+        return fn, (theta, eG, eL, batch)
+
+    # decode
+    B = shape.global_batch
+    cache_struct = jax.eval_shape(
+        lambda th: T.init_cache(th, cfg, B, shape.seq_len), theta_struct
+    )
+    cache = _with_shardings(mesh, cache_struct, cache_shardings(mesh, cache_struct))
+    tokens = _sds((B, 1), jnp.int32, mesh, batch_spec(mesh, (B, 1), dp))
+    fn = S.make_serve_decode(cfg, silos)
+    return fn, (theta, eG, eL, tokens, cache)
+
+
+def build_avg_lowering(cfg: ArchConfig, shape: InputShape, mesh,
+                       include_barycenter: bool, lr: float = 3e-4):
+    """Lowering spec for the SFVI-Avg mesh step (per-silo eta_G carried on
+    the data axes; barycenter statically in/excluded for the communication
+    measurement)."""
+    assert shape.kind == "train"
+    from repro.optim.adam import adam
+
+    silos = num_silos_for(shape, mesh)
+    key = jax.random.PRNGKey(0)
+    dp = data_axes(mesh)
+    theta_struct = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+    theta = _with_shardings(mesh, theta_struct, param_shardings(mesh, theta_struct))
+
+    def silo_sharded(tree):
+        return _with_shardings(
+            mesh, tree, jax.tree_util.tree_map(
+                lambda leaf: NamedSharding(
+                    mesh, P(dp, *([None] * (leaf.ndim - 1)))
+                    if leaf.ndim >= 1
+                    and leaf.shape[0] % data_world(mesh) == 0
+                    and leaf.shape[0] >= data_world(mesh) else P()),
+                tree))
+
+    eG_struct = jax.eval_shape(lambda k: S.init_eta_G_silo(k, cfg, silos), key)
+    eG = silo_sharded(eG_struct)
+    eL_struct = jax.eval_shape(lambda k: S.init_eta_L(k, cfg, silos), key)
+    eL = silo_sharded(eL_struct)
+    opt = adam(lr)
+    opt_t_struct = jax.eval_shape(opt.init, theta_struct)
+    opt_t = _with_shardings(mesh, opt_t_struct, param_shardings(mesh, opt_t_struct))
+    opt_g = silo_sharded(jax.eval_shape(opt.init, eG_struct))
+    opt_l = silo_sharded(jax.eval_shape(opt.init, eL_struct))
+    batch = _batch_structs(cfg, shape, mesh, with_labels=True)
+    state = S.TrainState(theta, eG, eL, opt_t, opt_g, opt_l,
+                         _sds((), jnp.int32, mesh, P()))
+    seed = _sds((), jnp.int32, mesh, P())
+    fn = S.make_train_step_avg(cfg, silos, avg_every=10, lr=lr,
+                               include_barycenter=include_barycenter)
+    return fn, (state, batch, seed)

@@ -1,0 +1,117 @@
+"""End-to-end SFVI training driver for the assigned LLM architectures.
+
+On the production mesh this is the SPMD path (silos = data-axis slices,
+server = psum; DESIGN.md §5.1). On CPU it runs the same jitted step on one
+device with the reduced config — the math is identical (SFVI's partition
+invariance), only the mesh differs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+        --full --steps 200          # full config (needs the real mesh)
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --algo avg \
+        --avg-every 10              # SFVI-Avg schedule
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import make_token_stream
+from repro.checkpoint.io import CheckpointManager
+from repro.launch import steps as S
+from repro.models.backbone import transformer as T
+
+
+def make_batches(key, cfg, batch: int, seq: int, steps: int):
+    """Synthetic token stream (Zipf unigram; offline container has no real
+    corpora — DESIGN.md §7) pre-chunked into (steps, batch, seq)."""
+    toks = make_token_stream(key, steps * batch * (seq + 1), cfg.vocab_size)
+    toks = np.asarray(toks[: steps * batch * (seq + 1)]).reshape(
+        steps, batch, seq + 1
+    )
+    return toks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--silos", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--algo", choices=["sfvi", "avg"], default="sfvi")
+    ap.add_argument("--avg-every", type=int, default=10)
+    ap.add_argument("--full", action="store_true",
+                    help="use the FULL config (production mesh required)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    assert args.batch % args.silos == 0
+    key = jax.random.PRNGKey(0)
+
+    state, _ = S.init_train_state(key, cfg, args.silos, lr=args.lr)
+    if args.algo == "avg":
+        state = S.TrainState(
+            theta=state.theta,
+            eta_G=S.init_eta_G_silo(key, cfg, args.silos),
+            eta_L=state.eta_L,
+            opt_theta=state.opt_theta,
+            opt_eta_G=None, opt_eta_L=state.opt_eta_L,
+            step=state.step,
+        )
+        from repro.optim.adam import adam
+        opt = adam(args.lr)
+        state = S.TrainState(state.theta, state.eta_G, state.eta_L,
+                             state.opt_theta, opt.init(state.eta_G),
+                             state.opt_eta_L, state.step)
+        step_fn = S.make_train_step_avg(cfg, args.silos, args.avg_every,
+                                        lr=args.lr, remat=False)
+    else:
+        step_fn = S.make_train_step(cfg, args.silos, lr=args.lr, remat=False)
+    step_fn = jax.jit(step_fn)
+
+    toks = make_batches(jax.random.PRNGKey(1), cfg, args.batch, args.seq,
+                        args.steps)
+    n_params = T.param_count(state.theta)
+    print(f"arch={cfg.name} params={n_params:,} silos={args.silos} "
+          f"algo={args.algo}")
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {
+            "tokens": jnp.asarray(toks[i, :, :-1]),
+            "labels": jnp.asarray(toks[i, :, 1:]),
+        }
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        if cfg.num_vision_tokens:
+            batch["vision"] = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (args.batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+        state, metrics = step_fn(state, batch, jnp.int32(i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"step {i:4d} loss={m['loss']:.4f} "
+                  + " ".join(f"{k}={v:.4f}" for k, v in m.items() if k != "loss")
+                  + f" ({time.time()-t0:.1f}s)")
+        if ckpt and (i + 1) % 50 == 0:
+            ckpt.save(i + 1, {"theta": state.theta, "eta_G": state.eta_G})
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+    return state
+
+
+if __name__ == "__main__":
+    main()

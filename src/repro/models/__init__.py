@@ -1,0 +1,6 @@
+"""Model zoo.
+
+``repro.models.paper``   — the paper's four experiment models (§4, supplement S3).
+``repro.models.backbone``— the transformer/MoE/SSM stack used by the ten
+                            assigned LLM-scale architectures.
+"""

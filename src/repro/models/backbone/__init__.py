@@ -1,0 +1,4 @@
+"""Transformer/MoE/SSM backbone stack for the assigned architectures."""
+from repro.models.backbone.config import ArchConfig, BayesConfig
+
+__all__ = ["ArchConfig", "BayesConfig"]

@@ -1,0 +1,145 @@
+"""Primitive layers (pure functions over param dicts).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* functions build them.
+  * activations flow in ``cfg.dtype`` (bf16 on the production mesh);
+    norms/softmax accumulate in f32.
+  * weight layout favours (in, out) so einsums read left-to-right.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (scale * jax.random.normal(key, (in_dim, out_dim))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> jnp.ndarray:
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * rms) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_grid(num_vision_tokens: int) -> tuple:
+    """Default square-ish patch grid for the stub vision frontend."""
+    side = max(1, int(math.sqrt(max(num_vision_tokens, 1))))
+    return (side, max(1, num_vision_tokens // side))
+
+
+def mrope_text_start(num_vision_tokens: int) -> int:
+    """First text position after the vision block (M-RoPE convention)."""
+    gh, gw = mrope_grid(num_vision_tokens)
+    return int(max(gh, gw)) if num_vision_tokens else 0
+
+
+def mrope_positions(batch: int, seq_len: int, num_vision_tokens: int,
+                    grid_hw: Optional[tuple] = None) -> jnp.ndarray:
+    """Qwen2-VL multimodal rotary positions: 3 channels (temporal, h, w).
+
+    Vision tokens get (t=0, h=row, w=col) over the patch grid; text tokens get
+    (t=h=w = running index). Returns (3, batch, seq_len).
+    """
+    if grid_hw is None:
+        grid_hw = mrope_grid(num_vision_tokens)
+    gh, gw = grid_hw
+    rows = jnp.arange(num_vision_tokens) // gw
+    cols = jnp.arange(num_vision_tokens) % gw
+    t_vis = jnp.zeros(num_vision_tokens, jnp.int32)
+    n_text = seq_len - num_vision_tokens
+    # Text positions continue after the max vision position.
+    start = int(max(gh, gw))
+    text_pos = start + jnp.arange(n_text, dtype=jnp.int32)
+    pos_t = jnp.concatenate([t_vis, text_pos])
+    pos_h = jnp.concatenate([rows.astype(jnp.int32), text_pos])
+    pos_w = jnp.concatenate([cols.astype(jnp.int32), text_pos])
+    pos = jnp.stack([pos_t, pos_h, pos_w])  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq_len))
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """M-RoPE: head_dim is split into 3 sections (t, h, w), each rotated by
+    its own position channel. x: (B, S, H, hd); positions3: (3, B, S)."""
+    hd = x.shape[-1]
+    # Section sizes in *pairs* (must be even in dims); Qwen2-VL uses 16/24/24
+    # of 64 pairs -> we generalize proportionally 1:1.5:1.5 ≈ (t,h,w).
+    pairs = hd // 2
+    pt = pairs // 4
+    ph = (pairs - pt) // 2
+    pw = pairs - pt - ph
+    sections = [2 * pt, 2 * ph, 2 * pw]
+    outs = []
+    start = 0
+    for i, width in enumerate(sections):
+        if width == 0:
+            continue
+        outs.append(apply_rope(x[..., start : start + width], positions3[i], theta))
+        start += width
+    return jnp.concatenate(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return {"tok": (0.02 * jax.random.normal(key, (vocab, d_model))).astype(dtype)}
+
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["tok"][tokens]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]

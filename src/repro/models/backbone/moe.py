@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based einsum
+dispatch (the classic shard-friendly formulation of GShard / Switch / t5x).
+
+TPU adaptation (DESIGN.md §5): the expert dimension E is sharded along the
+``model`` mesh axis (expert parallelism); tokens arrive sharded along
+``data``. The dispatch einsum reshards (groups@data, E, C, D) ->
+(E@model, ...) — XLA SPMD lowers that resharding to the all-to-all that a
+hand-written torch/NCCL MoE would issue explicitly. Router logits and
+load-balance statistics are computed where the tokens live, so per-silo
+routing information never crosses the silo boundary (the paper's privacy
+structure extends to the router).
+
+Groups are sequence chunks of ``group_size`` tokens; capacity is
+``group_size * top_k / E * capacity_factor``. Tokens overflowing an
+expert's capacity within their group are dropped (standard GShard
+behaviour) — the residual path carries them unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.backbone.layers import dense_init
+
+
+def moe_init(key, cfg):
+    d = cfg.d_model
+    E = cfg.num_experts
+    dff = cfg.d_expert if cfg.d_expert else cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "w_gate": (s * jax.random.normal(ks[1], (E, d, dff))).astype(dtype),
+        "w_up": (s * jax.random.normal(ks[2], (E, d, dff))).astype(dtype),
+        "w_down": ((1.0 / math.sqrt(dff)) * jax.random.normal(ks[3], (E, dff, d))).astype(dtype),
+    }
+
+
+def _route(router_w, x_flat, E: int, top_k: int):
+    """Router probabilities + top-k assignment. x_flat: (T, D)."""
+    logits = (x_flat.astype(jnp.float32) @ router_w).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    # Renormalize the selected gates (standard for top-k > 1).
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return probs, gate_vals, expert_idx
+
+
+def load_balance_loss(probs: jnp.ndarray, expert_idx: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * <fraction routed to e> . <router prob e>."""
+    T = probs.shape[0]
+    counts = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(expert_idx.size, 1)
+    mean_prob = probs.mean(axis=0)
+    return E * jnp.sum(frac * mean_prob)
+
+
+def _dispatch_masks(expert_idx, gate_vals, E: int, capacity: int):
+    """Build (T, E, C) dispatch (bool->dtype) and combine (gated) tensors."""
+    T, k = expert_idx.shape
+    # Position of each (token, slot) in its expert's queue, computed per
+    # expert via a masked cumulative sum over the flattened (T*k) order.
+    flat_expert = expert_idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.float32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot) * onehot  # (T*k, E)
+    pos = pos_in_expert.sum(-1).astype(jnp.int32)  # (T*k,)
+    keep = pos < capacity
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (T*k, C)
+    disp = (onehot * keep[:, None].astype(jnp.float32))[:, :, None] * pos_oh[:, None, :]
+    disp = disp.reshape(T, k, E, capacity).sum(axis=1)  # (T, E, C)
+    comb = (
+        (onehot * (gate_vals.reshape(-1)[:, None] * keep[:, None]))[:, :, None]
+        * pos_oh[:, None, :]
+    ).reshape(T, k, E, capacity).sum(axis=1)
+    return disp, comb
+
+
+def moe_block(params, cfg, x, group_size: int = 1024) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss). Grouped capacity-based top-k MoE."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    gs = min(group_size, B * S)
+    T = B * S
+    assert T % gs == 0, f"tokens {T} not divisible by group {gs}"
+    G = T // gs
+    capacity = max(int(gs * k / E * cfg.capacity_factor), 1)
+    xg = x.reshape(G, gs, D)
+
+    probs, gate_vals, expert_idx = jax.vmap(
+        lambda xf: _route(params["router"], xf, E, k)
+    )(xg)
+    aux = jax.vmap(lambda p, i: load_balance_loss(p, i, E))(probs, expert_idx).mean()
+
+    disp, comb = jax.vmap(lambda ei, gv: _dispatch_masks(ei, gv, E, capacity))(
+        expert_idx, gate_vals
+    )  # (G, gs, E, C) each
+
+    # Dispatch: (G,gs,E,C),(G,gs,D) -> (E, G, C, D). Expert-major layout so
+    # the expert matmuls shard cleanly along the model axis.
+    xe = jnp.einsum("gsec,gsd->egcd", disp.astype(x.dtype), xg)
+    h = jnp.einsum("egcd,edf->egcf", xe, params["w_gate"])
+    u = jnp.einsum("egcd,edf->egcf", xe, params["w_up"])
+    y_e = jnp.einsum("egcf,efd->egcd", jax.nn.silu(h) * u, params["w_down"])
+    y = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), y_e)
+    return y.reshape(B, S, D), aux
+
+
+def moe_block_dense(params, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference/decode path: every expert on every token, gate-weighted sum
+    restricted to the top-k (no capacity drops). O(E/k) extra FLOPs — used
+    for single-token decode (T = B is tiny) and as the correctness oracle
+    for ``moe_block``."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    xf = x.reshape(-1, D)
+    probs, gate_vals, expert_idx = _route(params["router"], xf, E, k)
+    aux = load_balance_loss(probs, expert_idx, E)
+    # Gate matrix (T, E): gate value where selected, else 0.
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(xf.shape[0])[:, None], expert_idx
+    ].set(gate_vals)
+    h = jnp.einsum("td,edf->etf", xf, params["w_gate"])
+    u = jnp.einsum("td,edf->etf", xf, params["w_up"])
+    y_e = jnp.einsum("etf,efd->etd", jax.nn.silu(h) * u, params["w_down"])
+    y = jnp.einsum("te,etd->td", gates.astype(x.dtype), y_e)
+    return y.reshape(B, S, D), aux

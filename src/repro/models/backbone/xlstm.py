@@ -1,0 +1,241 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence).
+
+mLSTM is a gated linear attention: with forget gate f_t and input gate i_t,
+
+    C_t = sigmoid_f(f_t) C_{t-1} + exp(i_t - m_t) k_t v_t^T
+    y_t = q_t C_t / max(|q_t n_t|, 1)
+
+We fold the input gate into k and route through the shared ``chunked_gla``
+scan (ssm.py); the normalizer n_t is obtained by augmenting v with a ones
+column — one extra dv column instead of a second scan. Stabilization uses
+the running maximum of the cumulative log gates, applied per chunk.
+
+sLSTM has genuine hidden-to-hidden recurrence (block-diagonal per head), so
+it admits no parallel form — it lowers to a ``lax.scan`` over time. This is
+the paper-faithful choice; xLSTM-1.3b places sLSTM in 1 of every 8 blocks
+(the 7:1 ratio of the paper) so the scan is a small fraction of total work.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.backbone.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.models.backbone.ssm import (_gla_dispatch, chunked_gla,
+                                        gla_decode_step, gla_final_state)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (projection factor 2, conv-free variant)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    d_inner = 2 * d
+    H = cfg.num_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dtype),  # [x_inner, z_gate]
+        "wq": dense_init(ks[1], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_gates": dense_init(ks[4], d_inner, 2 * H, dtype, scale=0.01),
+        "f_bias": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),  # open forget gates
+        "i_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "w_down": dense_init(ks[5], d_inner, d, dtype),
+    }
+
+
+def _mlstm_qkva(params, cfg, u):
+    """u: (B, S, D) -> q, k, v(+ones), log_f, plus the gate branch."""
+    B, S, _ = u.shape
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    P = d_inner // H
+    xz = u @ params["w_up"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    q = (x @ params["wq"]).reshape(B, S, H, P)
+    k = (x @ params["wk"]).reshape(B, S, H, P) / math.sqrt(P)
+    v = (x @ params["wv"]).reshape(B, S, H, P)
+    gates = (x @ params["w_gates"]).astype(jnp.float32).reshape(B, S, H, 2)
+    log_f = jax.nn.log_sigmoid(gates[..., 0] + params["f_bias"])  # (B,S,H)
+    log_i = gates[..., 1] + params["i_bias"]
+    return q, k, v, log_f, log_i, z, d_inner, H, P
+
+
+def _mlstm_combine(params, cfg, y, nrm, z, B, S, d_inner, m):
+    """Normalize, gate, down-project.
+
+    Denominator is max(|q.n|, exp(-m)) — with the exp(i - m) scaling folded
+    into k, this equals the paper's unstabilized max(|q.n|, 1) EXACTLY, so
+    the result is independent of m (streaming prefill->decode consistent).
+    """
+    y = y / jnp.maximum(jnp.abs(nrm), jnp.exp(-m)[..., None])
+    y = y.reshape(B, S, d_inner).astype(z.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["w_down"]
+
+
+def mlstm_block(params, cfg, u):
+    B, S, _ = u.shape
+    q, k, v, log_f, log_i, z, d_inner, H, P = _mlstm_qkva(params, cfg, u)
+    # Fold input gate into k; stabilize with a global per-head max.
+    m = jnp.max(log_i, axis=1, keepdims=True)  # (B,1,H)
+    k_g = k * jnp.exp(log_i - m)[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate([v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)
+    y_aug = _gla_dispatch(cfg, q, k_g, v_aug, log_f)
+    y, nrm = y_aug[..., :P], y_aug[..., P:]
+    return _mlstm_combine(params, cfg, y, nrm, z, B, S, d_inner, m)
+
+
+def mlstm_init_cache(params, cfg, batch: int, dtype):
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    P = d_inner // H
+    return {
+        "state": jnp.zeros((batch, H, P, P + 1), jnp.float32),
+        "m": jnp.zeros((batch, 1, H), jnp.float32),
+    }
+
+
+def mlstm_prefill(params, cfg, u):
+    B, S, _ = u.shape
+    q, k, v, log_f, log_i, z, d_inner, H, P = _mlstm_qkva(params, cfg, u)
+    m = jnp.max(log_i, axis=1, keepdims=True)
+    k_g = k * jnp.exp(log_i - m)[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate([v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)
+    y_aug = chunked_gla(q, k_g, v_aug, log_f)
+    state = gla_final_state(k_g, v_aug, log_f)
+    y, nrm = y_aug[..., :P], y_aug[..., P:]
+    out = _mlstm_combine(params, cfg, y, nrm, z, B, S, d_inner, m)
+    return out, {"state": state, "m": m}
+
+
+def mlstm_decode(params, cfg, u, cache):
+    B = u.shape[0]
+    q, k, v, log_f, log_i, z, d_inner, H, P = _mlstm_qkva(params, cfg, u)
+    m = cache["m"]  # keep the prefill stabilizer (running max would rescale state)
+    k_g = (k * jnp.exp(log_i - m)[..., None].astype(k.dtype))[:, 0]
+    v_aug = jnp.concatenate([v, jnp.ones((B, 1, H, 1), v.dtype)], axis=-1)[:, 0]
+    state, y_aug = gla_decode_step(cache["state"], q[:, 0], k_g, v_aug, log_f[:, 0])
+    y_aug = y_aug[:, None]
+    y, nrm = y_aug[..., :P], y_aug[..., P:]
+    out = _mlstm_combine(params, cfg, y.astype(u.dtype), nrm, z, B, 1, d_inner, m)
+    return out, {"state": state, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # 4 gates (i, f, z, o) from input
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),
+        # block-diagonal recurrence: per head (P, 4P)
+        "r": (jax.random.normal(ks[1], (H, P, 4 * P)) / math.sqrt(P)).astype(jnp.float32),
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.linspace(3.0, 6.0, d), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "out_norm": rmsnorm_init(d, dtype),
+        "w_ff1": dense_init(ks[2], d, 4 * d // 3, dtype),
+        "w_ff2": dense_init(ks[3], 4 * d // 3, d, dtype),
+    }
+
+
+def slstm_init_cache(params, cfg, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def _slstm_cell(params, cfg, x_t, state):
+    """x_t: (B, 4d) pre-projected gates input; state dict of (B,H,P)."""
+    H = cfg.num_heads
+    d = cfg.d_model
+    P = d // H
+    B = x_t.shape[0]
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhp,hpk->bhk", h, params["r"])  # (B,H,4P)
+    # Gate-major layout: x_t (B, 4d) -> (B, 4, H, P); recurrence likewise.
+    xg = x_t.astype(jnp.float32).reshape(B, 4, H, P)
+    rg = rec.reshape(B, H, 4, P).transpose(0, 2, 1, 3)  # (B,4,H,P)
+    bg = params["b"].reshape(4, H, P)
+    z_in = xg + rg + bg[None]
+    i_t, f_t, z_t, o_t = z_in[:, 0], z_in[:, 1], z_in[:, 2], z_in[:, 3]
+    # Stabilized exponential gating (xLSTM paper eqs. 15-17).
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_t)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    # carry m at (B,H,1)? keep per-unit m: shapes (B,H,P)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block(params, cfg, u):
+    """u: (B, S, D). lax.scan over time (true recurrence)."""
+    B, S, d = u.shape
+    H = cfg.num_heads
+    P = d // H
+    x_all = u @ params["w_in"]  # (B,S,4d)
+    state0 = {
+        "c": jnp.zeros((B, H, P), jnp.float32),
+        "n": jnp.zeros((B, H, P), jnp.float32),
+        "h": jnp.zeros((B, H, P), jnp.float32),
+        "m": jnp.zeros((B, H, P), jnp.float32),
+    }
+
+    def step(state, x_t):
+        new = _slstm_cell(params, cfg, x_t, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(x_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(u.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    return jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"]
+
+
+def slstm_prefill(params, cfg, u):
+    B, S, d = u.shape
+    H = cfg.num_heads
+    P = d // H
+    x_all = u @ params["w_in"]
+    state0 = {
+        "c": jnp.zeros((B, H, P), jnp.float32),
+        "n": jnp.zeros((B, H, P), jnp.float32),
+        "h": jnp.zeros((B, H, P), jnp.float32),
+        "m": jnp.zeros((B, H, P), jnp.float32),
+    }
+
+    def step(state, x_t):
+        new = _slstm_cell(params, cfg, x_t, state)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, state0, jnp.moveaxis(x_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(u.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    return jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"], final
+
+
+def slstm_decode(params, cfg, u, cache):
+    B, _, d = u.shape
+    x_t = (u @ params["w_in"])[:, 0]
+    new = _slstm_cell(params, cfg, x_t, cache)
+    y = new["h"].reshape(B, 1, d).astype(u.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    return jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"], new

@@ -1,0 +1,6 @@
+from repro.models.paper.hier_bnn import build_hier_bnn
+from repro.models.paper.prodlda import build_prodlda
+from repro.models.paper.glmm import build_glmm
+from repro.models.paper.multinomial import build_multinomial
+
+__all__ = ["build_hier_bnn", "build_prodlda", "build_glmm", "build_multinomial"]

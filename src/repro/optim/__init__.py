@@ -1,0 +1,40 @@
+"""Optimizers implemented from scratch (optax is unavailable offline).
+
+The API mirrors optax's GradientTransformation so the rest of the framework
+reads idiomatically: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)``, and ``apply_updates(params, updates)``.
+"""
+from repro.optim.base import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    scale,
+    scale_by_schedule,
+)
+from repro.optim.adam import adam, adamw, scale_by_adam
+from repro.optim.sgd import sgd, momentum
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_decay_schedule,
+    linear_warmup_cosine_decay,
+    warmup_schedule,
+)
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "scale",
+    "scale_by_schedule",
+    "adam",
+    "adamw",
+    "scale_by_adam",
+    "sgd",
+    "momentum",
+    "constant_schedule",
+    "cosine_decay_schedule",
+    "linear_warmup_cosine_decay",
+    "warmup_schedule",
+]

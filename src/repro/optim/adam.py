@@ -1,0 +1,89 @@
+"""Adam / AdamW (Kingma & Ba, 2015) — the optimizer used by every paper experiment."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation, chain, scale
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: object  # first-moment pytree
+    nu: object  # second-moment pytree
+
+
+def scale_by_adam(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    mu_dtype: Optional[jnp.dtype] = None,
+) -> GradientTransformation:
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=mu_dtype or p.dtype), params
+        )
+        nu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return ScaleByAdamState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1.0 - b1) * g.astype(m.dtype), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def adam(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    maximize: bool = False,
+) -> GradientTransformation:
+    """Adam. ``maximize=True`` flips the sign (VI *maximizes* the ELBO)."""
+    sign = 1.0 if maximize else -1.0
+    return chain(scale_by_adam(b1=b1, b2=b2, eps=eps), scale(sign * learning_rate))
+
+
+class AdamWState(NamedTuple):
+    adam: ScaleByAdamState
+
+
+def adamw(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> GradientTransformation:
+    inner = scale_by_adam(b1=b1, b2=b2, eps=eps)
+
+    def init(params):
+        return AdamWState(adam=inner.init(params))
+
+    def update(grads, state, params):
+        updates, adam_state = inner.update(grads, state.adam, params)
+        updates = jax.tree_util.tree_map(
+            lambda u, p: -learning_rate * (u + weight_decay * p.astype(u.dtype)),
+            updates,
+            params,
+        )
+        return updates, AdamWState(adam=adam_state)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,90 @@
+"""Core optimizer plumbing: GradientTransformation, chain, clipping."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradientTransformation(NamedTuple):
+    """A pair of pure functions (init, update) — the optax contract."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params <- params + updates (updates already carry the sign/LR)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates
+    )
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose gradient transformations left-to-right."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = global_norm(grads)
+        scale_factor = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale_factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]) -> GradientTransformation:
+    def init(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        step_size = schedule(state.count)
+        updates = jax.tree_util.tree_map(lambda g: g * step_size, grads)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init, update)

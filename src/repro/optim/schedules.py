@@ -1,0 +1,36 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def warmup_schedule(base: float, warmup_steps: int):
+    def schedule(count):
+        frac = jnp.minimum(1.0, (count.astype(jnp.float32) + 1.0) / max(warmup_steps, 1))
+        return base * frac
+
+    return schedule
+
+
+def cosine_decay_schedule(base: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base * ((1.0 - alpha) * cosine + alpha)
+
+    return schedule
+
+
+def linear_warmup_cosine_decay(base: float, warmup_steps: int, total_steps: int, alpha: float = 0.0):
+    cos = cosine_decay_schedule(base, max(total_steps - warmup_steps, 1), alpha)
+
+    def schedule(count):
+        count_f = count.astype(jnp.float32)
+        warm = base * (count_f + 1.0) / max(warmup_steps, 1)
+        return jnp.where(count < warmup_steps, warm, cos(count - warmup_steps))
+
+    return schedule

@@ -1,0 +1,44 @@
+"""SGD and momentum — used as baselines and in tests."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+
+def sgd(learning_rate: float, maximize: bool = False) -> GradientTransformation:
+    sign = 1.0 if maximize else -1.0
+
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda g: sign * learning_rate * g, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class MomentumState(NamedTuple):
+    velocity: object
+
+
+def momentum(learning_rate: float, beta: float = 0.9) -> GradientTransformation:
+    def init(params):
+        return MomentumState(
+            velocity=jax.tree_util.tree_map(jnp.zeros_like, params)
+        )
+
+    def update(grads, state, params=None):
+        del params
+        velocity = jax.tree_util.tree_map(
+            lambda v, g: beta * v + g, state.velocity, grads
+        )
+        updates = jax.tree_util.tree_map(lambda v: -learning_rate * v, velocity)
+        return updates, MomentumState(velocity=velocity)
+
+    return GradientTransformation(init, update)

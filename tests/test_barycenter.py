@@ -1,0 +1,129 @@
+"""Tests for Wasserstein barycenters (paper §3.2, point 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CholeskyGaussian,
+    DiagGaussian,
+    diag_barycenter,
+    gaussian_barycenter,
+    gaussian_barycenter_cov,
+    sqrtm_eigh,
+    sqrtm_newton_schulz,
+    wasserstein2_gaussian,
+)
+from repro.core.barycenter import barycenter_params_diag, barycenter_params_full
+
+
+def _random_spd(key, d, scale=1.0):
+    a = jax.random.normal(key, (d, d))
+    return scale * (a @ a.T + d * jnp.eye(d))
+
+
+class TestSqrtm:
+    @settings(max_examples=15, deadline=None)
+    @given(d=st.integers(1, 6), seed=st.integers(0, 1000))
+    def test_newton_schulz_matches_eigh(self, d, seed):
+        m = _random_spd(jax.random.PRNGKey(seed), d)
+        s1 = sqrtm_eigh(m)
+        s2 = sqrtm_newton_schulz(m, num_iters=30)
+        np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+
+    def test_sqrtm_squares_back(self):
+        m = _random_spd(jax.random.PRNGKey(0), 4)
+        s = sqrtm_eigh(m)
+        np.testing.assert_allclose(s @ s, m, rtol=1e-4, atol=1e-4)
+
+
+class TestDiagBarycenter:
+    def test_identical_inputs_fixed_point(self):
+        mus = jnp.tile(jnp.array([1.0, -1.0]), (4, 1))
+        sigmas = jnp.tile(jnp.array([0.5, 2.0]), (4, 1))
+        mu, sigma = diag_barycenter(mus, sigmas)
+        np.testing.assert_allclose(mu, mus[0], rtol=1e-6)
+        np.testing.assert_allclose(sigma, sigmas[0], rtol=1e-6)
+
+    def test_analytic_formula(self):
+        """σ* = (J⁻¹ Σ_j Σ_j^{1/2})² — i.e. stds average linearly."""
+        sigmas = jnp.array([[1.0], [4.0]])  # stds
+        mus = jnp.zeros((2, 1))
+        _, sigma = diag_barycenter(mus, sigmas)
+        np.testing.assert_allclose(sigma, jnp.array([2.5]), rtol=1e-6)
+
+    def test_diag_agrees_with_full_fixed_point(self):
+        """The fixed-point iteration on diagonal covariances must reproduce
+        the analytic diagonal solution."""
+        stds = jnp.array([[0.5, 1.0], [1.5, 2.0], [1.0, 0.3]])
+        covs = jax.vmap(lambda s: jnp.diag(s**2))(stds)
+        cov_star = gaussian_barycenter_cov(covs, num_fp_iters=100)
+        _, sigma_star = diag_barycenter(jnp.zeros((3, 2)), stds)
+        np.testing.assert_allclose(
+            jnp.diag(cov_star), sigma_star**2, rtol=1e-4, atol=1e-5
+        )
+        # off-diagonals stay ~0
+        np.testing.assert_allclose(cov_star[0, 1], 0.0, atol=1e-5)
+
+    def test_weighted(self):
+        mus = jnp.array([[0.0], [1.0]])
+        sigmas = jnp.ones((2, 1))
+        mu, _ = diag_barycenter(mus, sigmas, weights=jnp.array([0.25, 0.75]))
+        np.testing.assert_allclose(mu, jnp.array([0.75]), rtol=1e-6)
+
+
+class TestFullBarycenter:
+    def test_barycenter_satisfies_fixed_point(self):
+        """Σ* = J⁻¹ Σ_j (Σ*^{1/2} Σ_j Σ*^{1/2})^{1/2} at the solution."""
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        covs = jnp.stack([_random_spd(k, 3, 0.5) for k in keys])
+        cov_star = gaussian_barycenter_cov(covs, num_fp_iters=200)
+        root = sqrtm_eigh(cov_star)
+        rhs = jnp.mean(
+            jax.vmap(lambda c: sqrtm_eigh(root @ c @ root))(covs), axis=0
+        )
+        np.testing.assert_allclose(cov_star, rhs, rtol=5e-3, atol=5e-3)
+
+    def test_barycenter_minimizes_w2_sum(self):
+        """Perturbing the barycenter increases Σ_j W₂²."""
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        covs = jnp.stack([_random_spd(k, 2, 0.3) for k in keys])
+        mus = jax.random.normal(jax.random.PRNGKey(2), (3, 2))
+        mu_s, cov_s = gaussian_barycenter(mus, covs, num_fp_iters=200)
+
+        def w2_sum(mu, cov):
+            return sum(
+                float(wasserstein2_gaussian(mu, cov, mus[j], covs[j]))
+                for j in range(3)
+            )
+
+        base = w2_sum(mu_s, cov_s)
+        for seed in range(3):
+            d_mu = 0.05 * jax.random.normal(jax.random.PRNGKey(10 + seed), (2,))
+            perturbed_cov = cov_s + 0.05 * _random_spd(jax.random.PRNGKey(20 + seed), 2, 0.05)
+            assert w2_sum(mu_s + d_mu, perturbed_cov) > base - 1e-6
+
+    def test_w2_zero_for_identical(self):
+        cov = _random_spd(jax.random.PRNGKey(3), 4)
+        mu = jax.random.normal(jax.random.PRNGKey(4), (4,))
+        np.testing.assert_allclose(
+            wasserstein2_gaussian(mu, cov, mu, cov), 0.0, atol=1e-3
+        )
+
+
+class TestFamilyBarycenterBridges:
+    def test_diag_params_barycenter(self):
+        fam = DiagGaussian(3)
+        ps = [fam.init(jax.random.PRNGKey(i), mu_scale=1.0) for i in range(4)]
+        out = barycenter_params_diag(fam, ps)
+        mus = jnp.stack([p["mu"] for p in ps])
+        np.testing.assert_allclose(out["mu"], jnp.mean(mus, 0), rtol=1e-5)
+
+    def test_full_params_barycenter_identity_case(self):
+        fam = CholeskyGaussian(2)
+        p = fam.init(jax.random.PRNGKey(0))
+        p["L_packed"] = jnp.array([0.4])
+        out = barycenter_params_full(fam, [p, p, p])
+        np.testing.assert_allclose(
+            fam.covariance(out), fam.covariance(p), rtol=1e-3, atol=1e-4
+        )

@@ -1,0 +1,101 @@
+"""Tests for the synthetic data pipeline and silo partitioners."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (
+    heterogeneous_label_partition,
+    iid_partition,
+    make_lda_corpus,
+    make_six_cities,
+    make_synthetic_mnist,
+    make_token_stream,
+    sizes_partition,
+)
+
+
+class TestGenerators:
+    def test_synthetic_mnist_shapes(self):
+        tr, te = make_synthetic_mnist(jax.random.PRNGKey(0), 100, 20, dim=64, num_classes=5)
+        assert tr.x.shape == (100, 64) and tr.y.shape == (100,)
+        assert te.x.shape == (20, 64)
+        assert tr.y.min() >= 0 and tr.y.max() < 5
+        assert np.isfinite(tr.x).all()
+
+    def test_synthetic_mnist_is_learnable(self):
+        """Nearest-prototype classification must beat chance by a wide margin
+        (otherwise the BNN experiments are meaningless)."""
+        tr, te = make_synthetic_mnist(jax.random.PRNGKey(0), 2000, 500, dim=784)
+        protos = np.stack([tr.x[tr.y == c].mean(0) for c in range(10)])
+        pred = np.argmin(
+            ((te.x[:, None, :] - protos[None]) ** 2).sum(-1), axis=1
+        )
+        assert (pred == te.y).mean() > 0.8
+
+    def test_lda_corpus(self):
+        counts, topics = make_lda_corpus(
+            jax.random.PRNGKey(1), num_docs=50, vocab_size=100, num_topics=7
+        )
+        assert counts.shape == (50, 100)
+        assert topics.shape == (7, 100)
+        np.testing.assert_allclose(topics.sum(-1), 1.0, rtol=1e-4)
+        assert counts.sum(-1).min() >= 10  # doc length floor
+
+    def test_six_cities(self):
+        data, truth = make_six_cities(jax.random.PRNGKey(2), num_children=100)
+        assert data["y"].shape == (100, 4)
+        assert set(np.unique(data["y"])) <= {0.0, 1.0}
+        assert data["age"].shape == (100, 4)
+        np.testing.assert_array_equal(data["age"][0], [-2, -1, 0, 1])
+
+    def test_token_stream(self):
+        toks = make_token_stream(jax.random.PRNGKey(3), 10_000, vocab_size=1000)
+        assert toks.shape == (10_000,)
+        # Zipf: the most common token is much more frequent than the median.
+        counts = np.bincount(toks, minlength=1000)
+        assert counts.max() > 20 * max(np.median(counts), 1)
+
+
+class TestPartitioners:
+    def test_iid_partition_covers_everything(self):
+        rng = np.random.default_rng(0)
+        parts = iid_partition(rng, 103, 4)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 103
+        assert len(np.unique(allidx)) == 103
+
+    def test_sizes_partition(self):
+        rng = np.random.default_rng(0)
+        parts = sizes_partition(rng, 537, [300, 237])
+        assert len(parts[0]) == 300 and len(parts[1]) == 237
+        assert len(np.unique(np.concatenate(parts))) == 537
+
+    def test_sizes_partition_validates(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(AssertionError):
+            sizes_partition(rng, 10, [3, 3])
+
+    def test_heterogeneous_partition_skew(self):
+        """Each silo must be ~90% one label — the paper's §4.1 protocol."""
+        rng = np.random.default_rng(0)
+        labels = rng.integers(0, 10, size=10_000)
+        parts = heterogeneous_label_partition(rng, labels, 10, dominant_frac=0.9)
+        for j, p in enumerate(parts):
+            silo_labels = labels[p]
+            dom = np.bincount(silo_labels, minlength=10).max() / len(silo_labels)
+            assert dom > 0.8, f"silo {j} dominant fraction {dom}"
+
+    def test_heterogeneous_partition_disjoint(self):
+        rng = np.random.default_rng(1)
+        labels = rng.integers(0, 10, size=5000)
+        parts = heterogeneous_label_partition(rng, labels, 50)
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == len(allidx)
+
+    def test_heterogeneous_partition_50_silos(self):
+        """The paper's J=50 configuration must also produce skewed silos."""
+        rng = np.random.default_rng(2)
+        labels = rng.integers(0, 10, size=20_000)
+        parts = heterogeneous_label_partition(rng, labels, 50)
+        sizes = {len(p) for p in parts}
+        assert len(sizes) == 1  # equal-size silos

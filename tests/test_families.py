@@ -1,0 +1,161 @@
+"""Unit tests for the variational families (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.families import (
+    BatchedDiagGaussian,
+    CholeskyGaussian,
+    ConditionalGaussian,
+    DiagGaussian,
+)
+
+
+def _mc_moments(sample_fn, dim, n=200_000, seed=0):
+    eps = jax.random.normal(jax.random.PRNGKey(seed), (n, dim))
+    zs = jax.vmap(sample_fn)(eps)
+    return jnp.mean(zs, 0), jnp.cov(zs.T)
+
+
+class TestDiagGaussian:
+    def test_sample_matches_moments(self):
+        fam = DiagGaussian(3)
+        params = {"mu": jnp.array([1.0, -2.0, 0.5]), "log_sigma": jnp.log(jnp.array([0.5, 1.0, 2.0]))}
+        mean, cov = _mc_moments(lambda e: fam.sample(params, e), 3)
+        np.testing.assert_allclose(mean, params["mu"], atol=0.02)
+        np.testing.assert_allclose(jnp.diag(cov), jnp.exp(params["log_sigma"]) ** 2, rtol=0.05)
+
+    def test_log_prob_matches_manual(self):
+        fam = DiagGaussian(4)
+        params = fam.init(jax.random.PRNGKey(0))
+        z = jax.random.normal(jax.random.PRNGKey(1), (4,))
+        sigma = jnp.exp(params["log_sigma"])
+        manual = jnp.sum(
+            -0.5 * ((z - params["mu"]) / sigma) ** 2
+            - jnp.log(sigma)
+            - 0.5 * jnp.log(2 * jnp.pi)
+        )
+        np.testing.assert_allclose(fam.log_prob(params, z), manual, rtol=1e-6)
+
+    def test_entropy_is_expected_neg_log_prob(self):
+        fam = DiagGaussian(3)
+        params = fam.init(jax.random.PRNGKey(0), log_sigma_init=0.3)
+        eps = jax.random.normal(jax.random.PRNGKey(2), (100_000, 3))
+        lps = jax.vmap(lambda e: fam.log_prob(params, fam.sample(params, e)))(eps)
+        np.testing.assert_allclose(-jnp.mean(lps), fam.entropy(params), rtol=1e-2)
+
+    def test_moments_roundtrip(self):
+        fam = DiagGaussian(5)
+        params = fam.init(jax.random.PRNGKey(3))
+        mu, sigma = fam.to_moments(params)
+        back = fam.from_moments(mu, sigma)
+        for k in params:
+            np.testing.assert_allclose(params[k], back[k], rtol=1e-6)
+
+
+class TestCholeskyGaussian:
+    def test_covariance_matches_samples(self):
+        fam = CholeskyGaussian(3)
+        key = jax.random.PRNGKey(0)
+        params = fam.init(key, log_sigma_init=-0.5)
+        params["L_packed"] = jnp.array([0.7, -0.3, 0.4])
+        mean, cov = _mc_moments(lambda e: fam.sample(params, e), 3, n=400_000)
+        np.testing.assert_allclose(mean, params["mu"], atol=0.02)
+        np.testing.assert_allclose(cov, fam.covariance(params), atol=0.02)
+
+    def test_log_prob_normalized_consistency(self):
+        """log_prob at a sample equals the analytic MVN density."""
+        fam = CholeskyGaussian(4)
+        params = fam.init(jax.random.PRNGKey(1))
+        params["L_packed"] = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (6,))
+        z = fam.sample(params, jax.random.normal(jax.random.PRNGKey(3), (4,)))
+        cov = fam.covariance(params)
+        resid = z - params["mu"]
+        manual = (
+            -0.5 * resid @ jnp.linalg.solve(cov, resid)
+            - 0.5 * jnp.linalg.slogdet(cov)[1]
+            - 2.0 * jnp.log(2 * jnp.pi)
+        )
+        np.testing.assert_allclose(fam.log_prob(params, z), manual, rtol=1e-5)
+
+    def test_from_moments_roundtrip(self):
+        fam = CholeskyGaussian(3)
+        params = fam.init(jax.random.PRNGKey(4))
+        params["L_packed"] = jnp.array([0.5, -0.2, 0.1])
+        cov = fam.covariance(params)
+        back = fam.from_moments(params["mu"], cov)
+        np.testing.assert_allclose(fam.covariance(back), cov, rtol=1e-5, atol=1e-7)
+
+    def test_dim1_edge_case(self):
+        fam = CholeskyGaussian(1)
+        params = fam.init(jax.random.PRNGKey(5))
+        z = fam.sample(params, jnp.array([0.3]))
+        assert jnp.isfinite(fam.log_prob(params, z))
+
+
+class TestConditionalGaussian:
+    def test_coupling_shifts_conditional_mean(self):
+        fam = ConditionalGaussian(2, 3, use_coupling=True)
+        params = fam.init(jax.random.PRNGKey(0))
+        params["C"] = jnp.ones((2, 3))
+        mu_G = jnp.zeros(3)
+        z_G = jnp.array([1.0, 0.0, -1.0])
+        eps = jnp.zeros(2)
+        z = fam.sample(params, z_G, mu_G, eps)
+        np.testing.assert_allclose(z, params["mu_bar"] + jnp.sum(z_G), rtol=1e-6)
+
+    def test_joint_covariance_structure(self):
+        """Cov(Z_G, Z_L) = Σ_GG C_jᵀ (paper §3.1)."""
+        dG, dL = 2, 2
+        gfam = DiagGaussian(dG)
+        lfam = ConditionalGaussian(dL, dG, use_coupling=True)
+        gp = {"mu": jnp.zeros(dG), "log_sigma": jnp.log(jnp.array([1.0, 2.0]))}
+        lp = lfam.init(jax.random.PRNGKey(1))
+        lp["C"] = jnp.array([[0.5, -0.3], [0.2, 0.8]])
+        n = 400_000
+        epsG = jax.random.normal(jax.random.PRNGKey(2), (n, dG))
+        epsL = jax.random.normal(jax.random.PRNGKey(3), (n, dL))
+        zG = jax.vmap(lambda e: gfam.sample(gp, e))(epsG)
+        zL = jax.vmap(lambda zg, e: lfam.sample(lp, zg, gp["mu"], e))(zG, epsL)
+        sigma_gg = jnp.diag(jnp.exp(gp["log_sigma"]) ** 2)
+        expected_cross = sigma_gg @ lp["C"].T
+        full = jnp.cov(jnp.concatenate([zG, zL], 1).T)
+        np.testing.assert_allclose(full[:dG, dG:], expected_cross, atol=0.03)
+
+    def test_log_prob_with_chol(self):
+        fam = ConditionalGaussian(3, 2, use_coupling=True, use_chol=True)
+        params = fam.init(jax.random.PRNGKey(0))
+        params["L_packed"] = jnp.array([0.4, -0.1, 0.6])
+        z_G, mu_G = jnp.array([0.5, -0.5]), jnp.zeros(2)
+        eps = jax.random.normal(jax.random.PRNGKey(1), (3,))
+        z = fam.sample(params, z_G, mu_G, eps)
+        # Reconstruct eps via log_prob internals: density at the sample should
+        # equal the standard-normal density of eps minus the log-det.
+        lp = fam.log_prob(params, z, z_G, mu_G)
+        manual = (
+            -0.5 * jnp.sum(eps**2)
+            - jnp.sum(params["log_sigma"])
+            - 1.5 * jnp.log(2 * jnp.pi)
+        )
+        np.testing.assert_allclose(lp, manual, rtol=1e-5)
+
+
+class TestBatchedDiagGaussian:
+    def test_shapes_and_logprob(self):
+        fam = BatchedDiagGaussian(batch=4, dim=3)
+        params = fam.init(jax.random.PRNGKey(0))
+        eps = jax.random.normal(jax.random.PRNGKey(1), (4, 3))
+        z = fam.sample(params, eps)
+        assert z.shape == (4, 3)
+        # Batched log-prob equals sum of per-row diag log-probs.
+        row = DiagGaussian(3)
+        total = sum(
+            float(
+                row.log_prob(
+                    {"mu": params["mu"][i], "log_sigma": params["log_sigma"][i]}, z[i]
+                )
+            )
+            for i in range(4)
+        )
+        np.testing.assert_allclose(float(fam.log_prob(params, z)), total, rtol=1e-5)

@@ -1,0 +1,115 @@
+"""Launch-layer tests: sharding rules, mesh construction, roofline parsing,
+and a subprocess dry-run integration check."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.roofline import (
+    active_param_count,
+    analysis_variant,
+    collective_bytes,
+    extrapolate,
+    model_flops,
+)
+from repro.launch.shardings import param_spec
+from repro.models.backbone import transformer as T
+from repro.models.backbone.config import INPUT_SHAPES
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _specs_for(cfg, model_size=16):
+    params = jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: (path, leaf, param_spec(path, leaf, model_size)), params
+    )
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "olmoe-1b-7b", "zamba2-7b"])
+def test_param_specs_divisible(arch):
+    """Every sharded dim divides the model-axis size; sharded param count
+    is substantial (tensor parallelism actually happens)."""
+    cfg = get_config(arch)
+    specs = _specs_for(cfg)
+    sharded_bytes = total_bytes = 0
+    for path, leaf, spec in jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+    ):
+        nbytes = leaf.size * leaf.dtype.itemsize
+        total_bytes += nbytes
+        for dim, ax in enumerate(spec):
+            if ax == "model":
+                assert leaf.shape[dim] % 16 == 0, (path, leaf.shape, spec)
+                sharded_bytes += nbytes
+                break
+    assert sharded_bytes / total_bytes > 0.9, (
+        f"only {sharded_bytes/total_bytes:.0%} of params tensor-sharded")
+
+
+def test_moe_experts_shard_on_expert_axis():
+    cfg = get_config("olmoe-1b-7b")
+    specs = _specs_for(cfg)
+    moe = specs["units"]["slot0"]["moe"]
+    for name in ("w_gate", "w_up", "w_down"):
+        path, leaf, spec = moe[name]
+        assert spec[1] == "model", (name, spec)  # dim 0 is the unit stack
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ar = bf16[16,1024]{1,0} all-reduce(bf16[16,1024]{1,0} %x), replica_groups=
+  %ag.1 = f32[512]{0} all-gather(f32[32]{0} %y), dimensions={0}
+  %a2a = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(%p, %q)
+  %cp = u32[128]{0} collective-permute(u32[128]{0} %z)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 16 * 1024 * 2 * 2.0
+    assert got["all-gather"] == 512 * 4
+    assert got["all-to-all"] == 2 * 8 * 4 * 4
+    assert got["collective-permute"] == 128 * 4
+
+
+def test_extrapolation_linear():
+    m1 = {"flops": 10.0, "bytes": 4.0, "coll": 2.0, "coll_breakdown": {"all-reduce": 2.0}}
+    m2 = {"flops": 16.0, "bytes": 6.0, "coll": 3.0, "coll_breakdown": {"all-reduce": 3.0}}
+    out = extrapolate(m1, m2, 10)
+    assert out["flops"] == 10 + 9 * 6
+    assert out["coll_breakdown"]["all-reduce"] == 2 + 9 * 1
+
+
+def test_analysis_variant_preserves_family():
+    cfg = get_config("zamba2-7b")
+    v = analysis_variant(cfg, 2)
+    assert v.analysis_mode and v.num_layers == 2 * 6 + 81 % 6
+    assert v.block_kind(5) == "attn"  # pattern intact
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "olmoe-1b-7b", "xlstm-1.3b"])
+def test_model_flops_sane(arch):
+    """6*N*D within 2x of the naive param-count estimate."""
+    cfg = get_config(arch)
+    n_active = active_param_count(cfg)
+    assert n_active > 1e8
+    f = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    assert f == 6.0 * n_active * 4096 * 256
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_combo():
+    """The real thing: 512 host devices, production mesh, lower + compile.
+    Uses the cheapest (arch, shape) cell to keep CI time sane."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-base", "--shape", "decode_32k"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1500,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "0 failed" in out.stdout

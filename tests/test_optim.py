@@ -1,0 +1,118 @@
+"""Tests for the from-scratch optimizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    adam,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    cosine_decay_schedule,
+    linear_warmup_cosine_decay,
+    momentum,
+    scale_by_schedule,
+    sgd,
+)
+from repro.optim.base import global_norm
+
+
+def _quadratic_losses(opt, steps=200):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    target = {"w": jnp.array([0.5, 0.5]), "b": jnp.array(-0.25)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target["w"]) ** 2) + (p["b"] - target["b"]) ** 2
+
+    state = opt.init(params)
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = apply_updates(params, updates)
+        losses.append(float(loss(params)))
+    return losses
+
+
+class TestAdam:
+    def test_converges_on_quadratic(self):
+        losses = _quadratic_losses(adam(0.1))
+        assert losses[-1] < 1e-4
+
+    def test_first_step_is_lr_sized(self):
+        """Adam's bias correction makes the first update ~= lr * sign(g)."""
+        opt = adam(0.1)
+        params = {"x": jnp.array([1.0])}
+        state = opt.init(params)
+        updates, _ = opt.update({"x": jnp.array([123.0])}, state, params)
+        np.testing.assert_allclose(updates["x"], jnp.array([-0.1]), rtol=1e-4)
+
+    def test_maximize_flag(self):
+        opt = adam(0.1, maximize=True)
+        params = {"x": jnp.array([0.0])}
+        state = opt.init(params)
+        updates, _ = opt.update({"x": jnp.array([1.0])}, state, params)
+        assert float(updates["x"][0]) > 0
+
+    def test_adamw_decays_weights(self):
+        opt = adamw(0.1, weight_decay=0.5)
+        params = {"x": jnp.array([10.0])}
+        state = opt.init(params)
+        updates, _ = opt.update({"x": jnp.array([0.0])}, state, params)
+        assert float(updates["x"][0]) < 0  # pure decay pull toward zero
+
+
+class TestSGD:
+    def test_sgd_step(self):
+        opt = sgd(0.5)
+        updates, _ = opt.update({"x": jnp.array([2.0])}, (), None)
+        np.testing.assert_allclose(updates["x"], jnp.array([-1.0]))
+
+    def test_momentum_accumulates(self):
+        opt = momentum(0.1, beta=0.9)
+        params = {"x": jnp.array([1.0])}
+        state = opt.init(params)
+        g = {"x": jnp.array([1.0])}
+        u1, state = opt.update(g, state, params)
+        u2, state = opt.update(g, state, params)
+        assert abs(float(u2["x"][0])) > abs(float(u1["x"][0]))
+
+
+class TestClippingAndSchedules:
+    def test_clip_by_global_norm(self):
+        clip = clip_by_global_norm(1.0)
+        g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}  # norm 5
+        clipped, _ = clip.update(g, (), None)
+        np.testing.assert_allclose(global_norm(clipped), 1.0, rtol=1e-5)
+
+    def test_clip_noop_below_threshold(self):
+        clip = clip_by_global_norm(10.0)
+        g = {"a": jnp.array([3.0])}
+        clipped, _ = clip.update(g, (), None)
+        np.testing.assert_allclose(clipped["a"], g["a"], rtol=1e-6)
+
+    def test_cosine_schedule_endpoints(self):
+        sched = cosine_decay_schedule(1.0, 100)
+        np.testing.assert_allclose(sched(jnp.asarray(0)), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(sched(jnp.asarray(100)), 0.0, atol=1e-6)
+
+    def test_warmup_cosine(self):
+        sched = linear_warmup_cosine_decay(1.0, warmup_steps=10, total_steps=110)
+        assert float(sched(jnp.asarray(0))) < 0.2
+        np.testing.assert_allclose(sched(jnp.asarray(10)), 1.0, rtol=1e-2)
+        assert float(sched(jnp.asarray(109))) < 0.01
+
+    def test_chained_clip_then_adam(self):
+        opt = chain(clip_by_global_norm(1.0), adam(0.05))
+        losses = _quadratic_losses(opt, steps=400)
+        assert losses[-1] < 1e-3
+
+    def test_scale_by_schedule_counts(self):
+        opt = scale_by_schedule(lambda c: 1.0 / (1.0 + c.astype(jnp.float32)))
+        state = opt.init(None)
+        g = {"x": jnp.array([1.0])}
+        u1, state = opt.update(g, state)
+        u2, state = opt.update(g, state)
+        np.testing.assert_allclose(u1["x"], jnp.array([1.0]))
+        np.testing.assert_allclose(u2["x"], jnp.array([0.5]))

@@ -1,0 +1,84 @@
+"""The §Perf levers must be mathematically transparent: same loss, same
+predictions — they only change sharding/layout."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as S
+from repro.models.backbone import transformer as T
+from repro.models.backbone.bayes import token_nll
+from repro.models.backbone.config import PerfConfig
+
+KEY = jax.random.PRNGKey(3)
+
+
+def test_masked_nll_equals_gather_nll():
+    logits = jax.random.normal(KEY, (4, 16, 97))
+    labels = jax.random.randint(KEY, (4, 16), 0, 97)
+    a = token_nll(logits, labels, masked_gather=False)
+    b = token_nll(logits, labels, masked_gather=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-6)
+
+
+def test_pad_vocab_preserves_logits():
+    """Padded model with the SAME weights produces identical logits on the
+    real vocab columns and -inf on padding."""
+    cfg0 = dataclasses.replace(get_config("qwen3-4b").reduced(), vocab_size=387)
+    cfg1 = dataclasses.replace(cfg0, perf=PerfConfig(pad_vocab=True))
+    p0 = T.init_params(KEY, cfg0)
+    p1 = T.init_params(KEY, cfg1)
+    # graft the unpadded weights into the padded tables
+    V = cfg0.vocab_size
+    p1["embed"]["tok"] = p1["embed"]["tok"].at[:V].set(p0["embed"]["tok"])
+    p1["lm_head"] = p1["lm_head"].at[:, :V].set(p0["lm_head"])
+    for k in ("units", "tail", "final_norm"):
+        p1[k] = p0[k]
+    tokens = jax.random.randint(KEY, (2, 8), 0, V)
+    l0, _, _ = T.forward(p0, cfg0, {"tokens": tokens}, remat=False)
+    l1, _, _ = T.forward(p1, cfg1, {"tokens": tokens}, remat=False)
+    assert l1.shape[-1] == cfg1.padded_vocab == 512
+    np.testing.assert_allclose(np.asarray(l1[..., :V]), np.asarray(l0),
+                               atol=1e-5, rtol=1e-5)
+    assert float(l1[..., V:].max()) < -1e29  # padding masked
+
+
+def test_levers_train_step_loss_close():
+    """All levers on vs off: loss agrees to float tolerance on CPU (the
+    levers are resharding-only; pad_vocab adds masked columns that carry
+    no probability mass)."""
+    cfg0 = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                               vocab_size=387)
+    cfg1 = dataclasses.replace(cfg0, perf=PerfConfig(
+        masked_nll=True, pad_vocab=True, zero_opt=True, act_shard=False))
+    B, Sq = 4, 16
+    batch = {"tokens": jax.random.randint(KEY, (B, Sq), 0, 387),
+             "labels": jax.random.randint(KEY, (B, Sq), 0, 387)}
+    # identical theta via grafting (tied embeddings arch: one table)
+    st0, _ = S.init_train_state(KEY, cfg0, 2, lr=1e-3)
+    st1, _ = S.init_train_state(KEY, cfg1, 2, lr=1e-3)
+    tok1 = st1.theta["embed"]["tok"].at[:387].set(st0.theta["embed"]["tok"])
+    theta1 = dict(st1.theta)
+    theta1["embed"] = {"tok": tok1}
+    for k in ("units", "tail", "final_norm"):
+        theta1[k] = st0.theta[k]
+    st1 = S.TrainState(theta1, st0.eta_G, st0.eta_L, st1.opt_theta,
+                       st0.opt_eta_G, st0.opt_eta_L, st1.step)
+    m0 = jax.jit(S.make_train_step(cfg0, 2, remat=False))(st0, batch, jnp.int32(0))[1]
+    m1 = jax.jit(S.make_train_step(cfg1, 2, remat=False))(st1, batch, jnp.int32(0))[1]
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]), rtol=1e-4)
+
+
+def test_pad_heads_bitwise_exact():
+    """Padded attention heads are sliced away before w_o: identical logits
+    with identical params (lever 6)."""
+    cfg0 = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                               num_heads=3, num_kv_heads=1)
+    cfg1 = dataclasses.replace(cfg0, perf=PerfConfig(pad_heads=4))
+    p = T.init_params(KEY, cfg0)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg0.vocab_size)}
+    l0, _, _ = T.forward(p, cfg0, batch, remat=False)
+    l1, _, _ = T.forward(p, cfg1, batch, remat=False)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))

@@ -1,0 +1,78 @@
+"""Tests for the STL gradient estimator (paper §2, eq. 6; Roeder et al. 2017)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DiagGaussian, elbo_objective, stl_objective
+
+
+def _conjugate_posterior():
+    """y ~ N(z, 1), z ~ N(0,1), observed y=1.2 -> posterior N(0.6, 0.5)."""
+    y = 1.2
+
+    def log_joint(z):
+        return -0.5 * jnp.sum(z**2) - 0.5 * jnp.sum((y - z) ** 2)
+
+    post_mu = jnp.array([y / 2.0])
+    post_sigma = jnp.array([jnp.sqrt(0.5)])
+    return log_joint, post_mu, post_sigma
+
+
+class TestSTL:
+    def test_stl_gradient_is_zero_at_exact_posterior(self):
+        """The defining STL property: zero-variance (identically zero)
+        gradient when q equals the true posterior — for ANY eps."""
+        log_joint, mu, sigma = _conjugate_posterior()
+        fam = DiagGaussian(1)
+        params = fam.from_moments(mu, sigma)
+        for seed in range(5):
+            eps = jax.random.normal(jax.random.PRNGKey(seed), (1,))
+            g = jax.grad(lambda p: stl_objective(log_joint, fam, p, eps))(params)
+            for leaf in jax.tree_util.tree_leaves(g):
+                np.testing.assert_allclose(leaf, 0.0, atol=1e-6)
+
+    def test_plain_estimator_is_not_zero_at_posterior(self):
+        """The total-derivative estimator retains per-sample noise at the optimum
+        (its *expectation* is zero but individual samples are not) — this is
+        exactly why the paper uses STL."""
+        log_joint, mu, sigma = _conjugate_posterior()
+        fam = DiagGaussian(1)
+        params = fam.from_moments(mu, sigma)
+        eps = jax.random.normal(jax.random.PRNGKey(0), (1,))
+        g = jax.grad(lambda p: elbo_objective(log_joint, fam, p, eps))(params)
+        norm = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g))
+        assert norm > 1e-4
+
+    def test_stl_unbiasedness(self):
+        """Away from the optimum, STL and plain estimators agree in expectation."""
+        log_joint, _, _ = _conjugate_posterior()
+        fam = DiagGaussian(1)
+        params = {"mu": jnp.array([0.1]), "log_sigma": jnp.array([-0.3])}
+        n = 200_000
+        eps = jax.random.normal(jax.random.PRNGKey(1), (n, 1))
+        g_stl = jax.vmap(
+            lambda e: jax.grad(lambda p: stl_objective(log_joint, fam, p, e))(params)
+        )(eps)
+        g_tot = jax.vmap(
+            lambda e: jax.grad(lambda p: elbo_objective(log_joint, fam, p, e))(params)
+        )(eps)
+        for k in params:
+            np.testing.assert_allclose(
+                jnp.mean(g_stl[k]), jnp.mean(g_tot[k]), atol=6e-3
+            )
+
+    def test_stl_lower_variance_near_optimum(self):
+        log_joint, mu, sigma = _conjugate_posterior()
+        fam = DiagGaussian(1)
+        params = fam.from_moments(mu + 0.02, sigma * 1.02)
+        n = 20_000
+        eps = jax.random.normal(jax.random.PRNGKey(2), (n, 1))
+        g_stl = jax.vmap(
+            lambda e: jax.grad(lambda p: stl_objective(log_joint, fam, p, e))(params)
+        )(eps)
+        g_tot = jax.vmap(
+            lambda e: jax.grad(lambda p: elbo_objective(log_joint, fam, p, e))(params)
+        )(eps)
+        var_stl = sum(float(jnp.var(g_stl[k])) for k in params)
+        var_tot = sum(float(jnp.var(g_tot[k])) for k in params)
+        assert var_stl < var_tot
