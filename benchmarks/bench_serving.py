@@ -1,7 +1,13 @@
 """Serving micro-benchmark: prefill + decode throughput on CPU for the
 reduced configs (the mesh-scale serving path is lowered in the dry-run;
 these numbers verify the END-TO-END serve loop executes and give a CPU
-baseline for regression tracking)."""
+baseline for regression tracking).
+
+Also surfaces the federated runtime's per-round communication accounting
+for the serving tier: each replica refreshes its posterior (θ, η_G) from
+the training federation once per round, so the round-sync column is the
+bytes a replica pulls per refresh — raw and under int8 wire compression
+(``repro.federated.aggregation``)."""
 from __future__ import annotations
 
 import time
@@ -11,6 +17,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import print_table
 from repro.configs import get_config
+from repro.federated import Int8Compressor, NoCompression
 from repro.launch import steps as S
 
 
@@ -52,13 +59,20 @@ def run(quick: bool = True) -> dict:
             tok = jnp.argmax(lg[:, -1], axis=-1)
         jax.block_until_ready(tok)
         t_dec = time.perf_counter() - t0
+        sync_tree = {"theta": state.theta, "eta_G": state.eta_G}
+        raw_b = NoCompression().wire_bytes(sync_tree)
+        int8_b = Int8Compressor().wire_bytes(sync_tree)
         rows.append({
             "arch": cfg.name,
             "prefill tok/s": f"{B * P / t_pre:.0f}",
             "decode tok/s": f"{B * G / t_dec:.0f}",
+            "sync MiB/round": f"{raw_b / 2**20:.1f}",
+            "int8 MiB/round": f"{int8_b / 2**20:.1f}",
         })
-    print_table("CPU serving throughput (reduced configs, B=4)", rows,
-                ["arch", "prefill tok/s", "decode tok/s"])
+    print_table("CPU serving throughput (reduced configs, B=4) + per-round "
+                "posterior sync cost", rows,
+                ["arch", "prefill tok/s", "decode tok/s", "sync MiB/round",
+                 "int8 MiB/round"])
     return {"rows": len(rows)}
 
 

@@ -11,7 +11,8 @@ import argparse
 import time
 import traceback
 
-SUITES = ["hier_bnn", "prodlda", "glmm", "multinomial", "kernels", "serving", "roofline"]
+SUITES = ["hier_bnn", "prodlda", "glmm", "multinomial", "kernels", "serving",
+          "federated", "roofline"]
 
 
 def main() -> None:
@@ -47,6 +48,9 @@ def main() -> None:
             elif name == "serving":
                 from benchmarks import bench_serving
                 bench_serving.run(quick=quick)
+            elif name == "federated":
+                from benchmarks import bench_federated
+                bench_federated.run(quick=quick)
             elif name == "roofline":
                 from benchmarks import bench_roofline
                 bench_roofline.run(quick=quick)

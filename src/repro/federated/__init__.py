@@ -1,0 +1,44 @@
+"""Federated orchestration runtime (paper §3; docs/federated.md).
+
+The compiled client/server layer over the per-silo math of
+``repro.core.sfvi``: a :class:`~repro.federated.runtime.Server` advances
+J silos per round inside one ``shard_map`` graph along the dedicated
+``silo`` mesh axis, with pluggable aggregation
+(:class:`~repro.federated.aggregation.MeanAggregator`,
+:class:`~repro.federated.aggregation.TrimmedMeanAggregator`), wire
+compression (:class:`~repro.federated.aggregation.Int8Compressor`),
+partial-participation scheduling
+(:class:`~repro.federated.scheduler.RoundScheduler`) and per-round
+communication accounting (:class:`~repro.federated.runtime.CommMeter`).
+
+CLI: ``python -m repro.federated.run --model hier_bnn --silos 8``.
+"""
+from repro.federated.aggregation import (
+    Int8Compressor,
+    MeanAggregator,
+    NoCompression,
+    TrimmedMeanAggregator,
+)
+from repro.federated.driver import run_rounds
+from repro.federated.runtime import (
+    CommMeter,
+    Server,
+    global_eps,
+    silo_eps,
+    stack_silos,
+)
+from repro.federated.scheduler import RoundScheduler
+
+__all__ = [
+    "CommMeter",
+    "Int8Compressor",
+    "MeanAggregator",
+    "NoCompression",
+    "RoundScheduler",
+    "Server",
+    "TrimmedMeanAggregator",
+    "global_eps",
+    "run_rounds",
+    "silo_eps",
+    "stack_silos",
+]

@@ -1,0 +1,64 @@
+"""Generic metered round loop for step-function federations.
+
+The SPMD LLM path (``launch/train.py``) virtualizes its server into a
+GSPMD psum inside a jitted step function, so it cannot use
+:class:`~repro.federated.runtime.Server` (which owns the round graph
+itself) — but it still wants the same per-round communication accounting
+and logging hooks. ``run_rounds`` is that loop: advance a step over a
+batch stream, bill a fixed (up, down) cost per round into a
+:class:`CommMeter`, collect metrics. ``Server.run`` keeps its own loop
+because its billing depends on the realized participation mask.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+from repro.federated.runtime import CommMeter
+
+PyTree = Any
+StepFn = Callable[[PyTree, Any, int], Tuple[PyTree, Dict[str, Any]]]
+MetricsHook = Callable[[int, Dict[str, Any], PyTree], None]
+
+
+def run_rounds(
+    step_fn: StepFn,
+    state: PyTree,
+    batches: Iterable[Any],
+    *,
+    meter: Optional[CommMeter] = None,
+    bytes_per_round: Tuple[int, int] = (0, 0),
+    on_metrics: Optional[MetricsHook] = None,
+) -> Tuple[PyTree, Dict[str, list]]:
+    """Drive ``state`` through ``step_fn`` once per batch.
+
+    Args:
+      step_fn: ``(state, batch, round_idx) -> (state, metrics)``; metrics
+        values must be scalar-convertible.
+      state: initial pytree, threaded through every step.
+      batches: one element per round (list, generator, ...).
+      meter: optional :class:`CommMeter`; ``bytes_per_round`` is the
+        (up, down) cost recorded per round.
+      on_metrics: per-round hook ``(round_idx, metrics, state)`` for
+        logging or checkpointing; ``state`` is the post-step state.
+        Metrics arrive as the step's raw (possibly still-on-device)
+        scalars so the hook decides when to block — formatting a value
+        syncs it; ignoring it keeps dispatch async.
+
+    Returns the final state and a dict of per-round metric lists
+    (floats, materialized once after the loop so the loop itself never
+    forces a host-device sync).
+    """
+    raw_history: list = []
+    up1, down1 = bytes_per_round
+    for i, batch in enumerate(batches):
+        state, metrics = step_fn(state, batch, i)
+        if meter is not None:
+            meter.record(up1, down1)
+        raw_history.append(metrics)
+        if on_metrics:
+            on_metrics(i, metrics, state)
+    history: Dict[str, list] = {}
+    for metrics in raw_history:
+        for k, v in metrics.items():
+            history.setdefault(k, []).append(float(v))
+    return state, history

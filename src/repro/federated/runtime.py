@@ -1,0 +1,505 @@
+"""Compiled federated orchestration: Algorithms 1 & 2 as ONE sharded graph.
+
+The host-level runtime (``repro.core.runtime``) exchanges explicit Python
+message dicts — faithful to the protocol, but it executes silos serially
+and re-enters Python every round. This module is the scale path: all J
+silos advance together inside a single ``shard_map`` over the dedicated
+``silo`` mesh axis (``launch.mesh.make_silo_mesh``), with the server
+virtualized into collectives:
+
+  * silo state (η_{L_j}, its optimizer, its data shard) is stacked along
+    a leading axis of size J and sharded over ``silo`` — privacy by
+    placement, exactly as in ``launch/steps.py``;
+  * the silo→server ship of (g_j^θ, g_j^η) (SFVI) or (θ^(j), η_G^(j))
+    (SFVI-Avg) is an ``all_gather`` over ``silo``, with a pluggable
+    :mod:`~repro.federated.aggregation` compressor applied *before* the
+    collective so quantization reduces real bytes-on-wire;
+  * the server reduction is a pluggable aggregator (mean, trimmed mean)
+    evaluated redundantly on every device (standard SPMD replication).
+
+One compiled round covers ``local_steps`` optimizer steps for both
+algorithms, which makes the §3.2 communication claim directly measurable:
+SFVI synchronizes after every step (``local_steps`` gathers per round)
+while SFVI-Avg gathers once per round after ``local_steps`` local VI
+steps on the N/N_j-rescaled objective.
+
+Randomness: the server broadcasts only a per-round PRNG key. ε_G at local
+step t is derived from (round_key, t) and therefore *shared* by all silos
+(common-random-numbers — replaces the ε_G broadcast of Algorithm 1 with
+zero wire bytes); ε_{L_j} additionally folds in the silo id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sfvi import SFVIProblem
+from repro.core.families import DiagGaussian
+from repro.federated.aggregation import MeanAggregator, NoCompression
+from repro.federated.scheduler import RoundScheduler
+from repro.launch.mesh import make_silo_mesh
+from repro.optim.base import GradientTransformation, apply_updates
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shared-randomness helpers (exported: tests replay the exact draws)
+# ---------------------------------------------------------------------------
+
+
+def global_eps(problem: SFVIProblem, round_key: jnp.ndarray, t) -> jnp.ndarray:
+    """ε_G for local step ``t`` of a round — identical on every silo."""
+    return jax.random.normal(
+        jax.random.fold_in(round_key, t), (problem.model.global_dim,)
+    )
+
+
+def silo_eps(problem: SFVIProblem, round_key: jnp.ndarray, t, silo_id):
+    """ε_{L_j} for local step ``t`` on silo ``silo_id`` (None if Z_L = ∅)."""
+    if not problem.model.has_local:
+        return None
+    fam = problem.local_family
+    shape = (fam.batch, fam.dim) if hasattr(fam, "batch") else (fam.dim,)
+    key = jax.random.fold_in(jax.random.fold_in(round_key, 100_003 + t), silo_id)
+    return jax.random.normal(key, shape)
+
+
+def stack_silos(datas: Sequence[PyTree]) -> PyTree:
+    """Stack J per-silo data pytrees along a new leading silo axis.
+
+    All silos must share leaf shapes (equal-sized shards — what the
+    partitioners in ``repro.data.partition`` produce); ragged federations
+    pad to the max and mask inside ``log_local``.
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *datas)
+
+
+def _neg(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: -x, tree)
+
+
+def _add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def _select(keep, new: PyTree, old: PyTree) -> PyTree:
+    """Per-leaf ``where`` that preserves dtypes (masked silo-state update)."""
+    return jax.tree_util.tree_map(lambda n, o: jnp.where(keep, n, o), new, old)
+
+
+@dataclasses.dataclass
+class CommMeter:
+    """Algorithm-level bytes-on-wire accounting (host side, per round)."""
+
+    rounds: int = 0
+    bytes_up: int = 0  # silo -> server (post-compression)
+    bytes_down: int = 0  # server -> silo broadcast
+
+    def record(self, up: int, down: int) -> None:
+        """Log one round's realized (up, down) bytes."""
+        self.rounds += 1
+        self.bytes_up += int(up)
+        self.bytes_down += int(down)
+
+    @property
+    def total(self) -> int:
+        return self.bytes_up + self.bytes_down
+
+    @property
+    def per_round(self) -> float:
+        return self.total / max(self.rounds, 1)
+
+
+class Server:
+    """Round-based federation driver over a compiled multi-silo graph.
+
+    Owns the replicated server state (θ, η_G, server optimizer) and the
+    silo-sharded state (stacked η_{L_j} and local optimizer states), and
+    advances them one *round* at a time through a jitted ``shard_map``
+    graph. ``run(algorithm="sfvi")`` synchronizes every local step;
+    ``run(algorithm="sfvi_avg")`` runs ``local_steps`` local VI steps on
+    the N/N_j-rescaled objective and aggregates parameters once per round
+    (FedAvg for θ, Wasserstein barycenter — or parameter-space mean —
+    for η_G).
+
+    Args:
+      problem: the :class:`~repro.core.sfvi.SFVIProblem` to optimize.
+      datas: list of J per-silo data pytrees with equal leaf shapes.
+      theta: initial model parameters θ (``{}`` for fully-Bayesian).
+      eta_G: initial global variational parameters η_G.
+      num_obs: per-silo observation counts N_j (default: leading dim of
+        each silo's first data leaf) — drives SFVI-Avg's N/N_j rescale.
+      server_opt: optimizer for (θ, η_G). Descent convention; the runtime
+        flips signs to ascend the ELBO.
+      local_opt: optimizer for each η_{L_j} (state is stacked per silo).
+      aggregator: cross-silo combine rule (mean / trimmed mean / custom).
+      compressor: silo→server wire codec (identity / int8 quantization).
+      eta_mode: ``"barycenter"`` (paper §3.2; DiagGaussian only) or
+        ``"param"`` (FedAvg in parameter space) for SFVI-Avg's η_G merge.
+      mesh: optional silo mesh (default ``make_silo_mesh(J)``).
+      seed: base seed for the round key stream.
+    """
+
+    def __init__(
+        self,
+        problem: SFVIProblem,
+        datas: Sequence[PyTree],
+        theta: PyTree,
+        eta_G: PyTree,
+        *,
+        num_obs: Optional[Sequence[int]] = None,
+        server_opt: GradientTransformation,
+        local_opt: Optional[GradientTransformation] = None,
+        aggregator=None,
+        compressor=None,
+        eta_mode: str = "barycenter",
+        mesh=None,
+        seed: int = 0,
+    ):
+        self.problem = problem
+        self.J = len(datas)
+        self.data = stack_silos(datas)
+        self.aggregator = aggregator or MeanAggregator()
+        self.compressor = compressor or NoCompression()
+        self.mesh = mesh if mesh is not None else make_silo_mesh(self.J)
+        self.seed = seed
+        self._server_opt = server_opt
+        self._local_opt = local_opt
+        self._has_local = problem.model.has_local
+        if eta_mode not in ("barycenter", "param"):
+            raise ValueError(f"unknown eta_mode {eta_mode!r}")
+        if eta_mode == "barycenter" and not isinstance(
+            problem.global_family, DiagGaussian
+        ):
+            raise ValueError(
+                "in-graph barycenter aggregation is implemented for "
+                "DiagGaussian η_G; pass eta_mode='param' for other families"
+            )
+        self.eta_mode = eta_mode
+
+        if num_obs is None:
+            num_obs = [
+                int(jax.tree_util.tree_leaves(d)[0].shape[0]) for d in datas
+            ]
+        self.num_obs = np.asarray(num_obs, np.float32)
+
+        if self._has_local:
+            if local_opt is None:
+                raise ValueError("local_opt is required when the model has Z_L")
+            keys = jax.random.split(jax.random.PRNGKey(seed + 1), self.J)
+            eta_L = jax.vmap(problem.local_family.init)(keys)
+            opt_L = jax.vmap(local_opt.init)(eta_L)
+        else:
+            eta_L, opt_L = {}, {}
+        self.state: Dict[str, PyTree] = {
+            "theta": theta,
+            "eta_G": eta_G,
+            "eta_L": eta_L,
+            "opt_server": server_opt.init({"theta": theta, "eta_G": eta_G}),
+            "opt_local": opt_L,
+        }
+        self.comm = CommMeter()
+        self._round_fns: Dict[tuple, Callable] = {}
+
+    # -- convenience accessors (mirror the host runtime's attributes) -------
+
+    @property
+    def theta(self) -> PyTree:
+        """Current model parameters θ (replicated)."""
+        return self.state["theta"]
+
+    @property
+    def eta_G(self) -> PyTree:
+        """Current global variational parameters η_G (replicated)."""
+        return self.state["eta_G"]
+
+    @property
+    def eta_L(self) -> PyTree:
+        """Stacked per-silo variational parameters η_{L_j}, leading axis J."""
+        return self.state["eta_L"]
+
+    # -- wire accounting -----------------------------------------------------
+
+    def ship_template(self, algorithm: str) -> PyTree:
+        """Shape-only pytree of one silo's upload (pre-compression)."""
+        if algorithm == "sfvi":
+            return {"g_theta": self.state["theta"], "g_eta": self.state["eta_G"]}
+        return {"theta": self.state["theta"], "eta_G": self.state["eta_G"]}
+
+    def bytes_up_per_silo(self, algorithm: str) -> int:
+        """Post-compression upload bytes for one silo, one gather."""
+        return self.compressor.wire_bytes(self.ship_template(algorithm))
+
+    def bytes_down_per_silo(self) -> int:
+        """Broadcast bytes: (θ, η_G) raw; the round key is ~0 and elided."""
+        return NoCompression().wire_bytes(
+            {"theta": self.state["theta"], "eta_G": self.state["eta_G"]}
+        )
+
+    def compiled_collective_bytes(
+        self, algorithm: str = "sfvi", local_steps: int = 1
+    ) -> Dict[str, float]:
+        """Ring-traffic bytes per collective kind in the compiled round.
+
+        Lowers the jitted round function and applies
+        ``launch.roofline.collective_bytes`` to the optimized HLO. On a
+        single-device mesh XLA elides the collectives entirely (all
+        entries 0); run under a multi-device mesh (or the forced-host-
+        device trick of ``launch/comm.py``) for real numbers.
+        """
+        from repro.launch.roofline import collective_bytes
+
+        fn = self._get_round(algorithm, local_steps)
+        args = (
+            self.state,
+            self.data,
+            jax.random.PRNGKey(0),
+            jnp.ones((self.J,), jnp.float32),
+        )
+        return collective_bytes(fn.lower(*args).compile().as_text())
+
+    # -- the compiled round --------------------------------------------------
+
+    def _get_round(self, algorithm: str, local_steps: int) -> Callable:
+        key = (algorithm, local_steps)
+        if key not in self._round_fns:
+            if algorithm == "sfvi":
+                body = self._sfvi_body(local_steps)
+            elif algorithm == "sfvi_avg":
+                body = self._avg_body(local_steps)
+            else:
+                raise ValueError(f"unknown algorithm {algorithm!r}")
+            sharded = shard_map(
+                body,
+                mesh=self.mesh,
+                in_specs=(
+                    P(), P(), P(),  # theta, eta_G, opt_server (replicated)
+                    P("silo"), P("silo"),  # eta_L, opt_local
+                    P("silo"), P("silo"), P("silo"), P("silo"),  # data, sids, n_j, mask shard
+                    P(), P(),  # full mask (for aggregation), round key
+                ),
+                out_specs=(P(), P(), P(), P("silo"), P("silo"), P()),
+                check_rep=False,
+            )
+
+            def round_fn(state, data, round_key, mask):
+                sids = jnp.arange(self.J, dtype=jnp.int32)
+                n_j = jnp.asarray(self.num_obs)
+                theta, eta_G, opt_server, eta_L, opt_L, elbos = sharded(
+                    state["theta"], state["eta_G"], state["opt_server"],
+                    state["eta_L"], state["opt_local"],
+                    data, sids, n_j, mask, mask, round_key,
+                )
+                new_state = {
+                    "theta": theta, "eta_G": eta_G, "eta_L": eta_L,
+                    "opt_server": opt_server, "opt_local": opt_L,
+                }
+                return new_state, {"elbo": elbos}
+
+            self._round_fns[key] = jax.jit(round_fn)
+        return self._round_fns[key]
+
+    def _sfvi_body(self, K: int) -> Callable:
+        """Round = K synchronized steps: gather + server update every step."""
+        problem, J = self.problem, self.J
+        agg, comp = self.aggregator, self.compressor
+        server_opt, local_opt = self._server_opt, self._local_opt
+        has_local = self._has_local
+
+        def body(theta, eta_G, opt_server, eta_L, opt_L,
+                 data_sh, sids, n_j, mask_sh, mask_full, round_key):
+            del n_j  # SFVI needs no N/N_j rescale (likelihood_scale = 1)
+            n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
+
+            def sync_step(carry, t):
+                theta, eta_G, opt_server, eta_L, opt_L = carry
+                eps_G = global_eps(problem, round_key, t)
+
+                def per_silo(eta_Lj, opt_Lj, data_j, sid, m_j):
+                    el = eta_Lj if has_local else None
+                    eps_L = silo_eps(problem, round_key, t, sid)
+                    g_th, g_eta, g_loc, hatLj = problem.silo_grads(
+                        theta, eta_G, el, eps_G, eps_L, data_j
+                    )
+                    if has_local:
+                        upd, new_opt = local_opt.update(_neg(g_loc), opt_Lj, el)
+                        eta_Lj = _select(m_j > 0.5, apply_updates(el, upd), el)
+                        opt_Lj = _select(m_j > 0.5, new_opt, opt_Lj)
+                    ship = comp.encode({"g_theta": g_th, "g_eta": g_eta})
+                    return eta_Lj, opt_Lj, ship, hatLj * m_j
+
+                eta_L, opt_L, enc, hatL = jax.vmap(per_silo)(
+                    eta_L, opt_L, data_sh, sids, mask_sh
+                )
+                enc = jax.tree_util.tree_map(
+                    lambda x: jax.lax.all_gather(x, "silo", axis=0, tiled=True),
+                    enc,
+                )
+                shipped = jax.vmap(comp.decode)(enc)  # (J, ...) per leaf
+                hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
+
+                mean_g = agg.combine(shipped, mask_full)
+                g_sum = jax.tree_util.tree_map(lambda x: x * float(J), mean_g)
+                g_th0, g_eta0, hatL0 = problem.server_grads(theta, eta_G, eps_G)
+                g = {
+                    "theta": _add(g_sum["g_theta"], g_th0),
+                    "eta_G": _add(g_sum["g_eta"], g_eta0),
+                }
+                params = {"theta": theta, "eta_G": eta_G}
+                updates, opt_server = server_opt.update(_neg(g), opt_server, params)
+                merged = apply_updates(params, updates)
+                elbo = hatL0 + (float(J) / n_active) * hatL_sum
+                carry = (merged["theta"], merged["eta_G"], opt_server, eta_L, opt_L)
+                return carry, elbo
+
+            carry = (theta, eta_G, opt_server, eta_L, opt_L)
+            carry, elbos = jax.lax.scan(sync_step, carry, jnp.arange(K))
+            return (*carry, elbos)
+
+        return body
+
+    def _avg_body(self, K: int) -> Callable:
+        """Round = K local VI steps per silo, ONE gather + parameter merge."""
+        problem, J = self.problem, self.J
+        agg, comp = self.aggregator, self.compressor
+        server_opt, local_opt = self._server_opt, self._local_opt
+        has_local = self._has_local
+        eta_mode = self.eta_mode
+        total_obs = float(np.sum(self.num_obs))
+
+        def body(theta, eta_G, opt_server, eta_L, opt_L,
+                 data_sh, sids, n_j, mask_sh, mask_full, round_key):
+            n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
+
+            def per_silo(eta_Lj, opt_Lj, data_j, sid, m_j, n_obs_j):
+                scale = total_obs / n_obs_j  # §3.2 point 2: N / N_j
+                el0 = eta_Lj if has_local else None
+                s_state = server_opt.init({"theta": theta, "eta_G": eta_G})
+
+                def local_step(carry, t):
+                    th, eg, el, s_st, l_st = carry
+                    eps_G = global_eps(problem, round_key, t)
+                    eps_L = silo_eps(problem, round_key, t, sid)
+
+                    def objective(th_, eg_, el_):
+                        val = problem.hat_L0(th_, eg_, eps_G)
+                        return val + problem.hat_Lj(
+                            th_, eg_, el_, eps_G, eps_L, data_j, scale
+                        )
+
+                    if has_local:
+                        val, (g_th, g_eg, g_el) = jax.value_and_grad(
+                            objective, argnums=(0, 1, 2)
+                        )(th, eg, el)
+                        upd_l, l_st = local_opt.update(_neg(g_el), l_st, el)
+                        el = apply_updates(el, upd_l)
+                    else:
+                        val, (g_th, g_eg) = jax.value_and_grad(
+                            lambda a, b: objective(a, b, None), argnums=(0, 1)
+                        )(th, eg)
+                    params = {"theta": th, "eta_G": eg}
+                    upd_s, s_st = server_opt.update(
+                        _neg({"theta": g_th, "eta_G": g_eg}), s_st, params
+                    )
+                    merged = apply_updates(params, upd_s)
+                    return (merged["theta"], merged["eta_G"], el, s_st, l_st), val
+
+                carry = (theta, eta_G, el0, s_state, opt_Lj)
+                (th, eg, el, _, l_st), elbos = jax.lax.scan(
+                    local_step, carry, jnp.arange(K)
+                )
+                if has_local:
+                    eta_Lj = _select(m_j > 0.5, el, el0)
+                    opt_Lj = _select(m_j > 0.5, l_st, opt_Lj)
+                ship = comp.encode({"theta": th, "eta_G": eg})
+                return eta_Lj, opt_Lj, ship, elbos * m_j
+
+            eta_L, opt_L, enc, elbos = jax.vmap(per_silo)(
+                eta_L, opt_L, data_sh, sids, mask_sh, n_j
+            )
+            enc = jax.tree_util.tree_map(
+                lambda x: jax.lax.all_gather(x, "silo", axis=0, tiled=True), enc
+            )
+            shipped = jax.vmap(comp.decode)(enc)
+            elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
+
+            theta_new = agg.combine(shipped["theta"], mask_full)
+            if eta_mode == "param":
+                eta_new = agg.combine(shipped["eta_G"], mask_full)
+            else:
+                # Analytic diag-Gaussian W2 barycenter in moment space:
+                # mean of μ_j, mean of σ_j (core.barycenter.diag_barycenter)
+                # — robustified by whatever aggregator is plugged in.
+                mu = agg.combine(shipped["eta_G"]["mu"], mask_full)
+                sigma = agg.combine(
+                    jnp.exp(shipped["eta_G"]["log_sigma"]), mask_full
+                )
+                eta_new = {"mu": mu, "log_sigma": jnp.log(sigma)}
+            return theta_new, eta_new, opt_server, eta_L, opt_L, elbo_t
+
+        return body
+
+    # -- driver --------------------------------------------------------------
+
+    def run(
+        self,
+        num_rounds: int,
+        *,
+        algorithm: str = "sfvi",
+        local_steps: int = 1,
+        scheduler: Optional[RoundScheduler] = None,
+        callback: Optional[Callable[[int, dict], None]] = None,
+    ) -> Dict[str, list]:
+        """Advance the federation ``num_rounds`` rounds; returns history.
+
+        One round is ``local_steps`` optimizer steps: SFVI pays one
+        up+down exchange per step, SFVI-Avg one per round — the meter
+        (``self.comm``) records exactly that asymmetry. ``scheduler``
+        injects partial participation / straggler masks: uninvited silos
+        cost nothing; invited stragglers (dropout) receive the broadcast
+        (download is billed) but never upload, and the aggregation is
+        rescaled by the realized active count (unbiased, §3 Remark).
+        """
+        if local_steps < 1:
+            raise ValueError(f"local_steps must be >= 1, got {local_steps}")
+        fn = self._get_round(algorithm, local_steps)
+        sched = scheduler or RoundScheduler(self.J, seed=self.seed)
+        up1 = self.bytes_up_per_silo(algorithm)
+        down1 = self.bytes_down_per_silo()
+        exchanges = local_steps if algorithm == "sfvi" else 1
+        history: Dict[str, list] = {
+            "elbo": [], "elbo_trace": [], "bytes_up": [], "bytes_down": [],
+            "n_active": [],
+        }
+        base_key = jax.random.PRNGKey(self.seed)
+        for r in range(num_rounds):
+            mask = sched.mask(r)
+            n_active = int(np.sum(np.asarray(mask)))
+            # Stragglers received the broadcast before dropping: bill their
+            # download. Custom schedulers without invited() bill reporters.
+            invited = sched.invited(r) if hasattr(sched, "invited") else mask
+            n_invited = max(int(np.sum(np.asarray(invited))), n_active)
+            round_key = jax.random.fold_in(base_key, r)
+            self.state, metrics = fn(self.state, self.data, round_key, mask)
+            elbos = np.asarray(metrics["elbo"])
+            up = exchanges * n_active * up1
+            down = exchanges * n_invited * down1
+            self.comm.record(up, down)
+            history["elbo"].append(float(elbos[-1]))
+            history["elbo_trace"].extend(float(e) for e in elbos)
+            history["bytes_up"].append(up)
+            history["bytes_down"].append(down)
+            history["n_active"].append(n_active)
+            if callback:
+                callback(r, {
+                    "elbo": history["elbo"][-1], "bytes_up": up,
+                    "bytes_down": down, "n_active": n_active,
+                })
+        return history

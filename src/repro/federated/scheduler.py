@@ -1,0 +1,83 @@
+"""Round scheduling: which silos participate in which round.
+
+The scheduler is the scenario knob of the runtime: full participation
+reproduces the paper's Algorithms 1–2 exactly; ``participation < 1``
+samples a random subset per round (cross-device FL); ``dropout > 0``
+models stragglers that accept the round but fail to report back. Masks
+are deterministic functions of (seed, round index) so a schedule can be
+replayed — and so the compiled round function can take the mask as a
+plain (J,) array argument without retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundScheduler:
+    """Samples a per-round participation mask over J silos.
+
+    Attributes:
+      num_silos: J, the federation width.
+      participation: fraction of silos the server *invites* each round
+        (at least one silo is always invited).
+      dropout: probability that an invited silo straggles and drops out
+        of the round after receiving the broadcast (its upload never
+        arrives; the server rescales by the realized active count).
+      seed: PRNG seed for the schedule.
+    """
+
+    num_silos: int
+    participation: float = 1.0
+    dropout: float = 0.0
+    seed: int = 0
+
+    def _keys(self, round_idx: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
+        return jax.random.split(key)
+
+    def invited(self, round_idx: int) -> jnp.ndarray:
+        """(J,) float32 mask of silos the server *broadcasts to* this round.
+
+        Stragglers (``dropout``) are invited — they receive (θ, η_G) and
+        cost download bytes — but may still be absent from :meth:`mask`.
+        """
+        k_inv, _ = self._keys(round_idx)
+        J = self.num_silos
+        mask = np.ones((J,), np.float32)
+        if self.participation < 1.0:
+            n_inv = max(1, int(round(self.participation * J)))
+            chosen = np.asarray(
+                jax.random.choice(k_inv, J, shape=(n_inv,), replace=False)
+            )
+            mask = np.zeros((J,), np.float32)
+            mask[chosen] = 1.0
+        return jnp.asarray(mask)
+
+    def mask(self, round_idx: int) -> jnp.ndarray:
+        """(J,) float32 mask: 1.0 = silo reports this round, 0.0 = absent."""
+        _, k_drop = self._keys(round_idx)
+        J = self.num_silos
+        mask = np.asarray(self.invited(round_idx)).copy()
+        if self.dropout > 0.0:
+            survive = np.asarray(
+                jax.random.bernoulli(k_drop, 1.0 - self.dropout, (J,))
+            ).astype(np.float32)
+            dropped = mask * survive
+            # Never lose the whole round: keep the lowest-index invited silo.
+            mask = dropped if dropped.any() else _first_invited(mask)
+        return jnp.asarray(mask)
+
+    def masks(self, num_rounds: int) -> jnp.ndarray:
+        """(num_rounds, J) stacked schedule (for logging / tests)."""
+        return jnp.stack([self.mask(r) for r in range(num_rounds)])
+
+
+def _first_invited(mask: np.ndarray) -> np.ndarray:
+    out = np.zeros_like(mask)
+    out[int(np.argmax(mask))] = 1.0
+    return out

@@ -109,9 +109,19 @@ def flash_attention_bhsd(
     true_sq: Optional[int] = None,
     true_skv: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Core pallas_call. Sq/Skv must be multiples of the block sizes
-    (ops.flash_attention pads; ``true_*`` are the unpadded lengths used
-    for masking). Returns (B, H, Sq, hd)."""
+    """Flash attention over (batch, head)-major layout with online softmax.
+
+    Shapes: ``q`` is (B, H, Sq, hd); ``k``/``v`` are (B, KV, Skv, hd)
+    with KV ≤ H and H % KV == 0 (GQA: query head h reads kv head
+    h // (H // KV)); returns (B, H, Sq, hd) in ``q.dtype``. Sq/Skv must
+    be multiples of ``block_q``/``block_kv`` — ``ops.flash_attention``
+    pads and passes the unpadded lengths as ``true_sq``/``true_skv`` for
+    masking. Inputs may be bf16/f32; scores, the running max/normalizer
+    and the accumulator are f32 (VMEM scratch), cast back on the final
+    flush. ``causal``/``window`` masking skips fully-dead kv blocks at
+    block granularity. Reference implementation:
+    ``kernels/ref.py::flash_attention_ref``.
+    """
     B, H, Sq, hd = q.shape
     KV = k.shape[1]
     Skv = k.shape[2]

@@ -79,8 +79,18 @@ def gla_bhsd(
     chunk: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Core pallas_call; S must be a multiple of ``chunk`` (ops pads with
-    identity steps: log_a = 0, k/v = 0)."""
+    """Chunkwise gated linear attention over (batch, head)-major layout.
+
+    Shapes: ``q``/``k`` are (B, H, S, dk), ``v`` is (B, H, S, dv),
+    ``log_a`` is (B, H, S) per-step log decay (must be ≤ 0 for a stable
+    recurrence); returns (B, H, S, dv) in ``q.dtype``. S must be a
+    multiple of ``chunk`` — ``ops.gla`` pads with identity steps
+    (log_a = 0, k/v = 0, which neither read nor write the state). Inputs
+    may be bf16/f32; the (dk, dv) recurrent state and all matmuls run in
+    f32 VMEM scratch. The chunk axis of the grid is sequential, so the
+    state carries across grid steps per (b, h). Reference implementation:
+    ``kernels/ref.py::gla_chunk_ref`` (exact per-step recurrence).
+    """
     B, H, S, dk = q.shape
     dv = v.shape[-1]
     nc = S // chunk

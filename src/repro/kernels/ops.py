@@ -34,8 +34,17 @@ def flash_attention(
     block_kv: int = 128,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Layout adapter: (B, S, H, hd) API -> (B, H, S, hd) kernel, with
-    padding to block multiples (masked inside the kernel)."""
+    """Flash attention for (batch, seq, head)-major activations.
+
+    Shapes: ``q`` is (B, Sq, H, hd); ``k``/``v`` are (B, Skv, KV, hd)
+    with H % KV == 0 (GQA groups of H/KV query heads share a kv head);
+    returns (B, Sq, H, hd) in ``q.dtype`` (bf16/f32; softmax state is
+    f32 inside the kernel). ``window`` enables sliding-window masking
+    and ``q_offset`` positions the query block for decode. Pads Sq/Skv
+    to block multiples (masked inside the kernel) and adapts the layout
+    to the (B, H, S, hd) kernel. Reference implementation:
+    ``kernels/ref.py::flash_attention_ref``.
+    """
     interpret = INTERPRET if interpret is None else interpret
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
@@ -66,7 +75,14 @@ def _round_up(n: int, m: int) -> int:
 @partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
             block_rows: int = 256, interpret: Optional[bool] = None) -> jnp.ndarray:
-    """RMSNorm over the last axis for arbitrary leading shape."""
+    """RMSNorm over the last axis for arbitrary leading shape.
+
+    Shapes: ``x`` is (..., D) with any leading dims, ``weight`` is (D,);
+    returns (..., D) in ``x.dtype`` (bf16/f32; mean-of-squares in f32).
+    Flattens leading dims to rows and halves ``block_rows`` until it
+    divides the row count. Reference implementation:
+    ``kernels/ref.py::rmsnorm_ref``.
+    """
     interpret = INTERPRET if interpret is None else interpret
     lead = x.shape[:-1]
     D = x.shape[-1]
@@ -85,6 +101,14 @@ def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def reparam_stl(mu, log_sigma, eps, block: int = 4096,
                 interpret: Optional[bool] = None):
+    """Fused z = mu + exp(log_sigma)·eps and STL log q, one HBM pass.
+
+    Shapes: ``mu``/``log_sigma``/``eps`` are (N,) flattened latents of
+    equal length (f32; bf16 inputs are upcast per-block inside the
+    kernel); returns ``(z, logq)`` with z (N,) in ``mu.dtype`` and logq
+    a f32 scalar. Differentiable (fused custom VJP). Reference
+    implementation: ``kernels/ref.py::reparam_stl_ref``.
+    """
     interpret = INTERPRET if interpret is None else interpret
     return _reparam_stl(mu, log_sigma, eps, block=block, interpret=interpret)
 
@@ -93,9 +117,14 @@ def reparam_stl(mu, log_sigma, eps, block: int = 4096,
 def gla(q, k, v, log_a, chunk: int = 128, interpret: Optional[bool] = None):
     """Gated linear attention (Mamba2-SSD/mLSTM recurrence).
 
-    q/k: (B, S, H, dk); v: (B, S, H, dv); log_a: (B, S, H). Pads S to a
-    chunk multiple with identity steps (log_a = 0, k/v = 0 -> the padded
-    steps neither read nor write the state)."""
+    Shapes: ``q``/``k`` are (B, S, H, dk); ``v`` is (B, S, H, dv);
+    ``log_a`` is (B, S, H) per-step log decay (≤ 0); returns
+    (B, S, H, dv) in ``q.dtype`` (bf16/f32; the recurrent state is f32).
+    Pads S to a chunk multiple with identity steps (log_a = 0, k/v = 0 →
+    the padded steps neither read nor write the state) and adapts the
+    layout to the (B, H, S, ·) kernel. Reference implementation:
+    ``kernels/ref.py::gla_chunk_ref``.
+    """
     interpret = INTERPRET if interpret is None else interpret
     B, S, H, dk = q.shape
     chunk = min(chunk, _round_up(S, 8))

@@ -61,11 +61,19 @@ def reparam_stl(
     block: int = 4096,
     interpret: bool = False,
 ):
-    """Returns (z, logq_scalar). Pads internally to a block multiple; the
-    pad contributes 0 to logq via eps=0, log_sigma=0 padding and the
-    -0.5log2pi constant is corrected analytically. Differentiable via a
-    fused Pallas backward kernel (custom VJP — the STL stop-gradient is
-    structural: logq's pathwise term never references mu/log_sigma)."""
+    """Fused Gaussian reparametrization + STL log q in one HBM pass.
+
+    Shapes: ``mu``, ``log_sigma``, ``eps`` are (N,) flattened latent
+    vectors of matching length; returns ``(z, logq)`` with z (N,) in
+    ``mu.dtype`` and logq a f32 scalar (the block partials are reduced
+    in f32 regardless of input dtype). Pads internally to a ``block``
+    multiple; the pad contributes 0 to logq via eps=0, log_sigma=0
+    padding and the −0.5·log 2π constant is corrected analytically.
+    Differentiable via a fused Pallas backward kernel (custom VJP — the
+    STL stop-gradient is structural: logq's pathwise term never
+    references mu/log_sigma). Reference implementation:
+    ``kernels/ref.py::reparam_stl_ref`` (elementwise logq; sum to match).
+    """
     return _reparam_stl_vjp(mu, log_sigma, eps, block, interpret)
 
 

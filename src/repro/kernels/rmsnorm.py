@@ -27,6 +27,16 @@ def rmsnorm_rows(
     block_rows: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    """Row-blocked RMSNorm: ``x * rsqrt(mean(x², -1) + eps) * weight``.
+
+    Shapes: ``x`` is (R, D) — callers flatten leading dims (see
+    ``ops.rmsnorm``) — and ``weight`` is (D,); returns (R, D) in
+    ``x.dtype``. R must be divisible by ``block_rows`` (the wrapper
+    halves the block until it divides). Any float dtype is accepted;
+    the reduction and scale are computed in f32 and cast back on store,
+    so bf16 inputs lose no precision in the mean-of-squares. Reference
+    implementation: ``kernels/ref.py::rmsnorm_ref``.
+    """
     R, D = x.shape
     block_rows = min(block_rows, R)
     assert R % block_rows == 0, (R, block_rows)

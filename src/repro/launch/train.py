@@ -23,6 +23,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import make_token_stream
 from repro.checkpoint.io import CheckpointManager
+from repro.federated import CommMeter, NoCompression, run_rounds
 from repro.launch import steps as S
 from repro.models.backbone import transformer as T
 
@@ -88,28 +89,54 @@ def main(argv=None):
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
-    for i in range(args.steps):
-        batch = {
-            "tokens": jnp.asarray(toks[i, :, :-1]),
-            "labels": jnp.asarray(toks[i, :, 1:]),
-        }
-        if cfg.is_encoder_decoder:
-            batch["frames"] = jax.random.normal(
-                jax.random.fold_in(key, i),
-                (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
-        if cfg.num_vision_tokens:
-            batch["vision"] = jax.random.normal(
-                jax.random.fold_in(key, i),
-                (args.batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
-        state, metrics = step_fn(state, batch, jnp.int32(i))
+
+    def batches():
+        for i in range(args.steps):
+            batch = {
+                "tokens": jnp.asarray(toks[i, :, :-1]),
+                "labels": jnp.asarray(toks[i, :, 1:]),
+            }
+            if cfg.is_encoder_decoder:
+                batch["frames"] = jax.random.normal(
+                    jax.random.fold_in(key, i),
+                    (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+            if cfg.num_vision_tokens:
+                batch["vision"] = jax.random.normal(
+                    jax.random.fold_in(key, i),
+                    (args.batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32)
+            yield batch
+
+    def on_metrics(i, m, st):
         if i % args.log_every == 0 or i == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
             print(f"step {i:4d} loss={m['loss']:.4f} "
                   + " ".join(f"{k}={v:.4f}" for k, v in m.items() if k != "loss")
                   + f" ({time.time()-t0:.1f}s)")
         if ckpt and (i + 1) % 50 == 0:
-            ckpt.save(i + 1, {"theta": state.theta, "eta_G": state.eta_G})
-    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+            ckpt.save(i + 1, {"theta": st.theta, "eta_G": st.eta_G})
+
+    # On the SPMD mesh a "round" is one synchronized step: every silo ships
+    # its global-shaped gradient tree to the virtual server (the psum).
+    # SFVI-Avg amortizes that over --avg-every local steps. Under --algo avg
+    # state.eta_G is silo-stacked (silos, n_G): each silo ships only its own
+    # slice, so the per-silo cost divides the stacked size by --silos.
+    meter = CommMeter()
+    theta_bytes = NoCompression().wire_bytes({"theta": state.theta})
+    eta_bytes = NoCompression().wire_bytes({"eta_G": state.eta_G})
+    if args.algo == "avg":
+        per_silo = theta_bytes + eta_bytes // args.silos
+    else:
+        per_silo = theta_bytes + eta_bytes
+    syncs_per_step = 1.0 if args.algo == "sfvi" else 1.0 / args.avg_every
+    per_round = int(args.silos * per_silo * syncs_per_step)
+
+    state, _ = run_rounds(
+        lambda st, batch, i: step_fn(st, batch, jnp.int32(i)),
+        state, batches(), meter=meter,
+        bytes_per_round=(per_round, per_round), on_metrics=on_metrics,
+    )
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+          f"comm {meter.total/2**20:.1f} MiB "
+          f"({meter.per_round/2**20:.2f} MiB/step, algo={args.algo})")
     return state
 
 

@@ -1,0 +1,96 @@
+"""Shared federation fixtures for the paper's §4 experiments.
+
+One place for the synthetic-data protocols and evaluation conventions so
+the example scripts, the benchmark suite and the ``repro.federated.run``
+CLI cannot silently diverge: all three build their silos here.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (
+    heterogeneous_label_partition,
+    make_lda_corpus,
+    make_synthetic_mnist,
+)
+from repro.models.paper.hier_bnn import HierBNN, build_hier_bnn
+from repro.models.paper.prodlda import ProdLDA, build_prodlda
+
+
+def hier_bnn_federation(
+    seed: int,
+    num_silos: int,
+    *,
+    fedpop: bool = False,
+    in_dim: int = 196,
+    hidden: int = 32,
+    train_per_silo: int = 200,
+    test_per_silo: int = 40,
+    prototype_scale: float = 1.0,
+    noise_scale: float = 2.5,
+) -> Tuple[HierBNN, List[dict], List[dict]]:
+    """§4.1 protocol: synthetic MNIST under 90%-one-label heterogeneity.
+
+    Returns ``(bnn, train, test)`` where train/test are J per-silo dicts
+    with equal-shaped ``x``/``y`` leaves, ready for ``federated.Server``.
+    """
+    key = jax.random.PRNGKey(seed)
+    tr, te = make_synthetic_mnist(
+        key, train_per_silo * num_silos, test_per_silo * num_silos,
+        dim=in_dim, prototype_scale=prototype_scale, noise_scale=noise_scale,
+    )
+    rng = np.random.default_rng(seed)
+    parts_tr = heterogeneous_label_partition(rng, tr.y, num_silos)
+    parts_te = heterogeneous_label_partition(rng, te.y, num_silos)
+    train = [{"x": jnp.asarray(tr.x[p]), "y": jnp.asarray(tr.y[p])}
+             for p in parts_tr]
+    test = [{"x": jnp.asarray(te.x[p]), "y": jnp.asarray(te.y[p])}
+            for p in parts_te]
+    bnn = build_hier_bnn(in_dim=in_dim, hidden=hidden, fedpop=fedpop)
+    return bnn, train, test
+
+
+def bnn_posterior_accuracy(
+    bnn: HierBNN, eta_G: dict, eta_L_stacked: dict, test: List[dict]
+) -> Tuple[float, float]:
+    """Per-silo posterior-mean test accuracy (MC-1 at the mean).
+
+    ``eta_L_stacked`` carries a leading silo axis (``Server.eta_L``
+    layout). Returns (mean, std) over silos.
+    """
+    accs = []
+    for j in range(len(test)):
+        eta_Lj = jax.tree_util.tree_map(lambda x: x[j], eta_L_stacked)
+        accs.append(float(bnn.accuracy(
+            eta_G["mu"], eta_Lj["mu_bar"], test[j]["x"], test[j]["y"])))
+    return float(np.mean(accs)), float(np.std(accs))
+
+
+def prodlda_federation(
+    seed: int,
+    num_silos: int,
+    *,
+    vocab_size: int = 300,
+    num_topics: int = 8,
+    docs_per_silo: int = 40,
+) -> Tuple[ProdLDA, List[dict], np.ndarray]:
+    """§4.2 protocol: synthetic LDA corpus split into equal doc shards.
+
+    Returns ``(lda, datas, counts)`` — counts is the full (docs, vocab)
+    matrix for coherence evaluation.
+    """
+    counts, _ = make_lda_corpus(
+        jax.random.PRNGKey(seed), num_docs=num_silos * docs_per_silo,
+        vocab_size=vocab_size, num_topics=num_topics,
+    )
+    lda = build_prodlda(vocab_size=vocab_size, num_topics=num_topics,
+                        docs_per_silo=docs_per_silo)
+    datas = [
+        {"counts": jnp.asarray(counts[j * docs_per_silo:(j + 1) * docs_per_silo])}
+        for j in range(num_silos)
+    ]
+    return lda, datas, np.asarray(counts)

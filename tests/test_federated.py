@@ -1,0 +1,248 @@
+"""Tests for the compiled federated runtime (repro.federated).
+
+Covers the two correctness anchors from the paper:
+  * partition invariance (§3 Remark): one Server SFVI round applies exactly
+    the centralized gradient of ``SFVIProblem.centralized_objective``;
+  * SFVI-Avg degenerates to SFVI at K=1 (§3.2): with SGD, equal silo
+    sizes and parameter-space averaging the round maps are identical.
+plus the aggregation/compression/scheduling plumbing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConditionalGaussian,
+    DiagGaussian,
+    SFVIProblem,
+    StructuredModel,
+)
+from repro.federated import (
+    Int8Compressor,
+    MeanAggregator,
+    NoCompression,
+    RoundScheduler,
+    Server,
+    TrimmedMeanAggregator,
+    global_eps,
+    silo_eps,
+)
+from repro.optim.adam import adam
+from repro.optim.sgd import sgd
+
+
+def _hier_problem(dG=3, dL=2, use_coupling=False):
+    def log_prior_global(theta, zg):
+        return -0.5 * jnp.sum((zg - theta["m"]) ** 2)
+
+    def log_local(theta, zg, zl, data):
+        lp = -0.5 * jnp.sum((zl - jnp.mean(zg)) ** 2)
+        ll = -0.5 * jnp.sum((data["y"] - zl[None, :]) ** 2) * jnp.exp(theta["lt"])
+        return lp + ll
+
+    model = StructuredModel(
+        global_dim=dG, local_dim=dL,
+        log_prior_global=log_prior_global, log_local=log_local,
+    )
+    return SFVIProblem(
+        model, DiagGaussian(dG), ConditionalGaussian(dL, dG, use_coupling=use_coupling)
+    )
+
+
+def _global_only_problem(dG=3):
+    model = StructuredModel(
+        global_dim=dG, local_dim=0,
+        log_prior_global=lambda th, zg: -0.5 * jnp.sum((zg - th["m"]) ** 2),
+        log_local=lambda th, zg, zl, d: -0.5 * jnp.sum((d["y"] - zg[None, :]) ** 2),
+    )
+    return SFVIProblem(model, DiagGaussian(dG))
+
+
+def _datas(key, J, n, d):
+    return [
+        {"y": jax.random.normal(jax.random.fold_in(key, j), (n, d))}
+        for j in range(J)
+    ]
+
+
+def _flat(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,))
+    return jnp.concatenate([jnp.ravel(x) for x in leaves])
+
+
+class TestPartitionInvariance:
+    @pytest.mark.parametrize("J", [1, 3, 5])
+    def test_server_round_matches_centralized_gradient(self, J):
+        """One SFVI round with SGD(lr) moves (θ, η_G) by exactly
+        lr · ∇ of the centralized single-graph objective."""
+        lr = 0.05
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.3), "lt": jnp.asarray(-0.5)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1), mu_scale=0.5)
+        datas = _datas(jax.random.PRNGKey(2), J, n=4, d=2)
+
+        srv = Server(prob, datas, theta, eta_G,
+                     server_opt=sgd(lr), local_opt=sgd(lr), seed=7)
+        eta_L0 = jax.tree_util.tree_map(jnp.copy, srv.eta_L)
+        srv.run(1, algorithm="sfvi", local_steps=1)
+
+        # Replay the exact shared-randomness draws of round 0, step 0.
+        round_key = jax.random.fold_in(jax.random.PRNGKey(7), 0)
+        eps_G = global_eps(prob, round_key, 0)
+        eps_L = [silo_eps(prob, round_key, 0, j) for j in range(J)]
+        etas_L = [jax.tree_util.tree_map(lambda x: x[j], eta_L0) for j in range(J)]
+
+        g_th, g_eta = jax.grad(
+            lambda th, eg: prob.centralized_objective(
+                th, eg, etas_L, eps_G, eps_L, datas),
+            argnums=(0, 1),
+        )(theta, eta_G)
+
+        np.testing.assert_allclose(
+            _flat(srv.theta), _flat(theta) + lr * _flat(g_th), rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(
+            _flat(srv.eta_G), _flat(eta_G) + lr * _flat(g_eta), rtol=2e-4, atol=2e-5)
+
+    def test_elbo_improves_with_adam(self):
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        srv = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                     server_opt=adam(2e-2), local_opt=adam(2e-2))
+        h = srv.run(30, algorithm="sfvi", local_steps=2)
+        assert h["elbo"][-1] > h["elbo"][0]
+
+
+class TestAvgEqualsSfviAtK1:
+    def test_full_state_equality_global_only(self):
+        """No local latents: the K=1 SFVI-Avg round map IS the SFVI round
+        map (SGD, equal N_j, parameter-space η_G merge)."""
+        lr = 0.03
+        prob = _global_only_problem()
+        theta = {"m": jnp.asarray(0.2)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(3), mu_scale=0.4)
+        datas = _datas(jax.random.PRNGKey(4), 4, n=5, d=3)
+
+        kw = dict(server_opt=sgd(lr), eta_mode="param", seed=11)
+        a = Server(prob, datas, theta, eta_G, **kw)
+        b = Server(prob, datas, theta, eta_G, **kw)
+        a.run(3, algorithm="sfvi", local_steps=1)
+        b.run(3, algorithm="sfvi_avg", local_steps=1)
+
+        np.testing.assert_allclose(_flat(a.theta), _flat(b.theta), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(_flat(a.eta_G), _flat(b.eta_G), rtol=1e-5, atol=1e-6)
+
+    def test_server_state_equality_with_locals(self):
+        """With local latents, (θ, η_G) still agree after one K=1 round:
+        mean_j[∇(L̂_0 + (N/N_j) L̂_j)] = ∇L̂_0 + Σ_j ∇L̂_j for equal N_j."""
+        lr = 0.03
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.1), "lt": jnp.asarray(-0.2)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(5), mu_scale=0.4)
+        datas = _datas(jax.random.PRNGKey(6), 3, n=4, d=2)
+
+        kw = dict(server_opt=sgd(lr), local_opt=sgd(lr), eta_mode="param", seed=13)
+        a = Server(prob, datas, theta, eta_G, **kw)
+        b = Server(prob, datas, theta, eta_G, **kw)
+        a.run(1, algorithm="sfvi", local_steps=1)
+        b.run(1, algorithm="sfvi_avg", local_steps=1)
+
+        np.testing.assert_allclose(_flat(a.theta), _flat(b.theta), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(_flat(a.eta_G), _flat(b.eta_G), rtol=1e-5, atol=1e-6)
+
+    def test_avg_improves_elbo(self):
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        srv = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                     server_opt=adam(2e-2), local_opt=adam(2e-2))
+        h = srv.run(10, algorithm="sfvi_avg", local_steps=8)
+        assert h["elbo"][-1] > h["elbo"][0]
+
+
+class TestAggregation:
+    def test_mean_respects_mask(self):
+        stacked = {"g": jnp.asarray([[1.0], [3.0], [100.0]])}
+        mask = jnp.asarray([1.0, 1.0, 0.0])
+        out = MeanAggregator().combine(stacked, mask)
+        np.testing.assert_allclose(out["g"], [2.0])
+
+    def test_trimmed_mean_drops_outlier(self):
+        stacked = {"g": jnp.asarray([[1.0], [2.0], [3.0], [1000.0]])}
+        mask = jnp.ones((4,))
+        out = TrimmedMeanAggregator(trim_frac=0.25).combine(stacked, mask)
+        np.testing.assert_allclose(out["g"], [2.5])  # drops 1.0 and 1000.0
+
+    def test_trimmed_mean_excludes_inactive(self):
+        stacked = {"g": jnp.asarray([[1.0], [2.0], [jnp.inf]])}
+        mask = jnp.asarray([1.0, 1.0, 0.0])
+        out = TrimmedMeanAggregator(trim_frac=0.0).combine(stacked, mask)
+        np.testing.assert_allclose(out["g"], [1.5])
+
+
+class TestCompression:
+    def test_int8_roundtrip_and_bytes(self):
+        tree = {"a": jnp.linspace(-1.0, 1.0, 256), "b": jnp.ones((8, 8))}
+        comp = Int8Compressor()
+        dec = comp.decode(comp.encode(tree))
+        np.testing.assert_allclose(dec["a"], tree["a"], atol=1.0 / 127 + 1e-6)
+        np.testing.assert_allclose(dec["b"], tree["b"], atol=1.0 / 127 + 1e-6)
+        assert comp.wire_bytes(tree) < NoCompression().wire_bytes(tree)
+
+    def test_int8_inside_server_still_converges(self):
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        srv = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                     server_opt=adam(2e-2), local_opt=adam(2e-2),
+                     compressor=Int8Compressor())
+        h = srv.run(30, algorithm="sfvi", local_steps=2)
+        assert h["elbo"][-1] > h["elbo"][0]
+        raw = NoCompression().wire_bytes(srv.ship_template("sfvi"))
+        assert srv.bytes_up_per_silo("sfvi") < raw
+
+
+class TestScheduling:
+    def test_masks_are_deterministic(self):
+        s = RoundScheduler(8, participation=0.5, dropout=0.2, seed=3)
+        np.testing.assert_array_equal(s.mask(5), s.mask(5))
+
+    def test_participation_counts(self):
+        s = RoundScheduler(8, participation=0.5, seed=0)
+        m = np.asarray(s.masks(20))
+        assert (m.sum(axis=1) == 4).all()
+
+    def test_never_empty_round(self):
+        s = RoundScheduler(4, participation=0.25, dropout=0.99, seed=0)
+        m = np.asarray(s.masks(50))
+        assert (m.sum(axis=1) >= 1).all()
+
+    def test_partial_participation_round_runs(self):
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        srv = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                     server_opt=adam(2e-2), local_opt=adam(2e-2))
+        h = srv.run(10, algorithm="sfvi", local_steps=1,
+                    scheduler=RoundScheduler(4, participation=0.5, seed=1))
+        assert all(n == 2 for n in h["n_active"])
+        assert srv.comm.bytes_up < 10 * 4 * srv.bytes_up_per_silo("sfvi") + 1
+
+
+class TestCommAccounting:
+    def test_sfvi_pays_per_step_avg_pays_per_round(self):
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        K = 5
+        a = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                   server_opt=adam(2e-2), local_opt=adam(2e-2))
+        b = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                   server_opt=adam(2e-2), local_opt=adam(2e-2))
+        a.run(2, algorithm="sfvi", local_steps=K)
+        b.run(2, algorithm="sfvi_avg", local_steps=K)
+        assert a.comm.per_round == K * b.comm.per_round
+        assert b.comm.total < a.comm.total

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed; pip install -e .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

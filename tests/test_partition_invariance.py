@@ -4,6 +4,8 @@ centralized gradient, for any partition."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed; pip install -e .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
