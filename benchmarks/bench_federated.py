@@ -1,36 +1,57 @@
-"""Federated-runtime scenario sweep (paper §3.2 + robustness scenarios).
+"""Federated-runtime scenario sweep (paper §3.2 + robustness + privacy).
 
 Runs the hierarchical BNN through ``repro.federated.Server`` under the
 scenario grid the runtime exposes — sync cadence (SFVI vs SFVI-Avg),
-wire compression (int8), robust aggregation (trimmed mean) and partial
-participation with stragglers — and reports final ELBO, test accuracy
-and per-round communication. This is the communication-accounting
-surface the acceptance claim of §3.2 reads from.
+wire compression (int8), robust aggregation (trimmed mean), partial
+participation with stragglers, and differentially private rounds — and
+reports final ELBO, test accuracy, per-round communication, per-round
+wall time and cumulative ε. This is the communication/privacy accounting
+surface the §3.2 acceptance claim reads from.
+
+``privacy_utility_sweep`` traces the ε↔utility frontier: one row per
+noise multiplier, ε vs ELBO vs accuracy vs wire bytes.
 """
 from __future__ import annotations
+
+import math
+import time
 
 import jax
 
 from benchmarks.common import print_table
-from repro.federated import (
-    Int8Compressor,
-    MeanAggregator,
-    NoCompression,
-    RoundScheduler,
-    Server,
-    TrimmedMeanAggregator,
-)
+from repro.federated import Scenario, Server
 from repro.models.paper.fixtures import bnn_posterior_accuracy, hier_bnn_federation
 from repro.optim import adam
 
+# The same declarative Scenario the CLI's --sweep walks (scheduler.py);
+# row labels come from Scenario.name.
 SCENARIOS = [
-    # (name, algorithm, aggregator, compressor, scheduler-kwargs)
-    ("SFVI", "sfvi", MeanAggregator(), NoCompression(), {}),
-    ("SFVI-Avg", "sfvi_avg", MeanAggregator(), NoCompression(), {}),
-    ("SFVI-Avg+int8", "sfvi_avg", MeanAggregator(), Int8Compressor(), {}),
-    ("SFVI trimmed 50%part", "sfvi", TrimmedMeanAggregator(0.1), NoCompression(),
-     {"participation": 0.5, "dropout": 0.1}),
+    Scenario(algorithm="sfvi"),
+    Scenario(algorithm="sfvi_avg"),
+    Scenario(algorithm="sfvi_avg", compression="int8"),
+    Scenario(algorithm="sfvi", aggregator="trimmed", trim_frac=0.1,
+             participation=0.5, dropout=0.1),
+    Scenario(algorithm="sfvi_avg", dp_noise=1.0),
+    Scenario(algorithm="sfvi_avg", dp_noise=1.0, compression="int8",
+             participation=0.5),
 ]
+
+
+def _fit(bnn, train, test, sc: Scenario, *, J, rounds, local, lr, seed):
+    prob = bnn.problem
+    srv = Server(
+        prob, train, {}, prob.global_family.init(jax.random.PRNGKey(seed)),
+        server_opt=adam(lr), local_opt=adam(lr),
+        aggregator=sc.make_aggregator(), compressor=sc.compressor(),
+        privacy=sc.privacy(), seed=seed,
+    )
+    t0 = time.time()
+    hist = srv.run(rounds, algorithm=sc.algorithm, local_steps=local,
+                   scheduler=sc.scheduler(J, seed=seed))
+    dt = time.time() - t0
+    acc, _ = bnn_posterior_accuracy(bnn, srv.eta_G, srv.eta_L, test)
+    eps = hist["epsilon"][-1] if "epsilon" in hist else math.inf
+    return srv, hist, acc, eps, dt
 
 
 def run(quick: bool = True, seed: int = 0) -> dict:
@@ -41,38 +62,72 @@ def run(quick: bool = True, seed: int = 0) -> dict:
     bnn, train, test = hier_bnn_federation(seed=seed, num_silos=J)
 
     rows, out = [], {}
-    for name, algo, agg, comp, sched_kw in SCENARIOS:
-        prob = bnn.problem
-        srv = Server(
-            prob, train, {}, prob.global_family.init(jax.random.PRNGKey(seed)),
-            server_opt=adam(lr), local_opt=adam(lr),
-            aggregator=agg, compressor=comp, seed=seed,
-        )
-        sched = RoundScheduler(J, seed=seed, **sched_kw)
-        hist = srv.run(rounds, algorithm=algo, local_steps=local, scheduler=sched)
-        acc, _ = bnn_posterior_accuracy(bnn, srv.eta_G, srv.eta_L, test)
+    for sc in SCENARIOS:
+        srv, hist, acc, eps, dt = _fit(
+            bnn, train, test, sc, J=J, rounds=rounds, local=local, lr=lr,
+            seed=seed)
         rows.append({
-            "Scenario": name,
+            "Scenario": sc.name,
             "ELBO": round(hist["elbo"][-1], 0),
             "Acc %": round(100 * acc, 1),
+            "eps": "inf" if eps == math.inf else round(eps, 2),
             "KiB/round": round(srv.comm.per_round / 1024, 1),
+            "s/round": round(dt / rounds, 2),
             "Total MiB": round(srv.comm.total / 2**20, 2),
         })
-        out[name] = rows[-1]
+        out[sc.name] = rows[-1]
 
     print_table(
         f"Federated runtime scenarios (hier BNN, J={J}, "
-        f"{rounds} rounds x {local} local steps)",
-        rows, ["Scenario", "ELBO", "Acc %", "KiB/round", "Total MiB"],
+        f"{rounds} rounds x {local} local steps; DP at delta=1e-05)",
+        rows, ["Scenario", "ELBO", "Acc %", "eps", "KiB/round", "s/round",
+               "Total MiB"],
     )
     sfvi, avg = out["SFVI"], out["SFVI-Avg"]
+    dp = out[Scenario(algorithm="sfvi_avg", dp_noise=1.0).name]
+    int8 = out[Scenario(algorithm="sfvi_avg", compression="int8").name]
     assert avg["KiB/round"] < sfvi["KiB/round"], (
         "SFVI-Avg must ship strictly fewer bytes per round than SFVI")
+    assert dp["eps"] != "inf", (
+        "DP scenario must report a finite cumulative epsilon")
     print(f"\nSFVI-Avg ships {sfvi['KiB/round']/avg['KiB/round']:.1f}x fewer "
           f"bytes/round than SFVI; int8 compression a further "
-          f"{avg['KiB/round']/out['SFVI-Avg+int8']['KiB/round']:.1f}x.")
+          f"{avg['KiB/round']/int8['KiB/round']:.1f}x; "
+          f"DP adds eps={dp['eps']} at identical wire cost.")
     return out
+
+
+def privacy_utility_sweep(quick: bool = True, seed: int = 0,
+                          noise_multipliers=(0.0, 0.1, 0.25, 0.5, 1.0)) -> list:
+    """ε vs ELBO vs accuracy vs comm bytes, one row per noise multiplier."""
+    J = 4 if quick else 8
+    rounds, local = (6, 10) if quick else (20, 25)
+    lr = 2e-2
+    bnn, train, test = hier_bnn_federation(seed=seed, num_silos=J)
+
+    rows = []
+    for z in noise_multipliers:
+        sc = Scenario(algorithm="sfvi_avg", dp_noise=z)
+        srv, hist, acc, eps, dt = _fit(
+            bnn, train, test, sc, J=J, rounds=rounds, local=local, lr=lr,
+            seed=seed)
+        rows.append({
+            "z": z,
+            "eps": "inf" if eps == math.inf else round(eps, 2),
+            "ELBO": round(hist["elbo"][-1], 0),
+            "Acc %": round(100 * acc, 1),
+            "KiB/round": round(srv.comm.per_round / 1024, 1),
+            "s/round": round(dt / rounds, 2),
+        })
+
+    print_table(
+        f"Privacy-utility frontier (SFVI-Avg, hier BNN, J={J}, "
+        f"{rounds} rounds x {local} local steps, delta=1e-5)",
+        rows, ["z", "eps", "ELBO", "Acc %", "KiB/round", "s/round"],
+    )
+    return rows
 
 
 if __name__ == "__main__":
     run(quick=True)
+    privacy_utility_sweep(quick=True)

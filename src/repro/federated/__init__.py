@@ -8,10 +8,19 @@ J silos per round inside one ``shard_map`` graph along the dedicated
 :class:`~repro.federated.aggregation.TrimmedMeanAggregator`), wire
 compression (:class:`~repro.federated.aggregation.Int8Compressor`),
 partial-participation scheduling
-(:class:`~repro.federated.scheduler.RoundScheduler`) and per-round
-communication accounting (:class:`~repro.federated.runtime.CommMeter`).
+(:class:`~repro.federated.scheduler.RoundScheduler`), per-round
+communication accounting (:class:`~repro.federated.runtime.CommMeter`),
+and differentially private rounds
+(:class:`~repro.federated.privacy.PrivacyPolicy` clip-and-noise inside
+the compiled graph, :class:`~repro.federated.privacy.RdpAccountant`
+(ε, δ) tracking — docs/privacy.md). A
+:func:`~repro.federated.scheduler.scenario_matrix` crosses
+participation × stragglers × compression × DP into named
+:class:`~repro.federated.scheduler.Scenario` rows for one-invocation
+sweeps.
 
-CLI: ``python -m repro.federated.run --model hier_bnn --silos 8``.
+CLI: ``python -m repro.federated.run --model hier_bnn --silos 8``
+(add ``--sweep`` for the scenario matrix, ``--dp-noise`` for DP).
 """
 from repro.federated.aggregation import (
     Int8Compressor,
@@ -20,6 +29,7 @@ from repro.federated.aggregation import (
     TrimmedMeanAggregator,
 )
 from repro.federated.driver import run_rounds
+from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.runtime import (
     CommMeter,
     Server,
@@ -27,18 +37,22 @@ from repro.federated.runtime import (
     silo_eps,
     stack_silos,
 )
-from repro.federated.scheduler import RoundScheduler
+from repro.federated.scheduler import RoundScheduler, Scenario, scenario_matrix
 
 __all__ = [
     "CommMeter",
     "Int8Compressor",
     "MeanAggregator",
     "NoCompression",
+    "PrivacyPolicy",
+    "RdpAccountant",
     "RoundScheduler",
+    "Scenario",
     "Server",
     "TrimmedMeanAggregator",
     "global_eps",
     "run_rounds",
+    "scenario_matrix",
     "silo_eps",
     "stack_silos",
 ]

@@ -6,13 +6,16 @@ GSPMD psum inside a jitted step function, so it cannot use
 itself) — but it still wants the same per-round communication accounting
 and logging hooks. ``run_rounds`` is that loop: advance a step over a
 batch stream, bill a fixed (up, down) cost per round into a
-:class:`CommMeter`, collect metrics. ``Server.run`` keeps its own loop
-because its billing depends on the realized participation mask.
+:class:`CommMeter`, compose DP exchanges into an
+:class:`~repro.federated.privacy.RdpAccountant`, collect metrics.
+``Server.run`` keeps its own loop because its billing depends on the
+realized participation mask.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 
+from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.runtime import CommMeter
 
 PyTree = Any
@@ -27,6 +30,10 @@ def run_rounds(
     *,
     meter: Optional[CommMeter] = None,
     bytes_per_round: Tuple[int, int] = (0, 0),
+    privacy: Optional[PrivacyPolicy] = None,
+    accountant: Optional[RdpAccountant] = None,
+    sampling_rate: float = 1.0,
+    exchanges_per_round=1,
     on_metrics: Optional[MetricsHook] = None,
 ) -> Tuple[PyTree, Dict[str, list]]:
     """Drive ``state`` through ``step_fn`` once per batch.
@@ -38,6 +45,19 @@ def run_rounds(
       batches: one element per round (list, generator, ...).
       meter: optional :class:`CommMeter`; ``bytes_per_round`` is the
         (up, down) cost recorded per round.
+      privacy: optional DP policy. The loop does NOT apply the mechanism
+        (that belongs inside ``step_fn``'s compiled graph); it accounts
+        it: each round composes ``exchanges_per_round`` sampled-Gaussian
+        invocations at the policy's noise multiplier into ``accountant``
+        (one is created if None) and appends the cumulative ε at the
+        policy's δ to ``history["epsilon"]`` and the round's metrics.
+      accountant: accountant to compose into (shared across phases);
+        ignored when ``privacy`` is None.
+      sampling_rate: per-round silo sampling rate q for the accountant.
+      exchanges_per_round: mechanism invocations per round — an int, or
+        a callable ``round_idx -> int`` for cadenced schedules (SFVI
+        pays one per step; SFVI-Avg one every ``avg_every`` steps, zero
+        on the steps in between).
       on_metrics: per-round hook ``(round_idx, metrics, state)`` for
         logging or checkpointing; ``state`` is the post-step state.
         Metrics arrive as the step's raw (possibly still-on-device)
@@ -50,10 +70,23 @@ def run_rounds(
     """
     raw_history: list = []
     up1, down1 = bytes_per_round
+    if privacy is not None and accountant is None:
+        accountant = RdpAccountant()
     for i, batch in enumerate(batches):
         state, metrics = step_fn(state, batch, i)
         if meter is not None:
             meter.record(up1, down1)
+        if privacy is not None:
+            n_ex = (exchanges_per_round(i) if callable(exchanges_per_round)
+                    else exchanges_per_round)
+            accountant.step(
+                noise_multiplier=privacy.noise_multiplier,
+                sampling_rate=sampling_rate,
+                steps=n_ex,
+            )
+            metrics = dict(
+                metrics, epsilon=accountant.epsilon(privacy.delta)[0]
+            )
         raw_history.append(metrics)
         if on_metrics:
             on_metrics(i, metrics, state)

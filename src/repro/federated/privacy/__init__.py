@@ -1,0 +1,30 @@
+"""Differentially private federated rounds (docs/privacy.md).
+
+Two halves, split by where they run:
+
+  * :class:`PrivacyPolicy` — the mechanism. Pure jax clip-and-noise of
+    one silo upload, executed *inside* the compiled round (before the
+    compression hook and the cross-silo ``all_gather``), so the wire
+    carries already-privatized bytes.
+  * :class:`RdpAccountant` — the ledger. Host-side RDP composition of
+    every (subsampled) Gaussian exchange, converted to (ε, δ) per round
+    and cumulatively.
+
+``Server(..., privacy=PrivacyPolicy(...))`` wires both up; the CLI
+exposes them as ``--dp-clip / --dp-noise / --dp-delta``.
+"""
+from repro.federated.privacy.accountant import (
+    DEFAULT_ORDERS,
+    RdpAccountant,
+    rdp_sampled_gaussian,
+    rdp_to_epsilon,
+)
+from repro.federated.privacy.policy import PrivacyPolicy
+
+__all__ = [
+    "DEFAULT_ORDERS",
+    "PrivacyPolicy",
+    "RdpAccountant",
+    "rdp_sampled_gaussian",
+    "rdp_to_epsilon",
+]

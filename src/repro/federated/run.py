@@ -5,10 +5,17 @@
 
 Runs SFVI (sync every step) and SFVI-Avg (one sync per round) on the same
 problem/seed and prints per-round ELBO plus bytes-on-wire; scenario knobs
-cover partial participation, straggler dropout, robust aggregation and
-int8 wire compression:
+cover partial participation, straggler dropout, robust aggregation, int8
+wire compression and differential privacy:
 
     ... --participation 0.5 --dropout 0.1 --aggregator trimmed --compress int8
+    ... --dp-noise 1.0 --dp-clip 0.5 --dp-delta 1e-5   # DP round + (ε, δ)
+
+``--sweep`` ignores the single-scenario knobs and walks the full
+scenario matrix (participation × stragglers × compression × DP from
+``scenario_matrix``) in one invocation, printing an ELBO/ε/bytes table:
+
+    ... --sweep --sweep-participation 1.0,0.5 --sweep-dp-noise 0.0,1.0
 
 ``--devices N`` forces N XLA host devices (as ``launch/comm.py`` does) so
 the ``silo`` mesh axis actually spans devices and
@@ -41,6 +48,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compress", default="none", choices=["none", "int8"])
     ap.add_argument("--eta-mode", default="barycenter",
                     choices=["barycenter", "param"])
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="Gaussian noise multiplier z (0 = DP off)")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="L2 clip norm C for silo uploads")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="target delta for (eps, delta) reports")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the full scenario matrix instead of one config")
+    ap.add_argument("--sweep-participation", default="1.0,0.5")
+    ap.add_argument("--sweep-dropout", default="0.0,0.2")
+    ap.add_argument("--sweep-compress", default="none,int8")
+    ap.add_argument("--sweep-dp-noise", default="0.0,1.0")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0,
                     help="force N XLA host devices (0 = real devices)")
@@ -105,6 +124,16 @@ def _build_problem(args):
     return lda.problem, init_theta(), datas, [lda.docs_per_silo] * J, eval_fn
 
 
+def _privacy_from(args):
+    from repro.federated import PrivacyPolicy
+
+    if args.dp_noise > 0.0:
+        return PrivacyPolicy(clip_norm=args.dp_clip,
+                             noise_multiplier=args.dp_noise,
+                             delta=args.dp_delta)
+    return None
+
+
 def _run_one(args, algorithm: str, built):
     import jax
 
@@ -113,6 +142,7 @@ def _run_one(args, algorithm: str, built):
     from repro.optim.adam import adam
 
     prob, theta0, datas, num_obs, eval_fn = built
+    privacy = _privacy_from(args)
     srv = Server(
         prob, datas, theta0,
         prob.global_family.init(jax.random.PRNGKey(args.seed)),
@@ -124,24 +154,32 @@ def _run_one(args, algorithm: str, built):
         compressor=(Int8Compressor() if args.compress == "int8"
                     else NoCompression()),
         eta_mode=args.eta_mode,
+        privacy=privacy,
         seed=args.seed,
     )
     sched = RoundScheduler(args.silos, participation=args.participation,
                            dropout=args.dropout, seed=args.seed)
     name = {"sfvi": "SFVI", "sfvi_avg": "SFVI-Avg"}[algorithm]
     print(f"\n== {name}: {args.model}, J={args.silos}, "
-          f"{args.rounds} rounds x {args.local_steps} local steps ==")
+          f"{args.rounds} rounds x {args.local_steps} local steps"
+          + (f", DP(z={args.dp_noise:g}, C={args.dp_clip:g})" if privacy else "")
+          + " ==")
     t0 = time.time()
 
     def log(r, m):
+        eps = f"  eps={m['epsilon']:7.3f}" if "epsilon" in m else ""
         print(f"  round {r:3d}  elbo={m['elbo']:14.2f}  "
               f"up={m['bytes_up']:>9d}B  down={m['bytes_down']:>9d}B  "
-              f"active={m['n_active']}/{args.silos}")
+              f"active={m['n_active']}/{args.silos}{eps}")
 
     srv.run(args.rounds, algorithm=algorithm, local_steps=args.local_steps,
             scheduler=sched, callback=log)
     print(f"  total: {srv.comm.total:,} B in {srv.comm.rounds} rounds "
           f"({srv.comm.per_round:,.0f} B/round), {time.time()-t0:.1f}s")
+    if srv.accountant is not None:
+        eps, order = srv.accountant.epsilon(privacy.delta)
+        print(f"  privacy: ({eps:.3f}, {privacy.delta:g})-DP after "
+              f"{srv.accountant.steps} exchanges (RDP order {order})")
     if eval_fn is not None:
         for k, v in eval_fn(srv).items():
             print(f"  {k}: {v:.3f}")
@@ -153,6 +191,59 @@ def _run_one(args, algorithm: str, built):
     return srv
 
 
+def _run_sweep(args, built) -> int:
+    """One invocation, the whole scenario grid (ELBO / ε / bytes table)."""
+    import jax
+
+    from repro.federated import Server, scenario_matrix
+    from repro.optim.adam import adam
+
+    def floats(s):
+        return tuple(float(x) for x in s.split(","))
+
+    grid = scenario_matrix(
+        algorithms=(["sfvi", "sfvi_avg"] if args.algo == "both"
+                    else [args.algo]),
+        participation=floats(args.sweep_participation),
+        dropout=floats(args.sweep_dropout),
+        compression=tuple(args.sweep_compress.split(",")),
+        dp_noise=floats(args.sweep_dp_noise),
+        dp_clip=args.dp_clip,
+        dp_delta=args.dp_delta,
+    )
+    prob, theta0, datas, num_obs, eval_fn = built
+    print(f"\n== scenario sweep: {args.model}, J={args.silos}, "
+          f"{len(grid)} scenarios x {args.rounds} rounds ==")
+    rows = []
+    for sc in grid:
+        srv = Server(
+            prob, datas, theta0,
+            prob.global_family.init(jax.random.PRNGKey(args.seed)),
+            num_obs=num_obs,
+            server_opt=adam(args.lr),
+            local_opt=adam(args.lr) if prob.model.has_local else None,
+            aggregator=sc.make_aggregator(),
+            compressor=sc.compressor(),
+            privacy=sc.privacy(),
+            seed=args.seed,
+        )
+        t0 = time.time()
+        h = srv.run(args.rounds, algorithm=sc.algorithm,
+                    local_steps=args.local_steps,
+                    scheduler=sc.scheduler(args.silos, seed=args.seed))
+        dt = time.time() - t0
+        eps = h["epsilon"][-1] if "epsilon" in h else float("inf")
+        rows.append((sc.name, h["elbo"][-1], eps,
+                     srv.comm.per_round / 1024, dt / args.rounds))
+    w = max(len(r[0]) for r in rows)
+    print(f"  {'scenario':<{w}}  {'ELBO':>12}  {'eps':>8}  "
+          f"{'KiB/round':>10}  {'s/round':>8}")
+    for name, elbo, eps, kib, spr in rows:
+        eps_s = f"{eps:8.3f}" if eps != float("inf") else "     inf"
+        print(f"  {name:<{w}}  {elbo:12.2f}  {eps_s}  {kib:10.1f}  {spr:8.2f}")
+    return 0
+
+
 def main(argv=None) -> int:
     """Run the requested algorithm(s) and assert the §3.2 byte ordering."""
     args = build_parser().parse_args(argv)
@@ -161,8 +252,10 @@ def main(argv=None) -> int:
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         )
+    built = _build_problem(args)  # one dataset/problem, shared by all runs
+    if args.sweep:
+        return _run_sweep(args, built)
     algos = ["sfvi", "sfvi_avg"] if args.algo == "both" else [args.algo]
-    built = _build_problem(args)  # one dataset/problem, shared by both runs
     servers = {a: _run_one(args, a, built) for a in algos}
     if len(servers) == 2:
         sfvi_pr = servers["sfvi"].comm.per_round

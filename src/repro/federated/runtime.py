@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.sfvi import SFVIProblem
 from repro.core.families import DiagGaussian
 from repro.federated.aggregation import MeanAggregator, NoCompression
+from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.scheduler import RoundScheduler
 from repro.launch.mesh import make_silo_mesh
 from repro.optim.base import GradientTransformation, apply_updates
@@ -94,6 +95,46 @@ def _select(keep, new: PyTree, old: PyTree) -> PyTree:
     return jax.tree_util.tree_map(lambda n, o: jnp.where(keep, n, o), new, old)
 
 
+def _coalesced_all_gather(tree: PyTree, axis_name: str) -> PyTree:
+    """Cross-silo gather as ONE ``all_gather`` per wire dtype.
+
+    A naive per-leaf ``tree_map(all_gather)`` emits one collective per
+    pytree leaf — more instructions (and collective launches) than the
+    algorithm needs, and it makes the "one gather per exchange" claim of
+    §3.2 unverifiable in the HLO. Instead: flatten every leaf of the
+    (already encoded, already privatized) upload to ``(stack, size)``,
+    concatenate per dtype into one contiguous buffer, gather that, and
+    split back. Uncompressed float uploads produce exactly one
+    ``all-gather`` instruction in the compiled round; int8 compression
+    produces two (payload + scales), still independent of leaf count
+    and of ``local_steps``.
+
+    Leaves must share a leading stacked-silo axis (what the runtime's
+    vmapped ``per_silo`` emits); the gather tiles along it.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree
+    stack = leaves[0].shape[0]
+    groups: Dict[Any, list] = {}
+    for i, x in enumerate(leaves):
+        groups.setdefault(jnp.dtype(x.dtype), []).append(i)
+    out: list = [None] * len(leaves)
+    for dt in sorted(groups, key=lambda d: d.name):
+        idxs = groups[dt]
+        flat = jnp.concatenate(
+            [leaves[i].reshape(stack, -1) for i in idxs], axis=1
+        )
+        gathered = jax.lax.all_gather(flat, axis_name, axis=0, tiled=True)
+        off = 0
+        for i in idxs:
+            size = int(np.prod(leaves[i].shape[1:], dtype=np.int64))
+            piece = gathered[:, off : off + size]
+            out[i] = piece.reshape((-1,) + leaves[i].shape[1:])
+            off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 @dataclasses.dataclass
 class CommMeter:
     """Algorithm-level bytes-on-wire accounting (host side, per round)."""
@@ -143,6 +184,14 @@ class Server:
       compressor: silo→server wire codec (identity / int8 quantization).
       eta_mode: ``"barycenter"`` (paper §3.2; DiagGaussian only) or
         ``"param"`` (FedAvg in parameter space) for SFVI-Avg's η_G merge.
+      privacy: optional :class:`~repro.federated.privacy.PrivacyPolicy`.
+        When set, every silo upload is L2-clipped and Gaussian-noised
+        *inside* the compiled round — before the compression hook and
+        the ``all_gather``, so the wire carries already-privatized bytes
+        (SFVI privatizes the gradient tree; SFVI-Avg the parameter delta
+        from the round's public broadcast). The Server then owns an
+        :class:`~repro.federated.privacy.RdpAccountant` composing every
+        exchange; ``run`` reports cumulative ε per round.
       mesh: optional silo mesh (default ``make_silo_mesh(J)``).
       seed: base seed for the round key stream.
     """
@@ -160,6 +209,7 @@ class Server:
         aggregator=None,
         compressor=None,
         eta_mode: str = "barycenter",
+        privacy: Optional[PrivacyPolicy] = None,
         mesh=None,
         seed: int = 0,
     ):
@@ -168,6 +218,8 @@ class Server:
         self.data = stack_silos(datas)
         self.aggregator = aggregator or MeanAggregator()
         self.compressor = compressor or NoCompression()
+        self.privacy = privacy
+        self.accountant = RdpAccountant() if privacy is not None else None
         self.mesh = mesh if mesh is not None else make_silo_mesh(self.J)
         self.seed = seed
         self._server_opt = server_opt
@@ -257,11 +309,13 @@ class Server:
         from repro.launch.roofline import collective_bytes
 
         fn = self._get_round(algorithm, local_steps)
+        mask_shape = ((local_steps, self.J) if algorithm == "sfvi"
+                      else (self.J,))
         args = (
             self.state,
             self.data,
             jax.random.PRNGKey(0),
-            jnp.ones((self.J,), jnp.float32),
+            jnp.ones(mask_shape, jnp.float32),
         )
         return collective_bytes(fn.lower(*args).compile().as_text())
 
@@ -282,8 +336,12 @@ class Server:
                 in_specs=(
                     P(), P(), P(),  # theta, eta_G, opt_server (replicated)
                     P("silo"), P("silo"),  # eta_L, opt_local
-                    P("silo"), P("silo"), P("silo"), P("silo"),  # data, sids, n_j, mask shard
-                    P(), P(),  # full mask (for aggregation), round key
+                    P("silo"), P("silo"), P("silo"),  # data, sids, n_j
+                    # Participation mask rides ONCE, replicated; each block
+                    # slices its silos' entries via sids. Passing it a
+                    # second time with P("silo") made GSPMD reshard it with
+                    # an extra 4-byte all-gather in the compiled round.
+                    P(), P(),  # full mask, round key
                 ),
                 out_specs=(P(), P(), P(), P("silo"), P("silo"), P()),
                 check_rep=False,
@@ -295,7 +353,7 @@ class Server:
                 theta, eta_G, opt_server, eta_L, opt_L, elbos = sharded(
                     state["theta"], state["eta_G"], state["opt_server"],
                     state["eta_L"], state["opt_local"],
-                    data, sids, n_j, mask, mask, round_key,
+                    data, sids, n_j, mask, round_key,
                 )
                 new_state = {
                     "theta": theta, "eta_G": eta_G, "eta_L": eta_L,
@@ -312,13 +370,21 @@ class Server:
         agg, comp = self.aggregator, self.compressor
         server_opt, local_opt = self._server_opt, self._local_opt
         has_local = self._has_local
+        privacy = self.privacy
 
         def body(theta, eta_G, opt_server, eta_L, opt_L,
-                 data_sh, sids, n_j, mask_sh, mask_full, round_key):
+                 data_sh, sids, n_j, masks_full, round_key):
+            # masks_full: (K, J) — SFVI samples participation PER EXCHANGE
+            # (it synchronizes every step, so each gather is its own
+            # subsampling event; this is what makes the accountant's
+            # per-exchange amplification sound — one shared mask across
+            # the K gathers would expose K correlated outputs per draw).
             del n_j  # SFVI needs no N/N_j rescale (likelihood_scale = 1)
-            n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
 
-            def sync_step(carry, t):
+            def sync_step(carry, step_xs):
+                t, mask_full = step_xs
+                mask_sh = mask_full[sids]  # this block's silos
+                n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
                 theta, eta_G, opt_server, eta_L, opt_L = carry
                 eps_G = global_eps(problem, round_key, t)
 
@@ -332,16 +398,30 @@ class Server:
                         upd, new_opt = local_opt.update(_neg(g_loc), opt_Lj, el)
                         eta_Lj = _select(m_j > 0.5, apply_updates(el, upd), el)
                         opt_Lj = _select(m_j > 0.5, new_opt, opt_Lj)
-                    ship = comp.encode({"g_theta": g_th, "g_eta": g_eta})
+                    ship = {"g_theta": g_th, "g_eta": g_eta}
+                    if privacy is not None:
+                        # Clip + noise BEFORE compression and the gather:
+                        # the wire never carries a raw silo gradient.
+                        ship = privacy.privatize(
+                            ship, privacy.upload_key(round_key, t, sid)
+                        )
+                    # Non-participating silos upload a data-independent
+                    # zero tree (they "don't upload"; aggregation masks
+                    # them anyway). This is what makes the accountant's
+                    # subsampling amplification valid: an unsampled
+                    # silo's data is absent from the wire, not merely
+                    # down-weighted at the server.
+                    ship = _select(
+                        m_j > 0.5, ship,
+                        jax.tree_util.tree_map(jnp.zeros_like, ship),
+                    )
+                    ship = comp.encode(ship)
                     return eta_Lj, opt_Lj, ship, hatLj * m_j
 
                 eta_L, opt_L, enc, hatL = jax.vmap(per_silo)(
                     eta_L, opt_L, data_sh, sids, mask_sh
                 )
-                enc = jax.tree_util.tree_map(
-                    lambda x: jax.lax.all_gather(x, "silo", axis=0, tiled=True),
-                    enc,
-                )
+                enc = _coalesced_all_gather(enc, "silo")
                 shipped = jax.vmap(comp.decode)(enc)  # (J, ...) per leaf
                 hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
 
@@ -360,7 +440,9 @@ class Server:
                 return carry, elbo
 
             carry = (theta, eta_G, opt_server, eta_L, opt_L)
-            carry, elbos = jax.lax.scan(sync_step, carry, jnp.arange(K))
+            carry, elbos = jax.lax.scan(
+                sync_step, carry, (jnp.arange(K), masks_full)
+            )
             return (*carry, elbos)
 
         return body
@@ -372,10 +454,12 @@ class Server:
         server_opt, local_opt = self._server_opt, self._local_opt
         has_local = self._has_local
         eta_mode = self.eta_mode
+        privacy = self.privacy
         total_obs = float(np.sum(self.num_obs))
 
         def body(theta, eta_G, opt_server, eta_L, opt_L,
-                 data_sh, sids, n_j, mask_sh, mask_full, round_key):
+                 data_sh, sids, n_j, mask_full, round_key):
+            mask_sh = mask_full[sids]  # this block's silos
             n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
 
             def per_silo(eta_Lj, opt_Lj, data_j, sid, m_j, n_obs_j):
@@ -418,15 +502,32 @@ class Server:
                 if has_local:
                     eta_Lj = _select(m_j > 0.5, el, el0)
                     opt_Lj = _select(m_j > 0.5, l_st, opt_Lj)
-                ship = comp.encode({"theta": th, "eta_G": eg})
+                ship = {"theta": th, "eta_G": eg}
+                if privacy is not None:
+                    # Parameter upload: the private quantity is the delta
+                    # from the round's broadcast (θ, η_G), which the server
+                    # already knows. Clip + noise the delta, add it back —
+                    # wire format stays a parameter pytree, and it is
+                    # privatized before compression and the gather.
+                    ship = privacy.privatize(
+                        ship,
+                        privacy.upload_key(round_key, 0, sid),
+                        reference={"theta": theta, "eta_G": eta_G},
+                    )
+                # Non-participating silos upload the round's public
+                # broadcast — data-independent, so the subsampling
+                # amplification in the accountant actually holds on the
+                # wire (aggregation masks these rows regardless).
+                ship = _select(
+                    m_j > 0.5, ship, {"theta": theta, "eta_G": eta_G}
+                )
+                ship = comp.encode(ship)
                 return eta_Lj, opt_Lj, ship, elbos * m_j
 
             eta_L, opt_L, enc, elbos = jax.vmap(per_silo)(
                 eta_L, opt_L, data_sh, sids, mask_sh, n_j
             )
-            enc = jax.tree_util.tree_map(
-                lambda x: jax.lax.all_gather(x, "silo", axis=0, tiled=True), enc
-            )
+            enc = _coalesced_all_gather(enc, "silo")
             shipped = jax.vmap(comp.decode)(enc)
             elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
 
@@ -466,6 +567,16 @@ class Server:
         cost nothing; invited stragglers (dropout) receive the broadcast
         (download is billed) but never upload, and the aggregation is
         rescaled by the realized active count (unbiased, §3 Remark).
+
+        With ``privacy`` set, each of the round's ``exchanges`` gathers
+        is one (subsampled) Gaussian-mechanism invocation: the owned
+        accountant composes them (q = the scheduler's invitation rate)
+        and ``history["epsilon"]`` traces the cumulative ε at the
+        policy's δ after each round. SFVI draws a FRESH participation
+        mask for every local step (schedule index = exchange index
+        ``r * local_steps + t``), so each gather is an independent
+        subsampling event and the per-exchange amplification is sound;
+        SFVI-Avg draws one mask per round (index ``r``).
         """
         if local_steps < 1:
             raise ValueError(f"local_steps must be >= 1, got {local_steps}")
@@ -478,28 +589,58 @@ class Server:
             "elbo": [], "elbo_trace": [], "bytes_up": [], "bytes_down": [],
             "n_active": [],
         }
+        if self.accountant is not None:
+            history["epsilon"] = []
+            # Poisson-q surrogate for the scheduler's fixed-size invitation
+            # (docs/privacy.md §Accounting); custom schedulers without a
+            # participation attribute are accounted at full participation.
+            q = float(getattr(sched, "participation", 1.0))
         base_key = jax.random.PRNGKey(self.seed)
         for r in range(num_rounds):
-            mask = sched.mask(r)
-            n_active = int(np.sum(np.asarray(mask)))
+            # SFVI synchronizes every local step, so each of the round's
+            # `exchanges` gathers is its OWN participation draw (schedule
+            # index = exchange index) — required for the accountant's
+            # per-exchange subsampling amplification to be sound.
+            # SFVI-Avg gathers once: one draw per round.
+            ex_idx = ([r * local_steps + t for t in range(local_steps)]
+                      if algorithm == "sfvi" else [r])
+            ex_masks = [sched.mask(i) for i in ex_idx]
+            active = [int(np.sum(np.asarray(m))) for m in ex_masks]
             # Stragglers received the broadcast before dropping: bill their
             # download. Custom schedulers without invited() bill reporters.
-            invited = sched.invited(r) if hasattr(sched, "invited") else mask
-            n_invited = max(int(np.sum(np.asarray(invited))), n_active)
+            invited = [
+                max(int(np.sum(np.asarray(
+                    sched.invited(i) if hasattr(sched, "invited")
+                    else ex_masks[k]))), active[k])
+                for k, i in enumerate(ex_idx)
+            ]
+            mask = (jnp.stack(ex_masks) if algorithm == "sfvi"
+                    else ex_masks[0])
             round_key = jax.random.fold_in(base_key, r)
             self.state, metrics = fn(self.state, self.data, round_key, mask)
             elbos = np.asarray(metrics["elbo"])
-            up = exchanges * n_active * up1
-            down = exchanges * n_invited * down1
+            up = sum(active) * up1
+            down = sum(invited) * down1
+            n_active = active[-1]  # the round's final exchange
             self.comm.record(up, down)
             history["elbo"].append(float(elbos[-1]))
             history["elbo_trace"].extend(float(e) for e in elbos)
             history["bytes_up"].append(up)
             history["bytes_down"].append(down)
             history["n_active"].append(n_active)
+            metrics_out = {
+                "elbo": history["elbo"][-1], "bytes_up": up,
+                "bytes_down": down, "n_active": n_active,
+            }
+            if self.accountant is not None:
+                self.accountant.step(
+                    noise_multiplier=self.privacy.noise_multiplier,
+                    sampling_rate=q,
+                    steps=exchanges,
+                )
+                eps = self.accountant.epsilon(self.privacy.delta)[0]
+                history["epsilon"].append(eps)
+                metrics_out["epsilon"] = eps
             if callback:
-                callback(r, {
-                    "elbo": history["elbo"][-1], "bytes_up": up,
-                    "bytes_down": down, "n_active": n_active,
-                })
+                callback(r, metrics_out)
         return history

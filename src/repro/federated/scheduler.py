@@ -1,4 +1,4 @@
-"""Round scheduling: which silos participate in which round.
+"""Round scheduling and scenario construction for the federated runtime.
 
 The scheduler is the scenario knob of the runtime: full participation
 reproduces the paper's Algorithms 1–2 exactly; ``participation < 1``
@@ -7,14 +7,30 @@ models stragglers that accept the round but fail to report back. Masks
 are deterministic functions of (seed, round index) so a schedule can be
 replayed — and so the compiled round function can take the mask as a
 plain (J,) array argument without retracing.
+
+:class:`Scenario` bundles every orthogonal knob — sync cadence,
+participation, stragglers, wire compression, differential privacy —
+into one named configuration, and :func:`scenario_matrix` crosses the
+axes into a grid so one CLI/benchmark invocation sweeps the whole
+scenario space (``python -m repro.federated.run --sweep``).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.federated.aggregation import (
+    Int8Compressor,
+    MeanAggregator,
+    NoCompression,
+    TrimmedMeanAggregator,
+)
+from repro.federated.privacy import PrivacyPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,3 +97,123 @@ def _first_invited(mask: np.ndarray) -> np.ndarray:
     out = np.zeros_like(mask)
     out[int(np.argmax(mask))] = 1.0
     return out
+
+
+# ---------------------------------------------------------------------------
+# Scenario matrix: participation × stragglers × compression × DP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named point in the runtime's scenario space.
+
+    A Scenario is declarative: it records the knob settings and builds
+    the concrete runtime pieces on demand (:meth:`scheduler`,
+    :meth:`compressor`, :meth:`privacy`), so grids stay cheap to
+    enumerate and trivially serializable for logs.
+
+    Attributes:
+      algorithm: ``"sfvi"`` (sync every local step) or ``"sfvi_avg"``.
+      participation: fraction of silos invited per round.
+      dropout: per-round straggler probability for invited silos.
+      compression: ``"none"`` or ``"int8"`` wire codec.
+      dp_noise: Gaussian noise multiplier z; 0 disables DP.
+      dp_clip: L2 clip norm C for the upload (used when ``dp_noise > 0``
+        or ``dp_clip_only``).
+      dp_delta: target δ for (ε, δ) reports.
+      dp_clip_only: apply clipping without noise (isolates the utility
+        cost of clipping; ε stays ∞).
+      aggregator: ``"mean"`` or ``"trimmed"`` server combine rule.
+      trim_frac: trim fraction for the ``"trimmed"`` aggregator.
+    """
+
+    algorithm: str = "sfvi_avg"
+    participation: float = 1.0
+    dropout: float = 0.0
+    compression: str = "none"
+    dp_noise: float = 0.0
+    dp_clip: float = 1.0
+    dp_delta: float = 1e-5
+    dp_clip_only: bool = False
+    aggregator: str = "mean"
+    trim_frac: float = 0.1
+
+    @property
+    def name(self) -> str:
+        """Compact human-readable label for tables and logs."""
+        bits = ["SFVI" if self.algorithm == "sfvi" else "SFVI-Avg"]
+        if self.participation < 1.0:
+            bits.append(f"part={self.participation:g}")
+        if self.dropout > 0.0:
+            bits.append(f"drop={self.dropout:g}")
+        if self.compression != "none":
+            bits.append(self.compression)
+        if self.dp_noise > 0.0:
+            bits.append(f"dp(z={self.dp_noise:g},C={self.dp_clip:g})")
+        elif self.dp_clip_only:
+            bits.append(f"clip(C={self.dp_clip:g})")
+        if self.aggregator != "mean":
+            bits.append(f"{self.aggregator}({self.trim_frac:g})")
+        return " ".join(bits)
+
+    def scheduler(self, num_silos: int, seed: int = 0) -> RoundScheduler:
+        """The participation/straggler schedule for this scenario."""
+        return RoundScheduler(
+            num_silos, participation=self.participation,
+            dropout=self.dropout, seed=seed,
+        )
+
+    def compressor(self):
+        """The wire codec for this scenario."""
+        if self.compression == "int8":
+            return Int8Compressor()
+        if self.compression == "none":
+            return NoCompression()
+        raise ValueError(f"unknown compression {self.compression!r}")
+
+    def make_aggregator(self):
+        """The server combine rule for this scenario."""
+        if self.aggregator == "trimmed":
+            return TrimmedMeanAggregator(self.trim_frac)
+        if self.aggregator == "mean":
+            return MeanAggregator()
+        raise ValueError(f"unknown aggregator {self.aggregator!r}")
+
+    def privacy(self) -> Optional[PrivacyPolicy]:
+        """The DP policy, or None when this scenario is non-private."""
+        if self.dp_noise > 0.0 or self.dp_clip_only:
+            return PrivacyPolicy(
+                clip_norm=self.dp_clip,
+                noise_multiplier=self.dp_noise,
+                delta=self.dp_delta,
+            )
+        return None
+
+
+def scenario_matrix(
+    *,
+    algorithms: Sequence[str] = ("sfvi", "sfvi_avg"),
+    participation: Sequence[float] = (1.0, 0.5),
+    dropout: Sequence[float] = (0.0, 0.2),
+    compression: Sequence[str] = ("none", "int8"),
+    dp_noise: Sequence[float] = (0.0, 1.0),
+    dp_clip: float = 1.0,
+    dp_delta: float = 1e-5,
+) -> list:
+    """Cross participation × stragglers × compression × DP into Scenarios.
+
+    The full cartesian product, minus physically-meaningless rows
+    (dropout without partial participation is kept — stragglers exist
+    under full invitation too). One invocation of
+    ``python -m repro.federated.run --sweep`` walks the returned list.
+    """
+    grid = []
+    for algo, part, drop, comp, z in itertools.product(
+        algorithms, participation, dropout, compression, dp_noise
+    ):
+        grid.append(Scenario(
+            algorithm=algo, participation=part, dropout=drop,
+            compression=comp, dp_noise=z, dp_clip=dp_clip, dp_delta=dp_delta,
+        ))
+    return grid

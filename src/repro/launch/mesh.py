@@ -24,9 +24,22 @@ ICI_BW = 50e9  # bytes/s per link
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # jax < 0.5 has neither sharding.AxisType nor make_mesh(axis_types=...);
+    # Auto is the default there, so the kwarg is only needed when it exists.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Version-portable mesh context: ``jax.set_mesh`` where it exists
+    (jax >= 0.6), else the ``Mesh`` object itself (a context manager that
+    sets the physical mesh on 0.4.x)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_silo_mesh(num_silos: int, devices=None):

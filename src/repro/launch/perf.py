@@ -21,7 +21,7 @@ import jax
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.launch import roofline as R
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.specs import build_lowering
 from repro.models.backbone.config import PerfConfig
 
@@ -45,7 +45,7 @@ def measure(arch: str, shape_name: str, levers: list) -> dict:
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh()
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         fn, args = build_lowering(cfg, shape, mesh)
         compiled = jax.jit(fn).lower(*args).compile()
         roof = R.analyze(compiled, arch, shape_name, "single_pod", mesh.size,

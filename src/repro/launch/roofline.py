@@ -126,6 +126,8 @@ class Roofline:
 def analyze(compiled, arch: str, shape: str, mesh_name: str, chips: int,
             model_flops: float) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 wraps it per-program
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())
@@ -227,6 +229,8 @@ def analysis_variant(cfg, k_units: int):
 
 def _extract(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 wraps it per-program
+        ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

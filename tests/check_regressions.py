@@ -1,0 +1,75 @@
+"""CI regression gate: compare a junit XML report to the seed baseline.
+
+    python tests/check_regressions.py junit.xml tests/seed_baseline.txt
+
+Exit codes: 0 when every failure is recorded in the baseline (tier-1 is
+no worse than the seed), 1 on any new failure. Fixed baseline entries
+are reported (so the baseline file can be pruned) but do not fail the
+job. Collection errors count as failures of their nodeid.
+"""
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def junit_failures(path: str):
+    """(nodeids of failed/errored testcases, total testcases) in a report."""
+    failed, total = set(), 0
+    for case in ET.parse(path).getroot().iter("testcase"):
+        total += 1
+        if case.find("failure") is not None or case.find("error") is not None:
+            cls = case.get("classname", "")
+            name = case.get("name", "")
+            # pytest junit classname is dotted (tests.test_x.TestY);
+            # rebuild the nodeid-ish "tests/test_x.py::TestY::name" form.
+            parts = cls.split(".") if cls else []
+            file_parts, cls_parts = [], []
+            for p in parts:
+                (cls_parts if cls_parts or p[:1].isupper() else file_parts).append(p)
+            nodeid = "/".join(file_parts) + ".py::" + "::".join(cls_parts + [name])
+            failed.add(nodeid if file_parts else name)
+    return failed, total
+
+
+def baseline_entries(path: str) -> set:
+    entries = set()
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                entries.add(line)
+    return entries
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    failed, total = junit_failures(argv[1])
+    if total == 0:
+        # A usage/collection-wide abort produces an empty report; the
+        # pytest step defers to this gate, so an empty report must fail
+        # — otherwise CI goes green having executed zero tests.
+        print("REGRESSION: junit report contains no testcases "
+              "(collection error or pytest abort?)")
+        return 1
+    baseline = baseline_entries(argv[2])
+    new = sorted(failed - baseline)
+    fixed = sorted(baseline - failed)
+    if fixed:
+        print("baseline entries now passing (prune them):")
+        for t in fixed:
+            print(f"  {t}")
+    if new:
+        print(f"REGRESSION: {len(new)} failure(s) not in the seed baseline:")
+        for t in new:
+            print(f"  {t}")
+        return 1
+    print(f"no regressions: {len(failed)} failure(s) among {total} tests, "
+          f"all in baseline ({len(baseline)} recorded)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

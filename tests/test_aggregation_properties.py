@@ -1,0 +1,172 @@
+"""Property tests for repro.federated.aggregation.
+
+Two tiers so the invariants are exercised everywhere:
+
+  * hypothesis-driven property tests (CI installs hypothesis) explore
+    the input space adversarially;
+  * seeded numpy sweeps over many random cases run even where
+    hypothesis is absent (the offline container), so the same
+    invariants always have local coverage.
+
+Invariants under test:
+  * permutation invariance: relabeling silos never changes the
+    aggregate (mean and trimmed mean);
+  * inactive-silo independence: values carried by masked-out silos
+    can be anything — the aggregate must not move;
+  * mean == numpy masked mean;
+  * int8 codec: decode(encode(x)) is within half a quantization step
+    (scale = max|x|/127) of x, per coordinate, and the wire is smaller.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federated import (
+    Int8Compressor,
+    MeanAggregator,
+    NoCompression,
+    TrimmedMeanAggregator,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline container: seeded sweeps below still run
+    HAVE_HYPOTHESIS = False
+
+AGGREGATORS = [MeanAggregator(), TrimmedMeanAggregator(0.1),
+               TrimmedMeanAggregator(0.25)]
+
+
+def _random_case(rng, max_silos=8, max_dim=6):
+    """One (stacked, mask) draw with at least one active silo."""
+    J = int(rng.integers(2, max_silos + 1))
+    d = int(rng.integers(1, max_dim + 1))
+    stacked = {"g": jnp.asarray(rng.normal(0, 10, (J, d)).astype(np.float32)),
+               "h": jnp.asarray(rng.normal(0, 1, (J,)).astype(np.float32))}
+    mask = (rng.random(J) < 0.7).astype(np.float32)
+    if mask.sum() == 0:
+        mask[int(rng.integers(J))] = 1.0
+    return stacked, jnp.asarray(mask)
+
+
+def _assert_trees_close(a, b, **kw):
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]), **kw)
+
+
+class TestPermutationInvariance:
+    @pytest.mark.parametrize("agg", AGGREGATORS, ids=lambda a: repr(a))
+    def test_seeded_sweep(self, agg):
+        rng = np.random.default_rng(0)
+        for _ in range(25):
+            stacked, mask = _random_case(rng)
+            perm = rng.permutation(mask.shape[0])
+            out = agg.combine(stacked, mask)
+            out_p = agg.combine(
+                {k: v[perm] for k, v in stacked.items()}, mask[perm])
+            _assert_trees_close(out, out_p, rtol=1e-5, atol=1e-5)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=50, deadline=None)
+        @given(st.integers(0, 2**32 - 1), st.sampled_from(range(len(AGGREGATORS))))
+        def test_hypothesis(self, seed, agg_i):
+            rng = np.random.default_rng(seed)
+            stacked, mask = _random_case(rng)
+            perm = rng.permutation(mask.shape[0])
+            agg = AGGREGATORS[agg_i]
+            out = agg.combine(stacked, mask)
+            out_p = agg.combine(
+                {k: v[perm] for k, v in stacked.items()}, mask[perm])
+            _assert_trees_close(out, out_p, rtol=1e-5, atol=1e-5)
+
+
+class TestInactiveSiloIndependence:
+    @pytest.mark.parametrize("agg", AGGREGATORS, ids=lambda a: repr(a))
+    def test_seeded_sweep(self, agg):
+        """Garbage (even huge values) in masked-out rows changes nothing."""
+        rng = np.random.default_rng(1)
+        for _ in range(25):
+            stacked, mask = _random_case(rng)
+            if float(jnp.sum(mask)) == mask.shape[0]:
+                mask = mask.at[0].set(0.0)  # force an inactive silo
+            inactive = (np.asarray(mask) < 0.5)
+            poisoned = {}
+            for k, v in stacked.items():
+                arr = np.asarray(v).copy()
+                arr[inactive] = rng.normal(0, 1e6, arr[inactive].shape)
+                poisoned[k] = jnp.asarray(arr)
+            out = agg.combine(stacked, mask)
+            out_p = agg.combine(poisoned, mask)
+            _assert_trees_close(out, out_p, rtol=1e-5, atol=1e-5)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=50, deadline=None)
+        @given(st.integers(0, 2**32 - 1), st.sampled_from(range(len(AGGREGATORS))),
+               st.floats(1.0, 1e8))
+        def test_hypothesis(self, seed, agg_i, poison_scale):
+            rng = np.random.default_rng(seed)
+            stacked, mask = _random_case(rng)
+            if float(jnp.sum(mask)) == mask.shape[0]:
+                mask = mask.at[0].set(0.0)
+            inactive = (np.asarray(mask) < 0.5)
+            poisoned = {}
+            for k, v in stacked.items():
+                arr = np.asarray(v).copy()
+                arr[inactive] = poison_scale
+                poisoned[k] = jnp.asarray(arr)
+            agg = AGGREGATORS[agg_i]
+            _assert_trees_close(agg.combine(stacked, mask),
+                                agg.combine(poisoned, mask),
+                                rtol=1e-5, atol=1e-5)
+
+
+class TestMeanIsMaskedMean:
+    def test_seeded_sweep(self):
+        rng = np.random.default_rng(2)
+        agg = MeanAggregator()
+        for _ in range(25):
+            stacked, mask = _random_case(rng)
+            out = agg.combine(stacked, mask)
+            m = np.asarray(mask)
+            for k, v in stacked.items():
+                arr = np.asarray(v)
+                mm = m.reshape(-1, *([1] * (arr.ndim - 1)))
+                ref = (arr * mm).sum(axis=0) / m.sum()
+                np.testing.assert_allclose(np.asarray(out[k]), ref,
+                                           rtol=1e-5, atol=1e-5)
+
+
+class TestInt8ErrorBound:
+    """decode∘encode error is bounded by half a quantization step."""
+
+    @staticmethod
+    def _check(x):
+        comp = Int8Compressor()
+        dec = comp.decode(comp.encode({"x": x}))["x"]
+        scale = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-12
+        err = np.max(np.abs(np.asarray(dec) - np.asarray(x)))
+        assert err <= 0.5 * scale + 1e-6, (err, scale)
+
+    def test_seeded_sweep(self):
+        rng = np.random.default_rng(3)
+        for _ in range(50):
+            shape = tuple(rng.integers(1, 9, size=int(rng.integers(1, 3))))
+            scale = 10.0 ** rng.uniform(-3, 3)
+            x = jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+            self._check(x)
+
+    def test_wire_strictly_smaller_above_scale_overhead(self):
+        tree = {"a": jnp.ones((64,)), "b": jnp.ones((8, 8))}
+        assert Int8Compressor().wire_bytes(tree) < NoCompression().wire_bytes(tree)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=100, deadline=None)
+        @given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                        min_size=1, max_size=64))
+        def test_hypothesis(self, values):
+            self._check(jnp.asarray(np.asarray(values, np.float32)))

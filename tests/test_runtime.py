@@ -92,11 +92,28 @@ class TestSFVIServer:
 
 class TestSFVIAvgServer:
     def test_elbo_improves(self):
+        """Late-window mean ELBO beats the early window by more than the
+        estimator noise. The per-round ELBO is a single-sample MC
+        estimate, so comparing two individual draws (first vs last) is a
+        coin flip once the optimizer has converged — the old 25-step
+        rounds converged inside round 0, leaving only noise to compare.
+        Short rounds keep real signal across the run, the run is seeded,
+        and the tolerance is derived from the within-window variance of
+        the estimates themselves (2x the pooled standard error) instead
+        of a magic constant."""
         prob = _toy_problem()
-        silos = _make_silos(prob)
-        srv = SFVIAvgServer(prob, silos, {}, prob.global_family.init(jax.random.PRNGKey(1)), lambda: adam(5e-2))
-        h = srv.run(8, local_steps=25)
-        assert h["elbo"][-1] > h["elbo"][0]
+        silos = _make_silos(prob, lr=2e-2, seed=0)
+        srv = SFVIAvgServer(prob, silos, {},
+                            prob.global_family.init(jax.random.PRNGKey(1)),
+                            lambda: adam(2e-2), seed=0)
+        h = srv.run(12, local_steps=3)
+        elbo = np.asarray(h["elbo"])
+        early, late = elbo[:3], elbo[-3:]
+        pooled_se = np.sqrt(np.var(early, ddof=1) / early.size
+                            + np.var(late, ddof=1) / late.size)
+        assert late.mean() - early.mean() > 2.0 * pooled_se, (
+            f"improvement {late.mean() - early.mean():.3f} not significant "
+            f"vs estimator noise (2*SE = {2 * pooled_se:.3f}); trace {elbo}")
 
     def test_fewer_rounds_than_sfvi_for_same_steps(self):
         """Communication efficiency: m local steps per round -> 1 round of
