@@ -1,12 +1,13 @@
 """Federated-runtime scenario sweep (paper §3.2 + robustness + privacy).
 
-Runs the hierarchical BNN through ``repro.federated.Server`` under the
-scenario grid the runtime exposes — sync cadence (SFVI vs SFVI-Avg),
-wire compression (int8), robust aggregation (trimmed mean), partial
-participation with stragglers, and differentially private rounds — and
-reports final ELBO, test accuracy, per-round communication, per-round
-wall time and cumulative ε. This is the communication/privacy accounting
-surface the §3.2 acceptance claim reads from.
+Runs the hierarchical BNN through the declarative experiment API
+(``repro.federated.api``) under the scenario grid the runtime exposes —
+sync cadence (SFVI vs SFVI-Avg), wire compression (int8), robust
+aggregation (trimmed mean), partial participation with stragglers, and
+differentially private rounds — and reports final ELBO, test accuracy,
+per-round communication, per-round wall time and cumulative ε. Each row
+is one :class:`ExperimentSpec` (the same object ``--sweep`` builds in the
+CLI), so every benchmarked configuration is serializable and resumable.
 
 ``privacy_utility_sweep`` traces the ε↔utility frontier: one row per
 noise multiplier, ε vs ELBO vs accuracy vs wire bytes.
@@ -16,12 +17,10 @@ from __future__ import annotations
 import math
 import time
 
-import jax
-
-from benchmarks.common import print_table
-from repro.federated import Scenario, Server
-from repro.models.paper.fixtures import bnn_posterior_accuracy, hier_bnn_federation
-from repro.optim import adam
+from benchmarks.common import print_table, staged_experiment
+from repro.federated import Scenario
+from repro.models.paper.fixtures import bnn_posterior_accuracy
+from repro.models.paper.registry import get_model
 
 # The same declarative Scenario the CLI's --sweep walks (scheduler.py);
 # row labels come from Scenario.name.
@@ -37,21 +36,17 @@ SCENARIOS = [
 ]
 
 
-def _fit(bnn, train, test, sc: Scenario, *, J, rounds, local, lr, seed):
-    prob = bnn.problem
-    srv = Server(
-        prob, train, {}, prob.global_family.init(jax.random.PRNGKey(seed)),
-        server_opt=adam(lr), local_opt=adam(lr),
-        aggregator=sc.make_aggregator(), compressor=sc.compressor(),
-        privacy=sc.privacy(), seed=seed,
-    )
+def _fit(bundle, sc: Scenario, *, J, rounds, local, lr, seed):
+    exp = staged_experiment(
+        "hier_bnn", bundle, scenario=sc, num_silos=J, rounds=rounds,
+        local_steps=local, lr=lr, seed=seed)
     t0 = time.time()
-    hist = srv.run(rounds, algorithm=sc.algorithm, local_steps=local,
-                   scheduler=sc.scheduler(J, seed=seed))
+    hist = exp.run()
     dt = time.time() - t0
-    acc, _ = bnn_posterior_accuracy(bnn, srv.eta_G, srv.eta_L, test)
+    bnn, test = bundle.extras["bnn"], bundle.extras["test"]
+    acc, _ = bnn_posterior_accuracy(bnn, exp.eta_G, exp.eta_L, test)
     eps = hist["epsilon"][-1] if "epsilon" in hist else math.inf
-    return srv, hist, acc, eps, dt
+    return exp, hist, acc, eps, dt
 
 
 def run(quick: bool = True, seed: int = 0) -> dict:
@@ -59,21 +54,20 @@ def run(quick: bool = True, seed: int = 0) -> dict:
     rounds, local = (6, 10) if quick else (20, 25)
     lr = 2e-2
 
-    bnn, train, test = hier_bnn_federation(seed=seed, num_silos=J)
+    bundle = get_model("hier_bnn").build(seed, J)
 
     rows, out = [], {}
     for sc in SCENARIOS:
-        srv, hist, acc, eps, dt = _fit(
-            bnn, train, test, sc, J=J, rounds=rounds, local=local, lr=lr,
-            seed=seed)
+        exp, hist, acc, eps, dt = _fit(
+            bundle, sc, J=J, rounds=rounds, local=local, lr=lr, seed=seed)
         rows.append({
             "Scenario": sc.name,
             "ELBO": round(hist["elbo"][-1], 0),
             "Acc %": round(100 * acc, 1),
             "eps": "inf" if eps == math.inf else round(eps, 2),
-            "KiB/round": round(srv.comm.per_round / 1024, 1),
+            "KiB/round": round(exp.comm.per_round / 1024, 1),
             "s/round": round(dt / rounds, 2),
-            "Total MiB": round(srv.comm.total / 2**20, 2),
+            "Total MiB": round(exp.comm.total / 2**20, 2),
         })
         out[sc.name] = rows[-1]
 
@@ -103,20 +97,19 @@ def privacy_utility_sweep(quick: bool = True, seed: int = 0,
     J = 4 if quick else 8
     rounds, local = (6, 10) if quick else (20, 25)
     lr = 2e-2
-    bnn, train, test = hier_bnn_federation(seed=seed, num_silos=J)
+    bundle = get_model("hier_bnn").build(seed, J)
 
     rows = []
     for z in noise_multipliers:
         sc = Scenario(algorithm="sfvi_avg", dp_noise=z)
-        srv, hist, acc, eps, dt = _fit(
-            bnn, train, test, sc, J=J, rounds=rounds, local=local, lr=lr,
-            seed=seed)
+        exp, hist, acc, eps, dt = _fit(
+            bundle, sc, J=J, rounds=rounds, local=local, lr=lr, seed=seed)
         rows.append({
             "z": z,
             "eps": "inf" if eps == math.inf else round(eps, 2),
             "ELBO": round(hist["elbo"][-1], 0),
             "Acc %": round(100 * acc, 1),
-            "KiB/round": round(srv.comm.per_round / 1024, 1),
+            "KiB/round": round(exp.comm.per_round / 1024, 1),
             "s/round": round(dt / rounds, 2),
         })
 

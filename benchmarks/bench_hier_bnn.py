@@ -4,77 +4,54 @@ MNIST-like data: test accuracy of SFVI vs SFVI-Avg under severe label skew.
 The offline container substitutes synthetic-MNIST (same 784-dim, 10-class,
 90%-one-label-per-silo protocol; see DESIGN.md §7). CPU budget forces
 scaled-down iteration counts vs the paper's 10^4; the *ordering* claims
-(SFVI ≥ SFVI-Avg in accuracy; SFVI-Avg within a few points at ~500× less
+(SFVI ≥ SFVI-Avg in accuracy; SFVI-Avg within a few points at far less
 communication) are what we validate.
+
+Data is staged once per (model, seed) by the registry; each table cell is
+one declarative spec over the compiled runtime.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table
-from repro.core import SFVIAvgServer, SFVIServer, Silo
-from repro.data import heterogeneous_label_partition, make_synthetic_mnist
-from repro.models.paper import build_hier_bnn
-from repro.optim import adam
+from benchmarks.common import print_table, staged_experiment
+from repro.models.paper.registry import get_model
 
-
-def _posterior_mean_accuracy(bnn, server, silos, test_sets):
-    """Per-silo test accuracy using posterior means (MC-1 at the mean)."""
-    accs = []
-    for j, silo in enumerate(silos):
-        z_G = server.eta_G["mu"]
-        z_L = silo.eta_L["mu_bar"]
-        accs.append(float(bnn.accuracy(z_G, z_L, test_sets[j]["x"], test_sets[j]["y"])))
-    return float(np.mean(accs)), float(np.std(accs))
+K = 25  # local steps per compiled SFVI round (sync still every step)
 
 
 def run_once(seed: int, fedpop: bool, num_silos: int, quick: bool):
     in_dim, hidden = (196, 32) if quick else (784, 64)
-    n_train = 200 * num_silos if quick else 600 * num_silos
-    n_test = 40 * num_silos if quick else 100 * num_silos
+    train_per, test_per = (200, 40) if quick else (600, 100)
     sfvi_iters = 150 if quick else 800
     avg_rounds, avg_local = (10, 15) if quick else (20, 40)
     lr = 2e-2
 
-    key = jax.random.PRNGKey(seed)
-    # Harder-than-default noise so accuracies land in the paper's 90s range
-    # rather than saturating (synthetic prototypes are more separable than MNIST).
-    tr, te = make_synthetic_mnist(
-        key, n_train, n_test, dim=in_dim, prototype_scale=1.0, noise_scale=2.5
-    )
-    rng = np.random.default_rng(seed)
-    parts_tr = heterogeneous_label_partition(rng, tr.y, num_silos)
-    parts_te = heterogeneous_label_partition(rng, te.y, num_silos)
-    train = [{"x": jnp.asarray(tr.x[p]), "y": jnp.asarray(tr.y[p])} for p in parts_tr]
-    test = [{"x": jnp.asarray(te.x[p]), "y": jnp.asarray(te.y[p])} for p in parts_te]
-
-    bnn = build_hier_bnn(in_dim=in_dim, hidden=hidden, fedpop=fedpop)
-    prob = bnn.problem
-
-    def make_silos():
-        return [
-            Silo(j, prob, train[j],
-                 prob.local_family.init(jax.random.PRNGKey(1000 + seed * 100 + j)),
-                 adam(lr), len(parts_tr[j]))
-            for j in range(num_silos)
-        ]
+    name = "fedpop_bnn" if fedpop else "hier_bnn"
+    kw = dict(in_dim=in_dim, hidden=hidden,
+              train_per_silo=train_per, test_per_silo=test_per)
+    bundle = get_model(name).build(seed, num_silos, **kw)
 
     results = {}
-    # --- SFVI ---
-    silos = make_silos()
-    srv = SFVIServer(prob, silos, {}, prob.global_family.init(jax.random.PRNGKey(seed)), adam(lr))
-    srv.run(sfvi_iters)
-    acc, std = _posterior_mean_accuracy(bnn, srv, silos, test)
-    results["SFVI"] = (acc, std, srv.comm.rounds, srv.comm.total)
+    # --- SFVI (sync every optimizer step) ---
+    exp = staged_experiment(
+        name, bundle, algorithm="sfvi", num_silos=num_silos,
+        rounds=max(sfvi_iters // K, 1), local_steps=K, lr=lr, seed=seed,
+        model_kwargs=kw)
+    exp.run()
+    scores = exp.evaluate()
+    results["SFVI"] = (scores["test_acc"], scores["test_acc_std"],
+                       exp.comm.rounds, exp.comm.total)
 
-    # --- SFVI-Avg ---
-    silos = make_silos()
-    srv2 = SFVIAvgServer(prob, silos, {}, prob.global_family.init(jax.random.PRNGKey(seed)), lambda: adam(lr))
-    srv2.run(avg_rounds, local_steps=avg_local)
-    acc2, std2 = _posterior_mean_accuracy(bnn, srv2, silos, test)
-    results["SFVI-Avg"] = (acc2, std2, srv2.comm.rounds, srv2.comm.total)
+    # --- SFVI-Avg (one sync per round of avg_local steps) ---
+    exp2 = staged_experiment(
+        name, bundle, algorithm="sfvi_avg", num_silos=num_silos,
+        rounds=avg_rounds, local_steps=avg_local, lr=lr, seed=seed,
+        model_kwargs=kw)
+    exp2.run()
+    scores2 = exp2.evaluate()
+    results["SFVI-Avg"] = (scores2["test_acc"], scores2["test_acc_std"],
+                           exp2.comm.rounds, exp2.comm.total)
     return results
 
 

@@ -5,42 +5,45 @@ SFVI-Avg (frequent averaging), and SFVI, in small-silo (J=25, N_j=200) and
 large-silo (J=5, N_j large) regimes.
 Figure S2: warm-starting SFVI from a few SFVI-Avg rounds reaches a target
 ELBO in fewer rounds than cold-started SFVI.
+
+Every fit is one declarative spec over the compiled runtime: the data is
+staged once per regime through the model registry, and each table row is
+a ``staged_experiment`` over that bundle (``benchmarks/common.py``).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table
-from repro.core import SFVIAvgServer, SFVIServer, Silo
-from repro.data import iid_partition, make_synthetic_mnist
-from repro.models.paper import build_multinomial
-from repro.models.paper.multinomial import init_theta
-from repro.optim import adam
+from benchmarks.common import print_table, silo_subset, staged_experiment
+from repro.models.paper.registry import get_model
 
-
-def _make(in_dim, J, n_per, seed):
-    # Hard-mode synthetic data: linear classifier cannot saturate, so the
-    # Independent < SFVI-Avg < SFVI ordering of Table S1 is visible.
-    tr, te = make_synthetic_mnist(
-        jax.random.PRNGKey(seed), J * n_per, max(200, J * 20), dim=in_dim,
-        prototype_scale=0.6, noise_scale=3.0,
-    )
-    rng = np.random.default_rng(seed)
-    parts = iid_partition(rng, len(tr.y), J)
-    datas = [{"x": jnp.asarray(tr.x[p]), "y": jnp.asarray(tr.y[p])} for p in parts]
-    test = {"x": jnp.asarray(te.x), "y": jnp.asarray(te.y)}
-    train_all = {"x": jnp.asarray(tr.x), "y": jnp.asarray(tr.y)}
-    return datas, train_all, test
+# SFVI syncs every optimizer step; batching K steps per compiled round
+# keeps the Python loop short without changing the sync count.
+K = 25
 
 
 def _acc(model, eta_G, split):
     return 100 * float(model.accuracy(eta_G["mu"], split["x"], split["y"]))
 
 
-def _silos(prob, datas):
-    return [Silo(j, prob, datas[j], None, None, int(datas[j]["y"].shape[0])) for j in range(len(datas))]
+def _sfvi(bundle, *, J, steps, lr, seed, staging, warm=None):
+    exp = staged_experiment(
+        "multinomial", bundle, algorithm="sfvi", num_silos=J,
+        rounds=max(steps // K, 1), local_steps=min(K, steps), lr=lr, seed=seed,
+        data_seed=staging[0], model_kwargs=staging[1])
+    if warm is not None:
+        exp.warm_start(theta=warm[0], eta_G=warm[1])
+    hist = exp.run()
+    return exp, hist
+
+
+def _avg(bundle, *, J, rounds, local_steps, lr, seed, staging):
+    exp = staged_experiment(
+        "multinomial", bundle, algorithm="sfvi_avg", num_silos=J,
+        rounds=rounds, local_steps=local_steps, lr=lr, seed=seed,
+        data_seed=staging[0], model_kwargs=staging[1])
+    hist = exp.run()
+    return exp, hist
 
 
 def run(quick: bool = True) -> dict:
@@ -50,46 +53,45 @@ def run(quick: bool = True) -> dict:
     rows = []
     for J, n_per, label in [(8, 60, "J=8 N_j=60") if quick else (25, 200, "J=25 N_j=200"),
                             (3, 400, "J=3 N_j=400") if quick else (5, 2000, "J=5 N_j=2000")]:
-        datas, train_all, test = _make(in_dim, J, n_per, seed=J)
-        model = build_multinomial(in_dim=in_dim)
-        prob = model.problem
+        kw = dict(n_per=n_per, in_dim=in_dim)
+        staging = (J, kw)  # (data_seed, model kwargs) — recorded in specs
+        bundle = get_model("multinomial").build(J, J, **kw)
+        model = bundle.extras["model"]
+        train_all, test = bundle.extras["train_all"], bundle.extras["test"]
         total_steps = 400 if quick else 3000
 
-        # Independent: silo 0 alone (paper's per-silo baseline, averaged).
+        # Independent: single silos fitting alone (paper baseline, averaged).
         ind_tr, ind_te = [], []
         for j in range(min(3, J)):
-            srv = SFVIServer(prob, [_silos(prob, [datas[j]])[0]], init_theta(),
-                             prob.global_family.init(jax.random.PRNGKey(1)), adam(lr))
-            srv.run(total_steps)
-            ind_tr.append(_acc(model, srv.eta_G, datas[j]))
-            ind_te.append(_acc(model, srv.eta_G, test))
+            exp, _ = _sfvi(silo_subset(bundle, [j]), J=1, steps=total_steps,
+                           lr=lr, seed=1, staging=staging)
+            ind_tr.append(_acc(model, exp.eta_G, bundle.datas[j]))
+            ind_te.append(_acc(model, exp.eta_G, test))
         rows.append({"Regime": label, "Method": "Independent", "Rounds": 0,
                      "Train %": round(np.mean(ind_tr), 1), "Test %": round(np.mean(ind_te), 1)})
 
         # SFVI-Avg, single late average (1 round of many local steps).
-        srv = SFVIAvgServer(prob, _silos(prob, datas), init_theta(),
-                            prob.global_family.init(jax.random.PRNGKey(1)), lambda: adam(lr))
-        srv.run(1, local_steps=total_steps)
+        exp, _ = _avg(bundle, J=J, rounds=1, local_steps=total_steps, lr=lr,
+                      seed=1, staging=staging)
         rows.append({"Regime": label, "Method": f"SFVI-Avg({total_steps})", "Rounds": 1,
-                     "Train %": round(_acc(model, srv.eta_G, train_all), 1),
-                     "Test %": round(_acc(model, srv.eta_G, test), 1)})
+                     "Train %": round(_acc(model, exp.eta_G, train_all), 1),
+                     "Test %": round(_acc(model, exp.eta_G, test), 1)})
 
         # SFVI-Avg, frequent averaging.
         n_rounds = 20 if quick else 50
-        srv = SFVIAvgServer(prob, _silos(prob, datas), init_theta(),
-                            prob.global_family.init(jax.random.PRNGKey(1)), lambda: adam(lr))
-        srv.run(n_rounds, local_steps=total_steps // n_rounds)
+        exp, _ = _avg(bundle, J=J, rounds=n_rounds,
+                      local_steps=total_steps // n_rounds, lr=lr, seed=1,
+                      staging=staging)
         rows.append({"Regime": label, "Method": f"SFVI-Avg({total_steps//n_rounds})", "Rounds": n_rounds,
-                     "Train %": round(_acc(model, srv.eta_G, train_all), 1),
-                     "Test %": round(_acc(model, srv.eta_G, test), 1)})
+                     "Train %": round(_acc(model, exp.eta_G, train_all), 1),
+                     "Test %": round(_acc(model, exp.eta_G, test), 1)})
 
-        # SFVI.
-        srv = SFVIServer(prob, _silos(prob, datas), init_theta(),
-                         prob.global_family.init(jax.random.PRNGKey(1)), adam(lr))
-        srv.run(total_steps)
-        sfvi_test = _acc(model, srv.eta_G, test)
+        # SFVI (one sync per optimizer step).
+        exp, _ = _sfvi(bundle, J=J, steps=total_steps, lr=lr, seed=1,
+                       staging=staging)
+        sfvi_test = _acc(model, exp.eta_G, test)
         rows.append({"Regime": label, "Method": "SFVI", "Rounds": total_steps,
-                     "Train %": round(_acc(model, srv.eta_G, train_all), 1),
+                     "Train %": round(_acc(model, exp.eta_G, train_all), 1),
                      "Test %": round(sfvi_test, 1)})
         results[label] = sfvi_test
 
@@ -97,20 +99,18 @@ def run(quick: bool = True) -> dict:
                 ["Regime", "Method", "Rounds", "Train %", "Test %"])
 
     # ---- Figure S2: SFVI-Avg warm start halves SFVI convergence ----
-    datas, train_all, test = _make(in_dim, 4, 100, seed=7)
-    model = build_multinomial(in_dim=in_dim)
-    prob = model.problem
-    warm_srv = SFVIAvgServer(prob, _silos(prob, datas), init_theta(),
-                             prob.global_family.init(jax.random.PRNGKey(2)), lambda: adam(lr))
-    warm_srv.run(5, local_steps=60 if quick else 1000)
-
-    def sfvi_curve(theta0, eta0, iters):
-        srv = SFVIServer(prob, _silos(prob, datas), theta0, eta0, adam(lr))
-        return srv.run(iters)["elbo"]
+    kw = dict(n_per=100, in_dim=in_dim)
+    staging = (7, kw)
+    bundle = get_model("multinomial").build(7, 4, **kw)
+    warm_exp, _ = _avg(bundle, J=4, rounds=5,
+                       local_steps=60 if quick else 1000, lr=lr, seed=2,
+                       staging=staging)
 
     iters = 150 if quick else 2000
-    cold = sfvi_curve(init_theta(), prob.global_family.init(jax.random.PRNGKey(2)), iters)
-    warm = sfvi_curve(warm_srv.theta, warm_srv.eta_G, iters)
+    _, cold_h = _sfvi(bundle, J=4, steps=iters, lr=lr, seed=2, staging=staging)
+    _, warm_h = _sfvi(bundle, J=4, steps=iters, lr=lr, seed=2, staging=staging,
+                      warm=(warm_exp.theta, warm_exp.eta_G))
+    cold, warm = cold_h["elbo_trace"], warm_h["elbo_trace"]
     target = cold[-1]
     reach_cold = next((i for i, v in enumerate(cold) if v >= target), iters)
     reach_warm = next((i for i, v in enumerate(warm) if v >= target), iters)

@@ -5,53 +5,29 @@
 The paper's headline findings to reproduce: federated fits beat independent
 per-silo fits on coherence, and SFVI-Avg can beat SFVI on coherence despite
 a lower ELBO.
+
+The corpus is staged once by the registry; every fit (including the
+per-silo independent baselines, via ``silo_subset``) is one declarative
+spec over the compiled runtime.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table
-from repro.core import SFVIAvgServer, SFVIServer, Silo
-from repro.data import make_lda_corpus
-from repro.models.paper import build_prodlda
-from repro.models.paper.prodlda import init_theta, umass_coherence
-from repro.optim import adam
+from benchmarks.common import print_table, silo_subset, staged_experiment
+from repro.models.paper.prodlda import umass_coherence
+from repro.models.paper.registry import get_model
+
+K = 25  # local steps per compiled SFVI round (sync still every step)
 
 
-def _fit_sfvi(lda, datas, iters, lr, seed):
-    prob = lda.problem
-    silos = [
-        Silo(j, prob, datas[j], prob.local_family.init(jax.random.PRNGKey(50 + j)),
-             adam(lr), lda.docs_per_silo)
-        for j in range(len(datas))
-    ]
-    srv = SFVIServer(prob, silos, init_theta(), prob.global_family.init(jax.random.PRNGKey(seed)), adam(lr))
-    hist = srv.run(iters)
-    return srv, hist
-
-
-def _fit_avg(lda, datas, rounds, local_steps, lr, seed):
-    prob = lda.problem
-    silos = [
-        Silo(j, prob, datas[j], prob.local_family.init(jax.random.PRNGKey(50 + j)),
-             adam(lr), lda.docs_per_silo)
-        for j in range(len(datas))
-    ]
-    srv = SFVIAvgServer(prob, silos, init_theta(), prob.global_family.init(jax.random.PRNGKey(seed)), lambda: adam(lr))
-    hist = srv.run(rounds, local_steps=local_steps)
-    return srv, hist
-
-
-def _fit_independent(lda, data_j, iters, lr, seed):
-    """One silo fitting alone (the paper's per-silo baseline)."""
-    prob = lda.problem
-    silo = Silo(0, prob, data_j, prob.local_family.init(jax.random.PRNGKey(60 + seed)),
-                adam(lr), lda.docs_per_silo)
-    srv = SFVIServer(prob, [silo], init_theta(), prob.global_family.init(jax.random.PRNGKey(seed)), adam(lr))
-    srv.run(iters)
-    return srv
+def _fit(bundle, *, algorithm, rounds, local_steps, lr, seed, staging):
+    exp = staged_experiment(
+        "prodlda", bundle, algorithm=algorithm, num_silos=len(bundle.datas),
+        rounds=rounds, local_steps=local_steps, lr=lr, seed=seed,
+        data_seed=staging[0], model_kwargs=staging[1])
+    hist = exp.run()
+    return exp, hist
 
 
 def run(quick: bool = True, iters_scale: float = 1.0) -> dict:
@@ -64,15 +40,20 @@ def run(quick: bool = True, iters_scale: float = 1.0) -> dict:
     lr = 5e-2
     J = 3
 
-    counts, _true = make_lda_corpus(
-        jax.random.PRNGKey(0), num_docs=J * dps, vocab_size=vocab, num_topics=topics
-    )
-    lda = build_prodlda(vocab_size=vocab, num_topics=topics, docs_per_silo=dps)
-    datas = [{"counts": jnp.asarray(counts[j * dps : (j + 1) * dps])} for j in range(J)]
+    kw = dict(vocab_size=vocab, num_topics=topics, docs_per_silo=dps)
+    staging = (0, kw)  # (data_seed, model kwargs) — recorded in specs
+    bundle = get_model("prodlda").build(0, J, **kw)
+    lda, counts = bundle.extras["lda"], bundle.extras["counts"]
 
-    srv_sfvi, hist_sfvi = _fit_sfvi(lda, datas, iters, lr, seed=1)
-    srv_avg, hist_avg = _fit_avg(lda, datas, rounds, local, lr, seed=1)
-    indep = [_fit_independent(lda, datas[j], iters, lr, seed=j) for j in range(J)]
+    exp_sfvi, hist_sfvi = _fit(bundle, algorithm="sfvi",
+                               rounds=max(iters // K, 1), local_steps=K,
+                               lr=lr, seed=1, staging=staging)
+    exp_avg, hist_avg = _fit(bundle, algorithm="sfvi_avg", rounds=rounds,
+                             local_steps=local, lr=lr, seed=1, staging=staging)
+    indep = [_fit(silo_subset(bundle, [j]), algorithm="sfvi",
+                  rounds=max(iters // K, 1), local_steps=K, lr=lr, seed=j,
+                  staging=staging)[0]
+             for j in range(J)]
 
     def coherence_of(eta_G):
         t = np.asarray(lda.topics(eta_G["mu"]))
@@ -80,13 +61,13 @@ def run(quick: bool = True, iters_scale: float = 1.0) -> dict:
 
     rows = []
     coh = {}
-    for name, srv in [("SFVI", srv_sfvi), ("SFVI-Avg", srv_avg)]:
-        c = coherence_of(srv.eta_G)
+    for name, exp in [("SFVI", exp_sfvi), ("SFVI-Avg", exp_avg)]:
+        c = coherence_of(exp.eta_G)
         coh[name] = c
         rows.append({"Method": name, "Coherence median": round(float(np.median(c)), 2),
                      "Coherence mean": round(float(np.mean(c)), 2),
-                     "Rounds": srv.comm.rounds, "Comm MiB": round(srv.comm.total / 2**20, 1)})
-    c_ind = np.concatenate([coherence_of(s.eta_G) for s in indep])
+                     "Rounds": exp.comm.rounds, "Comm MiB": round(exp.comm.total / 2**20, 1)})
+    c_ind = np.concatenate([coherence_of(e.eta_G) for e in indep])
     coh["Independent"] = c_ind
     rows.append({"Method": "Independent silos", "Coherence median": round(float(np.median(c_ind)), 2),
                  "Coherence mean": round(float(np.mean(c_ind)), 2), "Rounds": 0, "Comm MiB": 0.0})
@@ -94,8 +75,8 @@ def run(quick: bool = True, iters_scale: float = 1.0) -> dict:
                 rows, ["Method", "Coherence median", "Coherence mean", "Rounds", "Comm MiB"])
 
     print("\nFigure 2(b) — ELBO trajectory endpoints:")
-    print(f"  SFVI     : {hist_sfvi['elbo'][0]:.0f} -> {hist_sfvi['elbo'][-1]:.0f}"
-          f"  ({iters} rounds)")
+    print(f"  SFVI     : {hist_sfvi['elbo_trace'][0]:.0f} -> {hist_sfvi['elbo_trace'][-1]:.0f}"
+          f"  ({iters} sync steps)")
     print(f"  SFVI-Avg : {hist_avg['elbo'][0]:.0f} -> {hist_avg['elbo'][-1]:.0f}"
           f"  ({rounds} rounds x {local} local steps)")
     return {

@@ -1,6 +1,14 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+``staged_experiment`` / ``silo_subset`` are the single data-staging path
+for every benchmark: models are staged once through the registry
+(:mod:`repro.models.paper.registry`) and each benchmarked configuration
+is one declarative :class:`~repro.federated.api.ExperimentSpec` built
+over that bundle — no benchmark constructs silos or servers by hand.
+"""
 from __future__ import annotations
 
+import dataclasses
 import time
 from contextlib import contextmanager
 
@@ -26,3 +34,55 @@ def fmt(x, nd=3):
     if isinstance(x, float):
         return round(x, nd)
     return x
+
+
+def staged_experiment(model: str, bundle, *, num_silos: int, rounds: int,
+                      local_steps: int = 1, scenario=None, algorithm=None,
+                      lr: float = 2e-2, local_lr=None, seed: int = 0,
+                      data_seed=None, eta_mode: str = "barycenter",
+                      model_kwargs=None, eval_every: int = 0):
+    """Spec-build an Experiment over a pre-staged registry bundle.
+
+    One bundle (one dataset staging) can serve many specs — algorithms,
+    scenarios, seeds — which is exactly how the benchmark tables are
+    built. Pass either a full ``scenario`` or just ``algorithm``.
+
+    For the spec to faithfully describe the run (so ``Experiment.save``
+    -> ``resume`` re-stages the same data), ``model_kwargs`` and
+    ``data_seed`` must match what the bundle was built with. Bundles
+    restricted with :func:`silo_subset` are NOT spec-describable — don't
+    resume those from disk.
+    """
+    from repro.federated import (ExperimentSpec, ModelSpec, OptimizerSpec,
+                                 Scenario, build)
+
+    sc = scenario if scenario is not None else Scenario(
+        algorithm=algorithm or "sfvi")
+    spec = ExperimentSpec(
+        model=ModelSpec(model, kwargs=dict(model_kwargs or {})),
+        scenario=sc,
+        num_silos=num_silos,
+        rounds=rounds,
+        local_steps=local_steps,
+        server_opt=OptimizerSpec("adam", lr),
+        local_opt=OptimizerSpec("adam", local_lr) if local_lr else None,
+        eta_mode=eta_mode,
+        eval_every=eval_every,
+        seed=seed,
+        data_seed=data_seed,
+    )
+    return build(spec, bundle=bundle)
+
+
+def silo_subset(bundle, indices):
+    """Restrict a staged bundle to a subset of its silos.
+
+    Used for the paper's "independent" baselines (one silo fitting
+    alone) without re-staging data.
+    """
+    return dataclasses.replace(
+        bundle,
+        datas=[bundle.datas[j] for j in indices],
+        num_obs=([bundle.num_obs[j] for j in indices]
+                 if bundle.num_obs is not None else None),
+    )

@@ -1,8 +1,10 @@
 """Paper §4.1: hierarchical Bayesian neural network on heterogeneous data,
 trained with SFVI and with SFVI-Avg — the paper's headline experiment,
-driven through the compiled federated runtime (``repro.federated``): all
-silos advance inside one ``shard_map`` graph, and the communication meter
-reports the §3.2 efficiency claim directly.
+driven through the declarative experiment API (``repro.federated.api``):
+each fit is one serializable :class:`ExperimentSpec` built into an
+:class:`Experiment` over the compiled runtime (all silos advance inside
+one ``shard_map`` graph), and the communication meter reports the §3.2
+efficiency claim directly.
 
 ``--dp-noise z`` additionally runs a differentially private SFVI-Avg fit
 (per-silo clip + Gaussian noise inside the compiled round, docs/privacy.md)
@@ -13,22 +15,24 @@ Run:  PYTHONPATH=src:. python examples/federated_bnn.py [--silos 5] [--fedpop]
 """
 import argparse
 
-import jax
+from repro.federated import (ExperimentSpec, ModelSpec, OptimizerSpec,
+                             Scenario, build)
+from repro.models.paper.fixtures import bnn_posterior_accuracy
+from repro.models.paper.registry import get_model
 
-from repro.federated import PrivacyPolicy, Server
-from repro.models.paper.fixtures import bnn_posterior_accuracy, hier_bnn_federation
-from repro.optim import adam
 
-
-def fit(bnn, train, *, seed, algorithm, rounds, local_steps, lr=2e-2,
-        privacy=None):
-    prob = bnn.problem
-    srv = Server(
-        prob, train, {}, prob.global_family.init(jax.random.PRNGKey(seed)),
-        server_opt=adam(lr), local_opt=adam(lr), privacy=privacy, seed=seed,
+def fit(model_name, bundle, *, num_silos, seed, algorithm, rounds,
+        local_steps, lr=2e-2, dp_noise=0.0, dp_clip=1.0):
+    spec = ExperimentSpec(
+        model=ModelSpec(model_name),
+        scenario=Scenario(algorithm=algorithm, dp_noise=dp_noise,
+                          dp_clip=dp_clip, dp_delta=1e-5),
+        num_silos=num_silos, rounds=rounds, local_steps=local_steps,
+        server_opt=OptimizerSpec("adam", lr), seed=seed,
     )
-    srv.run(rounds, algorithm=algorithm, local_steps=local_steps)
-    return srv
+    exp = build(spec, bundle=bundle)
+    exp.run()
+    return exp
 
 
 def main():
@@ -42,37 +46,36 @@ def main():
     ap.add_argument("--dp-clip", type=float, default=1.0)
     args = ap.parse_args()
 
-    bnn, train, test = hier_bnn_federation(
-        seed=0, num_silos=args.silos, fedpop=args.fedpop)
+    model_name = "fedpop_bnn" if args.fedpop else "hier_bnn"
+    bundle = get_model(model_name).build(0, args.silos)
+    bnn, test = bundle.extras["bnn"], bundle.extras["test"]
     # Equal optimizer-step budget: SFVI syncs every step, SFVI-Avg every 15.
-    srv_sfvi = fit(bnn, train, seed=0, algorithm="sfvi", rounds=10,
-                   local_steps=15)
-    srv_avg = fit(bnn, train, seed=0, algorithm="sfvi_avg", rounds=10,
-                  local_steps=15)
+    common = dict(num_silos=args.silos, seed=0, rounds=10, local_steps=15)
+    exp_sfvi = fit(model_name, bundle, algorithm="sfvi", **common)
+    exp_avg = fit(model_name, bundle, algorithm="sfvi_avg", **common)
 
-    fits = [("SFVI", srv_sfvi), ("SFVI-Avg", srv_avg)]
+    fits = [("SFVI", exp_sfvi), ("SFVI-Avg", exp_avg)]
     if args.dp_noise > 0:
-        policy = PrivacyPolicy(clip_norm=args.dp_clip,
-                               noise_multiplier=args.dp_noise, delta=1e-5)
-        srv_dp = fit(bnn, train, seed=0, algorithm="sfvi_avg", rounds=10,
-                     local_steps=15, privacy=policy)
-        fits.append(("SFVI-Avg+DP", srv_dp))
+        exp_dp = fit(model_name, bundle, algorithm="sfvi_avg",
+                     dp_noise=args.dp_noise, dp_clip=args.dp_clip, **common)
+        fits.append(("SFVI-Avg+DP", exp_dp))
 
     print("\n== test accuracy across silos ==")
     results = {}
-    for name, srv in fits:
-        acc, std = bnn_posterior_accuracy(bnn, srv.eta_G, srv.eta_L, test)
-        results[name] = (acc, srv)
+    for name, exp in fits:
+        acc, std = bnn_posterior_accuracy(bnn, exp.eta_G, exp.eta_L, test)
+        results[name] = (acc, exp)
         priv = ""
-        if srv.accountant is not None:
-            eps, _ = srv.accountant.epsilon(srv.privacy.delta)
-            priv = f"  ({eps:.2f}, {srv.privacy.delta:g})-DP"
+        if exp.accountant is not None:
+            delta = exp.spec.scenario.dp_delta
+            eps, _ = exp.accountant.epsilon(delta)
+            priv = f"  ({eps:.2f}, {delta:g})-DP"
         print(f"  {name:>11s}: {100*acc:5.1f}% (std {100*std:.2f})  "
-              f"{srv.comm.rounds} rounds, {srv.comm.total/2**20:.1f} MiB total "
-              f"comm ({srv.comm.per_round/2**20:.2f} MiB/round){priv}")
+              f"{exp.comm.rounds} rounds, {exp.comm.total/2**20:.1f} MiB total "
+              f"comm ({exp.comm.per_round/2**20:.2f} MiB/round){priv}")
 
     assert results["SFVI"][0] > 0.5, "SFVI should beat random chance comfortably"
-    ratio = srv_sfvi.comm.total / max(srv_avg.comm.total, 1)
+    ratio = exp_sfvi.comm.total / max(exp_avg.comm.total, 1)
     print(f"\nSFVI-Avg reaches {100*results['SFVI-Avg'][0]:.1f}% with "
           f"{ratio:.0f}x less communication for the same local-step budget "
           f"(the paper's communication-efficiency claim).")

@@ -1,5 +1,6 @@
 """Paper §4.2: federated ProdLDA topic modelling across 3 silos, driven
-through the compiled federated runtime (``repro.federated``).
+through the declarative experiment API (``repro.federated.api``) over the
+compiled runtime.
 
 Fits the ProdLDA generative model with SFVI (global topics T live on the
 server; per-document weights W_k never leave their silo), with SFVI-Avg,
@@ -13,32 +14,32 @@ reports the coherence it retains next to its (ε, δ).
 Run:  PYTHONPATH=src:. python examples/prodlda_topics.py [--dp-noise 0.5]
 """
 import argparse
+import dataclasses
 
-import jax
 import numpy as np
 
-from repro.federated import PrivacyPolicy, Server
-from repro.models.paper.fixtures import prodlda_federation
-from repro.models.paper.prodlda import init_theta, umass_coherence
-from repro.optim import adam
+from repro.federated import (ExperimentSpec, ModelSpec, OptimizerSpec,
+                             Scenario, build)
+from repro.models.paper.prodlda import umass_coherence
+from repro.models.paper.registry import get_model
 
 J = 3
 LR = 5e-2
 
 
-def fit(lda, datas, *, seed, algorithm, rounds, local_steps, privacy=None):
-    prob = lda.problem
-    srv = Server(
-        prob, datas, init_theta(),
-        prob.global_family.init(jax.random.PRNGKey(seed)),
-        num_obs=[lda.docs_per_silo] * len(datas),
-        server_opt=adam(LR),
-        local_opt=adam(LR),
-        privacy=privacy,
-        seed=seed,
+def fit(bundle, *, num_silos, seed, algorithm, rounds, local_steps,
+        dp_noise=0.0, dp_clip=1.0):
+    spec = ExperimentSpec(
+        model=ModelSpec("prodlda"),
+        scenario=Scenario(algorithm=algorithm, dp_noise=dp_noise,
+                          dp_clip=dp_clip, dp_delta=1e-5),
+        num_silos=num_silos, rounds=rounds, local_steps=local_steps,
+        server_opt=OptimizerSpec("adam", LR), seed=seed,
+        data_seed=0,  # the bundle below is staged at seed 0
     )
-    hist = srv.run(rounds, algorithm=algorithm, local_steps=local_steps)
-    return srv, hist
+    exp = build(spec, bundle=bundle)
+    hist = exp.run()
+    return exp, hist
 
 
 def main():
@@ -48,46 +49,53 @@ def main():
     ap.add_argument("--dp-clip", type=float, default=1.0)
     args = ap.parse_args()
 
-    lda, datas, counts = prodlda_federation(seed=0, num_silos=J)
+    bundle = get_model("prodlda").build(0, J)
+    lda, counts = bundle.extras["lda"], bundle.extras["counts"]
+
+    def silo_bundle(j):
+        """One silo fitting alone (the paper's per-silo baseline)."""
+        return dataclasses.replace(
+            bundle, datas=[bundle.datas[j]], num_obs=[bundle.num_obs[j]])
 
     # Equal local-step budgets: 600 steps each; SFVI syncs every step,
     # SFVI-Avg every 25 (24 rounds), independent silos never.
-    srv_sfvi, hist_sfvi = fit(lda, datas, seed=1, algorithm="sfvi",
+    exp_sfvi, hist_sfvi = fit(bundle, num_silos=J, seed=1, algorithm="sfvi",
                               rounds=24, local_steps=25)
-    srv_avg, hist_avg = fit(lda, datas, seed=1, algorithm="sfvi_avg",
+    exp_avg, hist_avg = fit(bundle, num_silos=J, seed=1, algorithm="sfvi_avg",
                             rounds=24, local_steps=25)
-    indep = [fit(lda, [datas[j]], seed=1 + 10 * j, algorithm="sfvi_avg",
-                 rounds=1, local_steps=600)[0] for j in range(J)]
+    indep = [fit(silo_bundle(j), num_silos=1, seed=1 + 10 * j,
+                 algorithm="sfvi_avg", rounds=1, local_steps=600)[0]
+             for j in range(J)]
 
     def coherence_of(eta_G):
         t = np.asarray(lda.topics(eta_G["mu"]))
         return umass_coherence(t, np.asarray(counts), top_n=8)
 
     coh = {
-        "SFVI": float(np.median(coherence_of(srv_sfvi.eta_G))),
-        "SFVI-Avg": float(np.median(coherence_of(srv_avg.eta_G))),
+        "SFVI": float(np.median(coherence_of(exp_sfvi.eta_G))),
+        "SFVI-Avg": float(np.median(coherence_of(exp_avg.eta_G))),
         "Independent": float(np.median(
-            np.concatenate([coherence_of(s.eta_G) for s in indep]))),
+            np.concatenate([coherence_of(e.eta_G) for e in indep]))),
     }
-    srv_dp = None
+    exp_dp = None
     if args.dp_noise > 0:
-        policy = PrivacyPolicy(clip_norm=args.dp_clip,
-                               noise_multiplier=args.dp_noise, delta=1e-5)
-        srv_dp, _ = fit(lda, datas, seed=1, algorithm="sfvi_avg",
-                        rounds=24, local_steps=25, privacy=policy)
-        coh["SFVI-Avg+DP"] = float(np.median(coherence_of(srv_dp.eta_G)))
+        exp_dp, _ = fit(bundle, num_silos=J, seed=1, algorithm="sfvi_avg",
+                        rounds=24, local_steps=25,
+                        dp_noise=args.dp_noise, dp_clip=args.dp_clip)
+        coh["SFVI-Avg+DP"] = float(np.median(coherence_of(exp_dp.eta_G)))
 
     print("\n== ProdLDA median topic coherence (UMass; higher is better) ==")
     for k, v in coh.items():
         print(f"  {k:>12s}: {v:.3f}")
-    if srv_dp is not None:
-        eps, _ = srv_dp.accountant.epsilon(srv_dp.privacy.delta)
-        print(f"  SFVI-Avg+DP is ({eps:.2f}, {srv_dp.privacy.delta:g})-DP "
+    if exp_dp is not None:
+        delta = exp_dp.spec.scenario.dp_delta
+        eps, _ = exp_dp.accountant.epsilon(delta)
+        print(f"  SFVI-Avg+DP is ({eps:.2f}, {delta:g})-DP "
               f"(z={args.dp_noise:g}, C={args.dp_clip:g})")
     print("\n== communication (same 600-local-step budget) ==")
-    for name, srv in [("SFVI", srv_sfvi), ("SFVI-Avg", srv_avg)]:
-        print(f"  {name:>12s}: {srv.comm.total/2**20:6.1f} MiB total "
-              f"({srv.comm.per_round/2**20:.2f} MiB/round)")
+    for name, exp in [("SFVI", exp_sfvi), ("SFVI-Avg", exp_avg)]:
+        print(f"  {name:>12s}: {exp.comm.total/2**20:6.1f} MiB total "
+              f"({exp.comm.per_round/2**20:.2f} MiB/round)")
 
     # The paper's §4.2 findings, reproduced:
     #   (i) the communication-efficient SFVI-Avg yields the most coherent

@@ -1,95 +1,76 @@
 """Quickstart: SFVI on a tiny hierarchical Gaussian model, federated
-across 3 silos — the paper's Algorithm 1 end to end in ~60 lines of API.
+across 3 silos — the paper's Algorithm 1 end to end through the
+declarative experiment API.
 
-Demonstrates:
-  * the StructuredModel contract (eqs. (1)-(3)),
-  * the structured variational family q(Z_G) prod_j q(Z_Lj | Z_G),
-  * the hub-and-spoke runtime (Server/Silo) with metered communication,
-  * partition invariance: the federated result equals the centralized one.
+One :class:`ExperimentSpec` describes the whole run (model by registry
+name, scenario, optimizers, seed) and serializes to JSON; ``build``
+assembles the compiled runtime (all silos advance inside one
+``shard_map`` graph); ``save``/``resume`` checkpoint the full round
+state — the second half of the run below continues from disk and lands
+on EXACTLY the state an uninterrupted run reaches.
+
+Model (registered as "toy"):
+    mu ~ N(0, 10^2)            — global Z_G
+    b_j | mu ~ N(mu, 1)        — one local latent per silo Z_Lj
+    y_jk | b_j ~ N(b_j, 0.5^2) — 40 observations per silo
+The exact posterior of mu is Gaussian, so we can check the answer.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+import tempfile
+
 import numpy as np
 
-from repro.core import (
-    ConditionalGaussian,
-    DiagGaussian,
-    SFVIProblem,
-    SFVIServer,
-    Silo,
-    StructuredModel,
-)
-from repro.optim.adam import adam
+from repro.federated import (Experiment, ExperimentSpec, ModelSpec,
+                             OptimizerSpec, Scenario, build)
 
 # ---------------------------------------------------------------------------
-# Model: mu ~ N(0, 10^2); b_j | mu ~ N(mu, 1); y_jk | b_j ~ N(b_j, 0.5^2)
-# Z_G = mu (global), Z_Lj = b_j (one latent per silo), theta = {} (fully
-# Bayesian). The exact posterior is Gaussian, so we can check the answer.
+# 1. Declare the experiment. 80 rounds x 25 local steps of SFVI = 2000
+#    optimizer steps, synchronizing after every step (Algorithm 1).
 # ---------------------------------------------------------------------------
-
-N_SILOS, N_OBS = 3, 40
-rng = np.random.default_rng(0)
-true_mu = 2.0
-true_b = rng.normal(true_mu, 1.0, N_SILOS)
-data = [jnp.asarray(rng.normal(true_b[j], 0.5, N_OBS)) for j in range(N_SILOS)]
-
-
-def log_prior_global(theta, z_G):
-    return -0.5 * jnp.sum(z_G**2) / 10.0**2
-
-
-def log_local(theta, z_G, z_L, y_j):
-    lp_b = -0.5 * jnp.sum((z_L - z_G) ** 2)  # b_j | mu ~ N(mu, 1)
-    ll = -0.5 * jnp.sum((y_j - z_L) ** 2) / 0.5**2
-    return lp_b + ll
-
-
-model = StructuredModel(
-    global_dim=1, local_dim=1,
-    log_prior_global=log_prior_global, log_local=log_local,
-    name="hierarchical_gaussian",
+spec = ExperimentSpec(
+    model=ModelSpec("toy", {"num_obs": 40}),
+    scenario=Scenario(algorithm="sfvi"),
+    num_silos=3,
+    rounds=80,
+    local_steps=25,
+    server_opt=OptimizerSpec("adam", 5e-2),
+    seed=0,
 )
+print("spec (JSON-serializable, reproducible):")
+print("  " + spec.to_json(indent=0).replace("\n", " ")[:76] + "...")
 
-problem = SFVIProblem(
-    model=model,
-    global_family=DiagGaussian(1),
-    local_family=ConditionalGaussian(dim=1, global_dim=1, use_coupling=True),
-)
+# ---------------------------------------------------------------------------
+# 2. Build and run the first half; checkpoint; resume from disk; finish.
+#    Resume is bit-exact: every random stream is a function of
+#    (seed, absolute round), and save/resume round-trips the full state.
+# ---------------------------------------------------------------------------
+exp = build(spec)
+first_half = exp.run(40)
+elbo_start = first_half["elbo"][0]
+ckpt = tempfile.mkdtemp(prefix="sfvi_quickstart_")
+exp.save(ckpt)
+print(f"\ncheckpointed at round {exp.round} -> {ckpt}")
 
-key = jax.random.PRNGKey(0)
-silos = [
-    Silo(
-        silo_id=j,
-        problem=problem,
-        data=data[j],
-        eta_L=problem.local_family.init(jax.random.fold_in(key, j)),
-        local_optimizer=adam(5e-2),
-        num_obs=N_OBS,
-        seed=j,
-    )
-    for j in range(N_SILOS)
-]
-server = SFVIServer(
-    problem, silos, theta={},
-    eta_G=problem.global_family.init(jax.random.fold_in(key, 100)),
-    optimizer=adam(5e-2),
-)
-history = server.run(num_iters=2000)
-print(f"ELBO: start {history['elbo'][0]:.1f} -> end {history['elbo'][-1]:.1f}")
+exp = Experiment.resume(ckpt)  # rebuilds from spec.json + restores state
+history = exp.run()            # the remaining 40 rounds
+print(f"resumed and finished at round {exp.round}/{spec.rounds}")
+print(f"ELBO: start {elbo_start:.1f} -> end {history['elbo'][-1]:.1f}")
 
-mu_hat = float(server.eta_G["mu"][0])
-sigma_hat = float(jnp.exp(server.eta_G["log_sigma"][0]))
+# ---------------------------------------------------------------------------
+# 3. Check the answer against the closed-form posterior (staged by the
+#    registry next to the data) and report the metered communication.
+# ---------------------------------------------------------------------------
+mu_hat = float(np.asarray(exp.eta_G["mu"])[0])
+sigma_hat = float(np.exp(np.asarray(exp.eta_G["log_sigma"])[0]))
+post_mu = exp.bundle.extras["posterior_mu"]
+post_sd = exp.bundle.extras["posterior_sd"]
+true_mu = exp.bundle.extras["true_mu"]
+
 print(f"\nq(mu) = N({mu_hat:.3f}, {sigma_hat:.3f}^2)   [true mu = {true_mu}]")
-print(f"communication: {server.comm.rounds} rounds, "
-      f"{server.comm.bytes_up/1e3:.1f} kB up, {server.comm.bytes_down/1e3:.1f} kB down")
+print(f"exact posterior: N({post_mu:.3f}, {post_sd:.3f}^2)")
+print(f"communication: {exp.comm.rounds} rounds, "
+      f"{exp.comm.bytes_up/1e3:.1f} kB up, {exp.comm.bytes_down/1e3:.1f} kB down")
 
-# Closed-form check: posterior of mu given silo means (integrating b_j).
-ybar = np.array([float(d.mean()) for d in data])
-var_j = 1.0 + 0.5**2 / N_OBS  # var of ybar_j | mu (same for every silo)
-post_prec = 1 / 10.0**2 + N_SILOS / var_j
-post_mu = np.sum(ybar) / var_j / post_prec
-print(f"exact posterior: N({post_mu:.3f}, {np.sqrt(1/post_prec):.3f}^2)")
 assert abs(mu_hat - post_mu) < 0.15, "SFVI should match the exact posterior"
 print("OK: SFVI matches the analytic posterior.")

@@ -100,6 +100,15 @@ class CheckpointManager:
         steps = self._steps(shard)
         return steps[-1] if steps else None
 
+    def steps(self, shard: Optional[str] = None) -> list:
+        """Sorted step indices currently retained (post-GC).
+
+        Public so sidecar files keyed by step (e.g. the experiment API's
+        ``step_NNNNNNNN.meta.json``) can keep their retention in lock
+        step with the manager's.
+        """
+        return self._steps(shard)
+
     def _steps(self, shard: Optional[str]):
         suffix = (f".{shard}" if shard else "") + ".msgpack"
         steps = []

@@ -1,41 +1,63 @@
-"""Host-level federated runtime — literal transcriptions of Algorithms 1 & 2.
+"""Legacy hub-and-spoke runtime — now thin adapters over the compiled Server.
 
-This runtime keeps the hub-and-spoke structure of the paper: a ``Server``
-object and J ``Silo`` objects exchange explicit message pytrees, and every
-message is metered (bytes up / bytes down) so the communication-efficiency
-claims of §3.2 are measurable. The silo's data, its η_{L_j}, and its
-optimizer state for η_{L_j} live *inside* the Silo object and never appear
-in any message — the privacy structure of the paper enforced by construction.
+Historically this module ran Algorithms 1 & 2 eagerly: a Python loop over
+J :class:`Silo` objects exchanging explicit message pytrees with a server
+object, re-entering Python every round. That eager loop is retired — ONE
+compiled runtime (:class:`repro.federated.runtime.Server`, all J silos
+advancing inside a single ``shard_map`` graph) now serves every workload,
+and the classes here remain only as **deprecated adapters** that preserve
+the old constructor/run signatures for existing call sites:
 
-The mesh/SPMD execution path (launch/train.py) reuses the same per-silo math
-(`SFVIProblem.silo_grads`) but virtualizes the server into a psum; see
-DESIGN.md §5.1.
+  * :class:`SFVIServer` / :class:`SFVIAvgServer` translate the eager API
+    (a list of Silos, an optimizer, ``run(iters, participation)``) into a
+    compiled ``Server`` run, then write the updated η_{L_j} back into the
+    Silo objects so code that reads ``silo.eta_L`` afterwards still works.
+    New code should use :mod:`repro.federated.api` (declarative spec →
+    build → run → resume) or ``repro.federated.Server`` directly.
+  * :class:`Silo` survives as the per-silo state container (data, η_{L_j},
+    local optimizer) plus the literal single-silo transcription of the
+    paper's message protocol — useful for tests that assert the privacy
+    structure of one exchange.
+  * ``CommLog`` is a deprecated alias of
+    :class:`repro.federated.runtime.CommMeter`; ``tree_bytes`` re-exports
+    the single byte-accounting primitive from the same module.
+
+The privacy structure of the paper is unchanged: a silo's data, its
+η_{L_j} and its local optimizer state never appear in any cross-silo
+message (in the compiled runtime this holds by mesh placement — silo
+state is sharded over the ``silo`` axis and only global-shaped uploads
+cross it).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.barycenter import barycenter_params_diag, barycenter_params_full
 from repro.core.families import CholeskyGaussian, DiagGaussian
 from repro.core.sfvi import SFVIProblem
+# Leaf module: safe while repro.federated.runtime (which imports repro.core
+# submodules) may itself be mid-import. Server/stack_silos are imported
+# lazily inside the adapters for the same reason.
+from repro.federated.metering import CommMeter, tree_bytes
+from repro.federated.scheduler import RoundScheduler
 from repro.optim.base import GradientTransformation, apply_updates
 
 PyTree = Any
 
-
-def tree_bytes(tree: PyTree) -> int:
-    """Metered size of a message pytree in bytes."""
-    return sum(
-        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
-        for x in jax.tree_util.tree_leaves(tree)
-        if hasattr(x, "shape")
-    )
+__all__ = [
+    "CommLog",
+    "SFVIAvgServer",
+    "SFVIServer",
+    "Silo",
+    "tree_add",
+    "tree_bytes",
+    "tree_mean",
+    "tree_scale",
+]
 
 
 def tree_add(a: PyTree, b: PyTree) -> PyTree:
@@ -50,26 +72,34 @@ def tree_mean(trees: Sequence[PyTree]) -> PyTree:
     return jax.tree_util.tree_map(lambda *xs: sum(xs) / len(xs), *trees)
 
 
-@dataclasses.dataclass
-class CommLog:
-    """Per-round communication accounting."""
+class CommLog(CommMeter):
+    """Deprecated alias of :class:`repro.federated.runtime.CommMeter`.
 
-    rounds: int = 0
-    bytes_up: int = 0  # silo -> server
-    bytes_down: int = 0  # server -> silo
+    Kept for one release so ``from repro.core import CommLog`` keeps
+    working; it IS a CommMeter (same counters, plus ``per_round`` and
+    ``state_dict``). New code should import CommMeter.
+    """
 
-    def record(self, up: int, down: int):
-        self.rounds += 1
-        self.bytes_up += up
-        self.bytes_down += down
-
-    @property
-    def total(self) -> int:
-        return self.bytes_up + self.bytes_down
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.core.runtime.CommLog is deprecated; use "
+            "repro.federated.CommMeter",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(*args, **kwargs)
 
 
 class Silo:
-    """One data owner. Holds y_j, η_{L_j} and its local optimizer privately."""
+    """One data owner. Holds y_j, η_{L_j} and its local optimizer privately.
+
+    In the compiled runtime the Silo is a *state container*: the adapters
+    stack ``silo.eta_L`` across the federation, run the compiled round
+    graph, and write the updated slices back. The single-silo step
+    methods below remain the literal transcription of one protocol
+    exchange (Algorithm 1's silo body) for tests that assert the message
+    structure — e.g. that no local-dimension leaf ever leaves the silo.
+    """
 
     def __init__(
         self,
@@ -92,11 +122,14 @@ class Silo:
             local_optimizer.init(eta_L) if (local_optimizer and eta_L is not None) else None
         )
         self._jit_step = jax.jit(self._step_impl, static_argnames=("likelihood_scale",))
-        self._jit_local_rounds = jax.jit(
-            self._local_rounds_impl, static_argnames=("num_steps", "likelihood_scale")
-        )
 
-    # ---------------- Algorithm 1 body ----------------
+    def _local_eps_shape(self):
+        fam = self.problem.local_family
+        if hasattr(fam, "batch"):
+            return (fam.batch, fam.dim)
+        return (fam.dim,)
+
+    # ---------------- Algorithm 1 body (single-exchange reference) ----------
 
     def _step_impl(self, theta, eta_G, eta_L, local_opt_state, eps_G, eps_L, likelihood_scale=1.0):
         g_theta, g_eta, g_local, hatLj = self.problem.silo_grads(
@@ -121,77 +154,92 @@ class Silo:
         )
         return {"g_theta": g_theta, "g_eta": g_eta, "hat_Lj": hatLj}
 
-    def _local_eps_shape(self):
-        fam = self.problem.local_family
-        if hasattr(fam, "batch"):
-            return (fam.batch, fam.dim)
-        return (fam.dim,)
 
-    # ---------------- Algorithm 2 body ----------------
+def _adapter_server(
+    problem: SFVIProblem,
+    silos: List[Silo],
+    theta: PyTree,
+    eta_G: PyTree,
+    server_opt: GradientTransformation,
+    eta_mode: str,
+    seed: int,
+):
+    """Build the compiled Server behind an eager-API adapter.
 
-    def _local_rounds_impl(
-        self, theta, eta_G, eta_L, key, opt_states, num_steps, likelihood_scale
-    ):
-        """m steps of *local* stochastic-gradient VI on L̂_0 + (N/N_j) L̂_j."""
-        server_opt, local_opt = self._avg_opts
+    Silo data must share leaf shapes across the federation (the stacked
+    ``silo``-axis layout); caller-initialized η_{L_j} are preserved by
+    overwriting the Server's own init with the stacked silo values.
+    """
+    from repro.federated.runtime import Server, stack_silos
 
-        def objective(th, eg, el, eps_G, eps_L):
-            val = self.problem.hat_L0(th, eg, eps_G)
-            val = val + self.problem.hat_Lj(
-                th, eg, el, eps_G, eps_L, self.data, likelihood_scale
-            )
-            return val
-
-        def body(carry, key_i):
-            th, eg, el, (s_state, l_state) = carry
-            kG, kL = jax.random.split(key_i)
-            eps_G = jax.random.normal(kG, (self.problem.model.global_dim,))
-            eps_L = (
-                jax.random.normal(kL, self._local_eps_shape())
-                if self.problem.model.has_local
-                else None
-            )
-            if el is not None:
-                val, grads = jax.value_and_grad(objective, argnums=(0, 1, 2))(
-                    th, eg, el, eps_G, eps_L
-                )
-                g_th, g_eg, g_el = grads
-                upd_l, l_state = local_opt.update(tree_scale(g_el, -1.0), l_state, el)
-                el = apply_updates(el, upd_l)
-            else:
-                val, (g_th, g_eg) = jax.value_and_grad(objective, argnums=(0, 1))(
-                    th, eg, el, eps_G, eps_L
-                )
-            descent = tree_scale({"theta": g_th, "eta_G": g_eg}, -1.0)
-            upd_s, s_state = server_opt.update(descent, s_state, {"theta": th, "eta_G": eg})
-            merged = apply_updates({"theta": th, "eta_G": eg}, upd_s)
-            return (merged["theta"], merged["eta_G"], el, (s_state, l_state)), val
-
-        keys = jax.random.split(key, num_steps)
-        (theta, eta_G, eta_L, opt_states), elbos = jax.lax.scan(
-            body, (theta, eta_G, eta_L, opt_states), keys
-        )
-        return theta, eta_G, eta_L, opt_states, elbos
-
-    def sfvi_avg_round(self, msg: Dict[str, Any], num_steps: int, total_obs: int,
-                       server_opt: GradientTransformation) -> Dict[str, Any]:
-        """Algorithm 2 inner loop: m local VI steps, reply (θ^(j), η_G^(j))."""
-        self._avg_opts = (server_opt, self._local_opt)
-        scale = float(total_obs) / float(self.num_obs)
-        self._key, sub = jax.random.split(self._key)
-        s_state = server_opt.init({"theta": msg["theta"], "eta_G": msg["eta_G"]})
-        l_state = self._local_opt_state
-        theta_j, eta_G_j, self.eta_L, (s_state, self._local_opt_state), elbos = (
-            self._jit_local_rounds(
-                msg["theta"], msg["eta_G"], self.eta_L, sub, (s_state, l_state),
-                num_steps=num_steps, likelihood_scale=scale,
-            )
-        )
-        return {"theta": theta_j, "eta_G": eta_G_j, "elbos": elbos}
+    local_opt = next((s._local_opt for s in silos if s._local_opt is not None), None)
+    srv = Server(
+        problem,
+        [s.data for s in silos],
+        theta,
+        eta_G,
+        num_obs=[s.num_obs for s in silos],
+        server_opt=server_opt,
+        local_opt=local_opt if problem.model.has_local else None,
+        eta_mode=eta_mode,
+        seed=seed,
+    )
+    if problem.model.has_local and all(s.eta_L is not None for s in silos):
+        srv.state["eta_L"] = stack_silos([s.eta_L for s in silos])
+    return srv
 
 
-class SFVIServer:
-    """Algorithm 1 driver. Owns (θ, η_G) and the server-side optimizer."""
+class _AdapterBase:
+    """Shared plumbing of the two deprecated eager-API adapters."""
+
+    _compiled: Any  # repro.federated.runtime.Server
+    silos: List[Silo]
+
+    @property
+    def theta(self) -> PyTree:
+        return self._compiled.theta
+
+    @theta.setter
+    def theta(self, value: PyTree) -> None:
+        self._compiled.state["theta"] = value
+
+    @property
+    def eta_G(self) -> PyTree:
+        return self._compiled.eta_G
+
+    @eta_G.setter
+    def eta_G(self, value: PyTree) -> None:
+        self._compiled.state["eta_G"] = value
+
+    @property
+    def comm(self) -> CommMeter:
+        return self._compiled.comm
+
+    def _writeback(self) -> None:
+        """Propagate updated η_{L_j} slices back into the Silo objects."""
+        if not self.problem.model.has_local:
+            return
+        eta_L = self._compiled.eta_L
+        opt_L = self._compiled.state["opt_local"]
+        for j, silo in enumerate(self.silos):
+            silo.eta_L = jax.tree_util.tree_map(lambda x, jj=j: x[jj], eta_L)
+            silo._local_opt_state = jax.tree_util.tree_map(
+                lambda x, jj=j: x[jj], opt_L)
+
+
+class SFVIServer(_AdapterBase):
+    """DEPRECATED eager-API adapter: Algorithm 1 on the compiled Server.
+
+    Preserves the original constructor and ``run(num_iters,
+    participation)`` signature, but every round now executes inside the
+    single ``shard_map`` graph of :class:`repro.federated.runtime.Server`
+    (algorithm ``"sfvi"``, one local step per round). After ``run``
+    returns, updated η_{L_j} are written back into the Silo objects.
+
+    Use :mod:`repro.federated.api` (or ``repro.federated.Server``) for
+    new code; this adapter exists so pre-API call sites keep running on
+    the one compiled runtime.
+    """
 
     def __init__(
         self,
@@ -202,25 +250,22 @@ class SFVIServer:
         optimizer: GradientTransformation,
         seed: int = 0,
     ):
+        warnings.warn(
+            "SFVIServer is a deprecated adapter over the compiled "
+            "repro.federated.Server; build runs through "
+            "repro.federated.api instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.problem = problem
         self.silos = silos
-        self.theta = theta
-        self.eta_G = eta_G
         self.optimizer = optimizer
-        self.opt_state = optimizer.init({"theta": theta, "eta_G": eta_G})
-        self.key = jax.random.PRNGKey(seed)
-        self.comm = CommLog()
-        self._jit_update = jax.jit(self._update_impl)
-
-    def _update_impl(self, theta, eta_G, opt_state, eps_G, g_theta_sum, g_eta_sum):
-        # Server's own L̂_0 terms (S4)/(S7) — prior of Z_G and q_G entropy.
-        g_theta0, g_eta0, hatL0 = self.problem.server_grads(theta, eta_G, eps_G)
-        g = {"theta": tree_add(g_theta_sum, g_theta0), "eta_G": tree_add(g_eta_sum, g_eta0)}
-        # Ascent on the ELBO: flip sign via maximize-style application.
-        g = tree_scale(g, -1.0)  # optimizers are descent-convention
-        updates, opt_state = self.optimizer.update(g, opt_state, {"theta": theta, "eta_G": eta_G})
-        merged = apply_updates({"theta": theta, "eta_G": eta_G}, updates)
-        return merged["theta"], merged["eta_G"], opt_state, hatL0
+        self.seed = seed
+        # eta_mode is unused by the SFVI round graph; "param" skips the
+        # DiagGaussian-only barycenter validation.
+        self._compiled = _adapter_server(
+            problem, silos, theta, eta_G, optimizer, "param", seed)
+        self._round = 0
 
     def run(
         self,
@@ -228,61 +273,33 @@ class SFVIServer:
         participation: float = 1.0,
         callback: Optional[Callable[[int, dict], None]] = None,
     ) -> Dict[str, list]:
-        """Run Algorithm 1 for ``num_iters`` rounds.
+        """Run Algorithm 1 for ``num_iters`` rounds (one sync per round).
 
-        ``participation`` < 1 activates partial silo participation: each round
-        a random subset of silos contributes (gradients are rescaled by
-        J/|participants| to keep the estimator unbiased).
+        ``participation`` < 1 invites a random subset per round; the
+        aggregation rescales by the realized active count (unbiased,
+        §3 Remark). Consecutive ``run`` calls continue the same round
+        stream, as the eager loop did.
         """
-        history = {"elbo": [], "bytes_up": [], "bytes_down": []}
-        J = len(self.silos)
-        for it in range(num_iters):
-            self.key, k_eps, k_part = jax.random.split(self.key, 3)
-            eps_G = jax.random.normal(k_eps, (self.problem.model.global_dim,))
-            msg_down = {"theta": self.theta, "eta_G": self.eta_G, "eps_G": eps_G}
-
-            if participation >= 1.0:
-                active = list(range(J))
-            else:
-                n_active = max(1, int(round(participation * J)))
-                active = list(
-                    np.asarray(
-                        jax.random.choice(k_part, J, shape=(n_active,), replace=False)
-                    )
-                )
-            rescale = float(J) / float(len(active))
-
-            g_theta_sum = g_eta_sum = None
-            elbo = 0.0
-            up = down = 0
-            for j in active:
-                down += tree_bytes(msg_down)
-                reply = self.silos[j].sfvi_step(msg_down)
-                up += tree_bytes({"g_theta": reply["g_theta"], "g_eta": reply["g_eta"]})
-                g_theta_sum = (
-                    reply["g_theta"] if g_theta_sum is None else tree_add(g_theta_sum, reply["g_theta"])
-                )
-                g_eta_sum = (
-                    reply["g_eta"] if g_eta_sum is None else tree_add(g_eta_sum, reply["g_eta"])
-                )
-                elbo += float(reply["hat_Lj"])
-            g_theta_sum = tree_scale(g_theta_sum, rescale)
-            g_eta_sum = tree_scale(g_eta_sum, rescale)
-
-            self.theta, self.eta_G, self.opt_state, hatL0 = self._jit_update(
-                self.theta, self.eta_G, self.opt_state, eps_G, g_theta_sum, g_eta_sum
-            )
-            self.comm.record(up, down)
-            history["elbo"].append(elbo * rescale + float(hatL0))
-            history["bytes_up"].append(up)
-            history["bytes_down"].append(down)
-            if callback:
-                callback(it, {"elbo": history["elbo"][-1]})
+        sched = RoundScheduler(
+            len(self.silos), participation=participation, seed=self.seed)
+        history = self._compiled.run(
+            num_iters, algorithm="sfvi", local_steps=1, scheduler=sched,
+            callback=callback, start_round=self._round)
+        self._round += num_iters
+        self._writeback()
         return history
 
 
-class SFVIAvgServer:
-    """Algorithm 2 driver: m local steps per silo, then θ-average + η_G barycenter."""
+class SFVIAvgServer(_AdapterBase):
+    """DEPRECATED eager-API adapter: Algorithm 2 on the compiled Server.
+
+    ``run(num_rounds, local_steps)`` executes ``local_steps`` local VI
+    steps per silo and one parameter merge per round inside the compiled
+    graph (algorithm ``"sfvi_avg"``): FedAvg for θ, the analytic
+    W2 barycenter for a DiagGaussian η_G (parameter-space mean
+    otherwise — the in-graph runtime has no full-covariance barycenter;
+    :meth:`_barycenter` keeps the exact host-side rule for reference).
+    """
 
     def __init__(
         self,
@@ -293,15 +310,46 @@ class SFVIAvgServer:
         local_optimizer_factory: Callable[[], GradientTransformation],
         seed: int = 0,
     ):
+        warnings.warn(
+            "SFVIAvgServer is a deprecated adapter over the compiled "
+            "repro.federated.Server; build runs through "
+            "repro.federated.api instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.problem = problem
         self.silos = silos
-        self.theta = theta
-        self.eta_G = eta_G
         self.local_optimizer_factory = local_optimizer_factory
-        self.key = jax.random.PRNGKey(seed)
-        self.comm = CommLog()
+        self.seed = seed
+        if isinstance(problem.global_family, DiagGaussian):
+            eta_mode = "barycenter"
+        else:
+            # The eager loop dispatched CholeskyGaussian to the full-
+            # covariance W2 barycenter (still available as _barycenter);
+            # the compiled round graph only implements the diagonal one,
+            # so the adapter falls back to parameter-space averaging —
+            # a DIFFERENT merge rule. Warn loudly rather than silently
+            # change the posterior.
+            warnings.warn(
+                f"SFVIAvgServer adapter: no in-graph W2 barycenter for "
+                f"{type(problem.global_family).__name__}; eta_G will be "
+                f"merged by parameter-space averaging (eta_mode='param'), "
+                f"not the eager server's full-covariance barycenter. Use "
+                f"repro.federated.Server/api directly if that matters.",
+                UserWarning,
+                stacklevel=2,
+            )
+            eta_mode = "param"
+        # The factory's optimizer drives each silo's local (θ, η_G) steps
+        # (a fresh state per round, as the eager loop created one per
+        # sfvi_avg_round call); the silos' own optimizer drives η_{L_j}.
+        self._compiled = _adapter_server(
+            problem, silos, theta, eta_G, local_optimizer_factory(),
+            eta_mode, seed)
+        self._round = 0
 
     def _barycenter(self, eta_G_list: List[PyTree]) -> PyTree:
+        """Host-side η_G merge rule of the eager server (kept for tests)."""
         fam = self.problem.global_family
         if isinstance(fam, DiagGaussian):
             return barycenter_params_diag(fam, eta_G_list)
@@ -316,41 +364,12 @@ class SFVIAvgServer:
         participation: float = 1.0,
         callback: Optional[Callable[[int, dict], None]] = None,
     ) -> Dict[str, list]:
-        history = {"elbo": [], "bytes_up": [], "bytes_down": []}
-        J = len(self.silos)
-        total_obs = sum(s.num_obs for s in self.silos)
-        for rnd in range(num_rounds):
-            self.key, k_part = jax.random.split(self.key)
-            if participation >= 1.0:
-                active = list(range(J))
-            else:
-                n_active = max(1, int(round(participation * J)))
-                active = list(
-                    np.asarray(
-                        jax.random.choice(k_part, J, shape=(n_active,), replace=False)
-                    )
-                )
-
-            msg_down = {"theta": self.theta, "eta_G": self.eta_G}
-            thetas, etas, elbo = [], [], 0.0
-            up = down = 0
-            for j in active:
-                down += tree_bytes(msg_down)
-                reply = self.silos[j].sfvi_avg_round(
-                    msg_down, local_steps, total_obs, self.local_optimizer_factory()
-                )
-                up += tree_bytes({"theta": reply["theta"], "eta_G": reply["eta_G"]})
-                thetas.append(reply["theta"])
-                etas.append(reply["eta_G"])
-                elbo += float(reply["elbos"][-1])
-
-            if jax.tree_util.tree_leaves(thetas[0]):
-                self.theta = tree_mean(thetas)  # FedAvg in parameter space for θ
-            self.eta_G = self._barycenter(etas)
-            self.comm.record(up, down)
-            history["elbo"].append(elbo / len(active))
-            history["bytes_up"].append(up)
-            history["bytes_down"].append(down)
-            if callback:
-                callback(rnd, {"elbo": history["elbo"][-1]})
+        """Run Algorithm 2: ``local_steps`` local VI steps, 1 merge/round."""
+        sched = RoundScheduler(
+            len(self.silos), participation=participation, seed=self.seed)
+        history = self._compiled.run(
+            num_rounds, algorithm="sfvi_avg", local_steps=local_steps,
+            scheduler=sched, callback=callback, start_round=self._round)
+        self._round += num_rounds
+        self._writeback()
         return history

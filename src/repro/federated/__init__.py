@@ -19,8 +19,18 @@ participation × stragglers × compression × DP into named
 :class:`~repro.federated.scheduler.Scenario` rows for one-invocation
 sweeps.
 
+Declarative layer (docs/api.md): an
+:class:`~repro.federated.api.ExperimentSpec` serializes a whole run
+(model ref + kwargs, scenario, optimizers, eval cadence, seed) to JSON;
+:func:`~repro.federated.api.build` assembles it into an
+:class:`~repro.federated.api.Experiment` whose ``run``/``save``/``resume``
+own the Server, scheduler, accountant and meter — with bit-exact
+checkpoint/resume through ``repro.checkpoint``.
+
 CLI: ``python -m repro.federated.run --model hier_bnn --silos 8``
-(add ``--sweep`` for the scenario matrix, ``--dp-noise`` for DP).
+(add ``--sweep`` for the scenario matrix, ``--dp-noise`` for DP,
+``--dump-spec``/``--spec file.json`` for the declarative path,
+``--list-models`` for the registry).
 """
 from repro.federated.aggregation import (
     Int8Compressor,
@@ -36,11 +46,29 @@ from repro.federated.runtime import (
     global_eps,
     silo_eps,
     stack_silos,
+    tree_bytes,
 )
 from repro.federated.scheduler import RoundScheduler, Scenario, scenario_matrix
+from repro.federated.api import (
+    Experiment,
+    ExperimentSpec,
+    ModelSpec,
+    OptimizerSpec,
+    build,
+    run_spec,
+    scenario_specs,
+)
 
 __all__ = [
     "CommMeter",
+    "Experiment",
+    "ExperimentSpec",
+    "ModelSpec",
+    "OptimizerSpec",
+    "build",
+    "run_spec",
+    "scenario_specs",
+    "tree_bytes",
     "Int8Compressor",
     "MeanAggregator",
     "NoCompression",

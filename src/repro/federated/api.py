@@ -1,0 +1,497 @@
+"""One declarative experiment API: spec → build → run → resume.
+
+The paper's experiments are a grid of (model × algorithm × participation
+× compression × DP) runs. Instead of wiring that grid by hand at every
+call site, this module gives the repo ONE serializable experiment
+object:
+
+  * :class:`ExperimentSpec` — a frozen dataclass tree (model reference +
+    kwargs, silos, rounds × local steps, optimizers, a
+    :class:`~repro.federated.scheduler.Scenario` carrying participation /
+    stragglers / compression / aggregation / differential privacy, eval
+    cadence, seed) with a lossless ``to_dict()`` / ``from_dict()`` JSON
+    round trip;
+  * :func:`build` — resolves the model through the registry
+    (:mod:`repro.models.paper.registry`) and assembles the compiled
+    :class:`~repro.federated.runtime.Server`, scheduler, privacy policy
+    and accountant into an :class:`Experiment`;
+  * :class:`Experiment` — owns the run loop (`run`), evaluation cadence,
+    and checkpointing: ``save(dir)`` persists the FULL round state
+    (θ, η_G, stacked η_{L_j}, both optimizer states, the RDP ledger, the
+    communication meter, and the absolute round index) through
+    :class:`~repro.checkpoint.CheckpointManager`; ``Experiment.resume(dir)``
+    rebuilds from ``spec.json`` and restores that state. Because every
+    random stream in the runtime (round keys, participation masks, DP
+    noise) is a function of (seed, absolute round index), a resumed run
+    replays the uninterrupted run's remaining rounds **bit-exactly** —
+    asserted in ``tests/test_api.py``.
+
+This is the single construction path the CLI
+(``python -m repro.federated.run``), the examples, and the benchmark
+suite all build on; the legacy eager ``SFVIServer``/``SFVIAvgServer``
+are deprecated adapters over the same compiled runtime. See
+``docs/api.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.federated.scheduler import RoundScheduler, Scenario
+
+PyTree = Any
+
+_SPEC_FILE = "spec.json"
+_SERVER_KEYS = ("theta", "eta_G", "opt_server")
+
+
+# ---------------------------------------------------------------------------
+# Spec tree
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Declarative optimizer: resolved by name at build time.
+
+    Attributes:
+      name: ``"adam"``, ``"adamw"`` or ``"sgd"``.
+      learning_rate: step size.
+      kwargs: extra keyword arguments for the optimizer factory
+        (JSON-native values only: betas, momentum, weight decay, ...).
+    """
+
+    name: str = "adam"
+    learning_rate: float = 1e-2
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build(self):
+        """Instantiate the :class:`~repro.optim.base.GradientTransformation`."""
+        if self.name == "adam":
+            from repro.optim.adam import adam
+            return adam(self.learning_rate, **self.kwargs)
+        if self.name == "adamw":
+            from repro.optim.adam import adamw
+            return adamw(self.learning_rate, **self.kwargs)
+        if self.name == "sgd":
+            from repro.optim.sgd import sgd
+            return sgd(self.learning_rate, **self.kwargs)
+        raise ValueError(f"unknown optimizer {self.name!r} (adam/adamw/sgd)")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "OptimizerSpec":
+        return cls(name=d.get("name", "adam"),
+                   learning_rate=d.get("learning_rate", 1e-2),
+                   kwargs=dict(d.get("kwargs", {})))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Reference to a registered model plus its build kwargs.
+
+    ``name`` resolves through :mod:`repro.models.paper.registry`;
+    ``kwargs`` are forwarded to the registered builder and must be
+    JSON-native (the spec round-trips through ``json.dumps``).
+    """
+
+    name: str
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ModelSpec":
+        return cls(name=d["name"], kwargs=dict(d.get("kwargs", {})))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The complete, serializable description of one federated run.
+
+    Attributes:
+      model: registry reference + kwargs (:class:`ModelSpec`).
+      scenario: the runtime scenario — algorithm (``sfvi``/``sfvi_avg``),
+        participation, stragglers, wire compression, aggregation rule and
+        the differential-privacy policy (dp_noise/dp_clip/dp_delta) — as
+        one :class:`~repro.federated.scheduler.Scenario`.
+      num_silos: J, the federation width.
+      rounds: total rounds the experiment runs (``Experiment.run()`` with
+        no argument runs whatever remains of this budget).
+      local_steps: K optimizer steps per round (SFVI syncs after each,
+        SFVI-Avg once per round).
+      server_opt: optimizer for (θ, η_G).
+      local_opt: optimizer for each η_{L_j}; None mirrors ``server_opt``
+        when the model has local latents.
+      eta_mode: SFVI-Avg's η_G merge — ``"barycenter"`` (paper §3.2,
+        DiagGaussian) or ``"param"`` (parameter-space FedAvg).
+      eval_every: evaluate the registry's eval_fn every this many rounds
+        (0 disables the cadence; ``Experiment.evaluate()`` is always
+        available on demand).
+      seed: base seed for initialization, round keys and the
+        participation schedule (and data staging, unless ``data_seed``
+        overrides it).
+      data_seed: seed the registry stages data with; None mirrors
+        ``seed``. Separate so one dataset can be crossed with many run
+        seeds while the spec still rebuilds the exact data on resume.
+    """
+
+    model: ModelSpec
+    scenario: Scenario = Scenario()
+    num_silos: int = 4
+    rounds: int = 10
+    local_steps: int = 1
+    server_opt: OptimizerSpec = OptimizerSpec()
+    local_opt: Optional[OptimizerSpec] = None
+    eta_mode: str = "barycenter"
+    eval_every: int = 0
+    seed: int = 0
+    data_seed: Optional[int] = None
+
+    @property
+    def algorithm(self) -> str:
+        """The sync cadence, carried by the scenario."""
+        return self.scenario.algorithm
+
+    @property
+    def name(self) -> str:
+        """Human-readable label: model + the scenario's knob summary."""
+        return f"{self.model.name} {self.scenario.name}"
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form, JSON-ready (nested dataclasses flattened)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        """Inverse of :meth:`to_dict`: ``from_dict(to_dict(s)) == s``."""
+        return cls(
+            model=ModelSpec.from_dict(d["model"]),
+            scenario=Scenario(**d.get("scenario", {})),
+            num_silos=d.get("num_silos", 4),
+            rounds=d.get("rounds", 10),
+            local_steps=d.get("local_steps", 1),
+            server_opt=OptimizerSpec.from_dict(d.get("server_opt", {})),
+            local_opt=(OptimizerSpec.from_dict(d["local_opt"])
+                       if d.get("local_opt") is not None else None),
+            eta_mode=d.get("eta_mode", "barycenter"),
+            eval_every=d.get("eval_every", 0),
+            seed=d.get("seed", 0),
+            data_seed=d.get("data_seed"),
+        )
+
+    def to_json(self, indent: int = 2) -> str:
+        """JSON text of :meth:`to_dict` (what ``--dump-spec`` prints)."""
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        """Write the spec as JSON (atomically) to ``path``."""
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.to_json() + "\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# build: spec -> Experiment
+# ---------------------------------------------------------------------------
+
+
+def build(spec: ExperimentSpec, bundle=None) -> "Experiment":
+    """Assemble the compiled runtime for ``spec``.
+
+    Resolves the model through the registry (unless a pre-staged
+    ``bundle`` is supplied — benchmarks reuse one dataset across many
+    scenario specs that way), instantiates optimizers, aggregation,
+    compression and the privacy policy from the scenario, and returns a
+    ready-to-run :class:`Experiment`.
+    """
+    from repro.federated.runtime import Server
+    from repro.models.paper.registry import get_model
+
+    if bundle is None:
+        entry = get_model(spec.model.name)
+        data_seed = spec.data_seed if spec.data_seed is not None else spec.seed
+        bundle = entry.build(data_seed, spec.num_silos, **spec.model.kwargs)
+    if len(bundle.datas) != spec.num_silos:
+        raise ValueError(
+            f"bundle stages {len(bundle.datas)} silos, spec.num_silos is "
+            f"{spec.num_silos}")
+
+    problem = bundle.problem
+    has_local = problem.model.has_local
+    local_spec = spec.local_opt if spec.local_opt is not None else spec.server_opt
+    server = Server(
+        problem,
+        bundle.datas,
+        bundle.theta0,
+        problem.global_family.init(jax.random.PRNGKey(spec.seed)),
+        num_obs=bundle.num_obs,
+        server_opt=spec.server_opt.build(),
+        local_opt=local_spec.build() if has_local else None,
+        aggregator=spec.scenario.make_aggregator(),
+        compressor=spec.scenario.compressor(),
+        eta_mode=spec.eta_mode,
+        privacy=spec.scenario.privacy(),
+        seed=spec.seed,
+    )
+    scheduler = spec.scenario.scheduler(spec.num_silos, seed=spec.seed)
+    return Experiment(spec, bundle, server, scheduler)
+
+
+# ---------------------------------------------------------------------------
+# Experiment: run / evaluate / save / resume
+# ---------------------------------------------------------------------------
+
+
+class Experiment:
+    """A built federated run: owns the Server, scheduler and round index.
+
+    Construct through :func:`build` (or :meth:`resume`); drive with
+    :meth:`run`. ``history`` accumulates across calls, ``round`` is the
+    absolute number of rounds completed so far.
+    """
+
+    def __init__(self, spec: ExperimentSpec, bundle, server, scheduler: RoundScheduler):
+        self.spec = spec
+        self.bundle = bundle
+        self.server = server
+        self.scheduler = scheduler
+        self.round = 0
+        self.history: Dict[str, list] = {}
+
+    # -- delegation conveniences -------------------------------------------
+
+    @property
+    def theta(self) -> PyTree:
+        return self.server.theta
+
+    @property
+    def eta_G(self) -> PyTree:
+        return self.server.eta_G
+
+    @property
+    def eta_L(self) -> PyTree:
+        return self.server.eta_L
+
+    @property
+    def comm(self):
+        return self.server.comm
+
+    @property
+    def accountant(self):
+        return self.server.accountant
+
+    @property
+    def remaining_rounds(self) -> int:
+        return max(self.spec.rounds - self.round, 0)
+
+    def warm_start(self, theta: Optional[PyTree] = None,
+                   eta_G: Optional[PyTree] = None) -> "Experiment":
+        """Override the initial (θ, η_G) — e.g. from a previous fit
+        (the paper's Figure S2 warm-starting protocol). Optimizer
+        moments are left at their fresh init."""
+        if theta is not None:
+            self.server.state["theta"] = theta
+        if eta_G is not None:
+            self.server.state["eta_G"] = eta_G
+        return self
+
+    # -- running ------------------------------------------------------------
+
+    def run(self, rounds: Optional[int] = None,
+            callback: Optional[Callable[[int, dict], None]] = None) -> Dict[str, list]:
+        """Advance ``rounds`` rounds (default: the spec's remaining budget).
+
+        Returns the accumulated history. ``callback(r, metrics)`` fires
+        per round with the ABSOLUTE round index; when the spec sets
+        ``eval_every``, the registry's eval metrics are merged into the
+        round's metrics (and recorded under ``history["eval"]``) at that
+        cadence.
+        """
+        n = self.remaining_rounds if rounds is None else rounds
+        if n <= 0:
+            return self.history
+        spec = self.spec
+        start = self.round
+
+        def cb(r: int, metrics: dict) -> None:
+            # Keep the absolute round index current DURING the run, so a
+            # callback may checkpoint mid-run (``save`` stamps the state
+            # with ``self.round``) and the resume replays from the right
+            # absolute round.
+            self.round = r + 1
+            if (spec.eval_every and self.bundle.eval_fn is not None
+                    and (r + 1) % spec.eval_every == 0):
+                scores = self.bundle.eval_fn(self.server)
+                metrics = dict(metrics, **scores)
+                self.history.setdefault("eval", []).append(
+                    {"round": r + 1, **scores})
+            if callback is not None:
+                callback(r, metrics)
+
+        chunk = self.server.run(
+            n,
+            algorithm=spec.algorithm,
+            local_steps=spec.local_steps,
+            scheduler=self.scheduler,
+            callback=cb,
+            start_round=start,
+        )
+        for k, v in chunk.items():
+            self.history.setdefault(k, []).extend(v)
+        self.round = start + n
+        return self.history
+
+    def evaluate(self) -> Dict[str, float]:
+        """Run the registry's eval hook on the current state ({} if none)."""
+        if self.bundle.eval_fn is None:
+            return {}
+        return dict(self.bundle.eval_fn(self.server))
+
+    # -- checkpointing -------------------------------------------------------
+
+    def _meta_dict(self) -> Dict[str, Any]:
+        meta: Dict[str, Any] = {
+            "round": self.round,
+            "comm": self.comm.state_dict(),
+        }
+        if self.accountant is not None:
+            acct = self.accountant.state_dict()
+            # JSON, not the msgpack/jnp path: the RDP ledger is float64
+            # and jnp.asarray would silently downcast it to float32
+            # (x64 disabled), breaking the bit-exact epsilon trace.
+            # Python's repr-based JSON floats round-trip doubles exactly.
+            meta["acct"] = {"rdp": [float(x) for x in np.asarray(acct["rdp"])],
+                            "steps": int(acct["steps"])}
+        return meta
+
+    @staticmethod
+    def _meta_path(directory: str, step: int) -> str:
+        return os.path.join(directory, f"step_{step:08d}.meta.json")
+
+    def save(self, directory: str, keep: int = 3) -> str:
+        """Persist the full round state under ``directory``.
+
+        Layout (all through :class:`~repro.checkpoint.CheckpointManager`,
+        ``keep`` most recent steps retained):
+
+          * ``spec.json`` — the experiment spec (written once);
+          * ``step_NNNNNNNN.msgpack`` — server state (θ, η_G, server
+            optimizer);
+          * ``step_NNNNNNNN.silo_JJJJ.msgpack`` — silo J's private state
+            (η_{L_J} + its optimizer moments), one file per silo so the
+            server checkpoint never contains local variational
+            parameters (the paper's privacy boundary, see
+            ``repro.checkpoint.io``);
+          * ``step_NNNNNNNN.meta.json`` — round index, communication
+            counters, RDP ledger (JSON so the float64 ledger round-trips
+            exactly).
+
+        Returns the directory.
+        """
+        os.makedirs(directory, exist_ok=True)
+        self.spec.save(os.path.join(directory, _SPEC_FILE))
+        mgr = CheckpointManager(directory, keep=keep)
+        state = self.server.state
+        mgr.save(self.round, {k: state[k] for k in _SERVER_KEYS})
+        if jax.tree_util.tree_leaves(state["eta_L"]):
+            silo_state = {"eta_L": state["eta_L"], "opt_local": state["opt_local"]}
+            for j in range(self.server.J):
+                mgr.save(
+                    self.round,
+                    jax.tree_util.tree_map(lambda x: x[j], silo_state),
+                    shard=f"silo_{j:04d}",
+                )
+        tmp = self._meta_path(directory, self.round) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._meta_dict(), f)
+        os.replace(tmp, self._meta_path(directory, self.round))
+        # Retention for the JSON sidecars mirrors the manager's msgpack GC.
+        live = set(mgr.steps())
+        for fn in os.listdir(directory):
+            if fn.startswith("step_") and fn.endswith(".meta.json"):
+                s = fn[len("step_"):-len(".meta.json")]
+                if s.isdigit() and int(s) not in live:
+                    os.remove(os.path.join(directory, fn))
+        return directory
+
+    @classmethod
+    def resume(cls, directory: str, spec: Optional[ExperimentSpec] = None,
+               step: Optional[int] = None, bundle=None) -> "Experiment":
+        """Rebuild from ``directory`` and restore the saved round state.
+
+        Reads ``spec.json`` (unless ``spec`` overrides it), rebuilds the
+        experiment with :func:`build` — the registry re-stages the data
+        deterministically from the spec's seed — then restores θ, η_G,
+        stacked η_{L_j}, both optimizer states, the communication meter,
+        the RDP ledger and the round index from the latest (or ``step``)
+        checkpoint. Continuing with :meth:`run` reproduces the
+        uninterrupted run bit-exactly.
+        """
+        if spec is None:
+            spec = ExperimentSpec.load(os.path.join(directory, _SPEC_FILE))
+        exp = build(spec, bundle=bundle)
+        mgr = CheckpointManager(directory)
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory!r}")
+
+        state = exp.server.state
+        like = {k: state[k] for k in _SERVER_KEYS}
+        restored = mgr.restore(step, like)
+        for k in _SERVER_KEYS:
+            state[k] = restored[k]
+        if jax.tree_util.tree_leaves(state["eta_L"]):
+            silo_like = {"eta_L": state["eta_L"], "opt_local": state["opt_local"]}
+            slices = [
+                mgr.restore(
+                    step,
+                    jax.tree_util.tree_map(lambda x, jj=j: x[jj], silo_like),
+                    shard=f"silo_{j:04d}",
+                )
+                for j in range(exp.server.J)
+            ]
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jax.numpy.stack(xs), *slices)
+            state["eta_L"] = stacked["eta_L"]
+            state["opt_local"] = stacked["opt_local"]
+
+        with open(cls._meta_path(directory, step)) as f:
+            meta = json.load(f)
+        exp.round = int(meta["round"])
+        exp.comm.load_state(meta["comm"])
+        if exp.accountant is not None and "acct" in meta:
+            exp.accountant.load_state({
+                "rdp": np.asarray(meta["acct"]["rdp"], np.float64),
+                "steps": int(meta["acct"]["steps"]),
+            })
+        return exp
+
+
+def run_spec(spec: ExperimentSpec,
+             callback: Optional[Callable[[int, dict], None]] = None) -> "Experiment":
+    """One-shot convenience: ``build(spec)`` then run the full budget."""
+    exp = build(spec)
+    exp.run(callback=callback)
+    return exp
+
+
+def scenario_specs(base: ExperimentSpec, scenarios: List[Scenario]) -> List[ExperimentSpec]:
+    """Cross one base spec with a scenario list (the --sweep expansion)."""
+    return [dataclasses.replace(base, scenario=sc) for sc in scenarios]

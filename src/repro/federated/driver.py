@@ -15,8 +15,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 
+from repro.federated.metering import CommMeter
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
-from repro.federated.runtime import CommMeter
 
 PyTree = Any
 StepFn = Callable[[PyTree, Any, int], Tuple[PyTree, Dict[str, Any]]]

@@ -1,0 +1,61 @@
+"""Byte accounting for federated exchanges — the single metering path.
+
+Leaf module (imports only jax/numpy) so both runtimes can share it: the
+compiled :class:`~repro.federated.runtime.Server` bills its rounds into a
+:class:`CommMeter`, and the deprecated eager adapters in
+``repro.core.runtime`` alias it as ``CommLog``. :func:`tree_bytes` is the
+one primitive every byte figure in the repo is computed with.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Metered size of a message pytree in bytes (Σ elements × itemsize)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+@dataclasses.dataclass
+class CommMeter:
+    """Algorithm-level bytes-on-wire accounting (host side, per round)."""
+
+    rounds: int = 0
+    bytes_up: int = 0  # silo -> server (post-compression)
+    bytes_down: int = 0  # server -> silo broadcast
+
+    def record(self, up: int, down: int) -> None:
+        """Log one round's realized (up, down) bytes."""
+        self.rounds += 1
+        self.bytes_up += int(up)
+        self.bytes_down += int(down)
+
+    @property
+    def total(self) -> int:
+        return self.bytes_up + self.bytes_down
+
+    @property
+    def per_round(self) -> float:
+        return self.total / max(self.rounds, 1)
+
+    def state_dict(self) -> Dict[str, int]:
+        """Serializable counters (checkpointed by ``federated.api``)."""
+        return {"rounds": self.rounds, "bytes_up": self.bytes_up,
+                "bytes_down": self.bytes_down}
+
+    def load_state(self, state: Dict[str, int]) -> None:
+        """Restore counters saved by :meth:`state_dict`."""
+        self.rounds = int(state["rounds"])
+        self.bytes_up = int(state["bytes_up"])
+        self.bytes_down = int(state["bytes_down"])

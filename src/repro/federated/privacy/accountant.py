@@ -151,6 +151,26 @@ class RdpAccountant:
         )
         self._steps += steps
 
+    def state_dict(self) -> Dict[str, object]:
+        """Serializable ledger: cumulative per-order RDP + step count.
+
+        Checkpointed by ``federated.api.Experiment.save`` so a resumed
+        run keeps composing on top of the pre-interruption privacy loss
+        instead of restarting the ledger at ε = 0.
+        """
+        return {"rdp": self._rdp.copy(), "steps": self._steps}
+
+    def load_state(self, state: Dict[str, object]) -> None:
+        """Restore a ledger saved by :meth:`state_dict`."""
+        rdp = np.asarray(state["rdp"], np.float64)
+        if rdp.shape != self._rdp.shape:
+            raise ValueError(
+                f"ledger has {rdp.shape[0]} orders, accountant expects "
+                f"{self._rdp.shape[0]} — order grids must match"
+            )
+        self._rdp = rdp.copy()
+        self._steps = int(state["steps"])
+
     def epsilon(self, delta: float) -> Tuple[float, int]:
         """Cumulative (ε, optimal order) at target ``delta``."""
         if self._steps == 0:

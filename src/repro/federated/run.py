@@ -1,12 +1,21 @@
-"""Federated runtime CLI — drive a paper model through the compiled Server.
+"""Federated runtime CLI — a thin spec-builder over ``repro.federated.api``.
 
     PYTHONPATH=src python -m repro.federated.run --model hier_bnn \
         --silos 8 --rounds 5 --local-steps 4
 
-Runs SFVI (sync every step) and SFVI-Avg (one sync per round) on the same
-problem/seed and prints per-round ELBO plus bytes-on-wire; scenario knobs
-cover partial participation, straggler dropout, robust aggregation, int8
-wire compression and differential privacy:
+Flags build a declarative :class:`~repro.federated.api.ExperimentSpec`
+(model registry name + kwargs, scenario, optimizers, seed), which is the
+ONLY construction path — the CLI never wires a Server by hand. That makes
+every run serializable and resumable:
+
+    ... --dump-spec > exp.json          # print the spec as JSON, exit
+    ... --spec exp.json                 # run exactly that spec
+    ... --ckpt-dir runs/a               # checkpoint full round state
+    ... --resume runs/a                 # continue a preempted run
+    ... --list-models                   # registered models + descriptions
+
+Scenario knobs cover partial participation, straggler dropout, robust
+aggregation, int8 wire compression and differential privacy:
 
     ... --participation 0.5 --dropout 0.1 --aggregator trimmed --compress int8
     ... --dp-noise 1.0 --dp-clip 0.5 --dp-delta 1e-5   # DP round + (ε, δ)
@@ -21,23 +30,30 @@ scenario matrix (participation × stragglers × compression × DP from
 the ``silo`` mesh axis actually spans devices and
 ``Server.compiled_collective_bytes`` reports real collective traffic.
 
-JAX is imported *after* argument parsing so --devices can set XLA_FLAGS.
+JAX is imported *after* argument parsing so --devices can set XLA_FLAGS
+(the registry lists model names without importing JAX).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+from repro.models.paper.registry import list_models, model_names
 
 
 def build_parser() -> argparse.ArgumentParser:
     """CLI schema (kept separate so docs/tests can introspect flags)."""
     ap = argparse.ArgumentParser(prog="repro.federated.run", description=__doc__)
-    ap.add_argument("--model", default="hier_bnn",
-                    choices=["toy", "hier_bnn", "fedpop_bnn", "prodlda"])
+    ap.add_argument("--model", default="hier_bnn", choices=model_names())
+    ap.add_argument("--model-kwargs", default="", metavar="JSON",
+                    help="JSON dict forwarded to the registry builder")
     ap.add_argument("--silos", type=int, default=8)
-    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="total rounds (default 5; with --resume, extends "
+                         "the checkpointed spec's budget)")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--algo", default="both", choices=["both", "sfvi", "sfvi_avg"])
     ap.add_argument("--lr", type=float, default=2e-2)
@@ -54,6 +70,8 @@ def build_parser() -> argparse.ArgumentParser:
                     help="L2 clip norm C for silo uploads")
     ap.add_argument("--dp-delta", type=float, default=1e-5,
                     help="target delta for (eps, delta) reports")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="run the registry eval hook every N rounds")
     ap.add_argument("--sweep", action="store_true",
                     help="run the full scenario matrix instead of one config")
     ap.add_argument("--sweep-participation", default="1.0,0.5")
@@ -65,138 +83,115 @@ def build_parser() -> argparse.ArgumentParser:
                     help="force N XLA host devices (0 = real devices)")
     ap.add_argument("--hlo-bytes", action="store_true",
                     help="also report compiled-HLO collective bytes")
+    ap.add_argument("--list-models", action="store_true",
+                    help="print registered model names + descriptions, exit 0")
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="run this ExperimentSpec JSON (flags are ignored)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the spec the flags build as JSON, exit 0 "
+                         "(requires a single --algo)")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="save full round state here (at the end, and every "
+                         "--ckpt-every rounds during the run)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="with --ckpt-dir: also checkpoint every N rounds, "
+                         "making long runs preemption-safe (0 = end only)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume a checkpointed run (reads DIR/spec.json)")
     return ap
 
 
-def _build_problem(args):
-    """Returns (problem, theta0, datas, num_obs, eval_fn|None)."""
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
+def _spec_from_args(args, algorithm: str):
+    """The thin spec-builder: CLI flags -> declarative ExperimentSpec."""
+    from repro.federated.api import ExperimentSpec, ModelSpec, OptimizerSpec
+    from repro.federated.scheduler import Scenario
 
-    J = args.silos
-    if args.model == "toy":
-        from repro.core import (ConditionalGaussian, DiagGaussian, SFVIProblem,
-                                StructuredModel)
-
-        rng = np.random.default_rng(args.seed)
-        true_b = rng.normal(2.0, 1.0, J)
-        datas = [{"y": jnp.asarray(rng.normal(true_b[j], 0.5, 40))}
-                 for j in range(J)]
-        model = StructuredModel(
-            global_dim=1, local_dim=1,
-            log_prior_global=lambda th, zg: -0.5 * jnp.sum(zg**2) / 100.0,
-            log_local=lambda th, zg, zl, d: (
-                -0.5 * jnp.sum((zl - zg) ** 2)
-                - 0.5 * jnp.sum((d["y"] - zl) ** 2) / 0.25
-            ),
-            name="toy_hier_gaussian",
-        )
-        prob = SFVIProblem(model, DiagGaussian(1),
-                           ConditionalGaussian(1, 1, use_coupling=False))
-        return prob, {}, datas, None, None
-
-    if args.model in ("hier_bnn", "fedpop_bnn"):
-        from repro.models.paper.fixtures import (bnn_posterior_accuracy,
-                                                 hier_bnn_federation)
-
-        bnn, datas, test = hier_bnn_federation(
-            seed=args.seed, num_silos=J, fedpop=args.model == "fedpop_bnn")
-
-        def eval_fn(srv):
-            acc, _ = bnn_posterior_accuracy(bnn, srv.eta_G, srv.eta_L, test)
-            return {"test_acc": acc}
-
-        num_obs = [int(d["y"].shape[0]) for d in datas]
-        return bnn.problem, {}, datas, num_obs, eval_fn
-
-    # prodlda
-    from repro.models.paper.fixtures import prodlda_federation
-    from repro.models.paper.prodlda import init_theta, umass_coherence
-
-    lda, datas, counts = prodlda_federation(seed=args.seed, num_silos=J)
-
-    def eval_fn(srv):
-        t = np.asarray(lda.topics(srv.eta_G["mu"]))
-        coh = umass_coherence(t, counts, top_n=8)
-        return {"coherence_median": float(np.median(coh))}
-
-    return lda.problem, init_theta(), datas, [lda.docs_per_silo] * J, eval_fn
-
-
-def _privacy_from(args):
-    from repro.federated import PrivacyPolicy
-
-    if args.dp_noise > 0.0:
-        return PrivacyPolicy(clip_norm=args.dp_clip,
-                             noise_multiplier=args.dp_noise,
-                             delta=args.dp_delta)
-    return None
-
-
-def _run_one(args, algorithm: str, built):
-    import jax
-
-    from repro.federated import (Int8Compressor, MeanAggregator, NoCompression,
-                                 RoundScheduler, Server, TrimmedMeanAggregator)
-    from repro.optim.adam import adam
-
-    prob, theta0, datas, num_obs, eval_fn = built
-    privacy = _privacy_from(args)
-    srv = Server(
-        prob, datas, theta0,
-        prob.global_family.init(jax.random.PRNGKey(args.seed)),
-        num_obs=num_obs,
-        server_opt=adam(args.lr),
-        local_opt=adam(args.lr) if prob.model.has_local else None,
-        aggregator=(TrimmedMeanAggregator(args.trim_frac)
-                    if args.aggregator == "trimmed" else MeanAggregator()),
-        compressor=(Int8Compressor() if args.compress == "int8"
-                    else NoCompression()),
+    scenario = Scenario(
+        algorithm=algorithm,
+        participation=args.participation,
+        dropout=args.dropout,
+        compression=args.compress,
+        dp_noise=args.dp_noise,
+        dp_clip=args.dp_clip,
+        dp_delta=args.dp_delta,
+        aggregator=args.aggregator,
+        trim_frac=args.trim_frac,
+    )
+    return ExperimentSpec(
+        model=ModelSpec(args.model, kwargs=json.loads(args.model_kwargs or "{}")),
+        scenario=scenario,
+        num_silos=args.silos,
+        rounds=args.rounds if args.rounds is not None else 5,
+        local_steps=args.local_steps,
+        server_opt=OptimizerSpec("adam", args.lr),
         eta_mode=args.eta_mode,
-        privacy=privacy,
+        eval_every=args.eval_every,
         seed=args.seed,
     )
-    sched = RoundScheduler(args.silos, participation=args.participation,
-                           dropout=args.dropout, seed=args.seed)
-    name = {"sfvi": "SFVI", "sfvi_avg": "SFVI-Avg"}[algorithm]
-    print(f"\n== {name}: {args.model}, J={args.silos}, "
-          f"{args.rounds} rounds x {args.local_steps} local steps"
-          + (f", DP(z={args.dp_noise:g}, C={args.dp_clip:g})" if privacy else "")
-          + " ==")
-    t0 = time.time()
 
+
+def _log_round(total_silos: int):
     def log(r, m):
         eps = f"  eps={m['epsilon']:7.3f}" if "epsilon" in m else ""
         print(f"  round {r:3d}  elbo={m['elbo']:14.2f}  "
               f"up={m['bytes_up']:>9d}B  down={m['bytes_down']:>9d}B  "
-              f"active={m['n_active']}/{args.silos}{eps}")
+              f"active={m['n_active']}/{total_silos}{eps}")
+    return log
 
-    srv.run(args.rounds, algorithm=algorithm, local_steps=args.local_steps,
-            scheduler=sched, callback=log)
+
+def _report(exp, hlo_bytes: bool) -> None:
+    srv, spec = exp.server, exp.spec
     print(f"  total: {srv.comm.total:,} B in {srv.comm.rounds} rounds "
-          f"({srv.comm.per_round:,.0f} B/round), {time.time()-t0:.1f}s")
-    if srv.accountant is not None:
-        eps, order = srv.accountant.epsilon(privacy.delta)
-        print(f"  privacy: ({eps:.3f}, {privacy.delta:g})-DP after "
-              f"{srv.accountant.steps} exchanges (RDP order {order})")
-    if eval_fn is not None:
-        for k, v in eval_fn(srv).items():
-            print(f"  {k}: {v:.3f}")
-    if args.hlo_bytes:
-        coll = srv.compiled_collective_bytes(algorithm, args.local_steps)
+          f"({srv.comm.per_round:,.0f} B/round)")
+    if exp.accountant is not None:
+        policy = spec.scenario.privacy()
+        eps, order = exp.accountant.epsilon(policy.delta)
+        print(f"  privacy: ({eps:.3f}, {policy.delta:g})-DP after "
+              f"{exp.accountant.steps} exchanges (RDP order {order})")
+    for k, v in exp.evaluate().items():
+        print(f"  {k}: {v:.3f}")
+    if hlo_bytes:
+        coll = srv.compiled_collective_bytes(spec.algorithm, spec.local_steps)
         total = sum(coll.values())
         print(f"  compiled-HLO collective bytes/round: {total:,.0f} "
               f"({ {k: int(v) for k, v in coll.items() if v} })")
-    return srv
 
 
-def _run_sweep(args, built) -> int:
+def _run_one(spec, bundle, hlo_bytes: bool = False, ckpt_dir=None,
+             ckpt_every: int = 0):
+    """Build + run one spec against a pre-staged bundle; print a report."""
+    from repro.federated.api import build
+
+    exp = build(spec, bundle=bundle)
+    name = {"sfvi": "SFVI", "sfvi_avg": "SFVI-Avg"}[spec.algorithm]
+    sc = spec.scenario
+    print(f"\n== {name}: {spec.model.name}, J={spec.num_silos}, "
+          f"{spec.rounds} rounds x {spec.local_steps} local steps"
+          + (f", DP(z={sc.dp_noise:g}, C={sc.dp_clip:g})" if sc.dp_noise > 0 else "")
+          + " ==")
+    t0 = time.time()
+    log = _log_round(spec.num_silos)
+
+    def cb(r, metrics):
+        log(r, metrics)
+        # Periodic mid-run checkpoint: a preempted run restarts from the
+        # last multiple of --ckpt-every instead of from scratch.
+        if ckpt_dir and ckpt_every and (r + 1) % ckpt_every == 0 \
+                and (r + 1) < spec.rounds:
+            exp.save(ckpt_dir)
+
+    exp.run(callback=cb)
+    print(f"  wall time: {time.time() - t0:.1f}s")
+    if ckpt_dir:
+        print(f"  checkpoint: {exp.save(ckpt_dir)}")
+    _report(exp, hlo_bytes)
+    return exp
+
+
+def _run_sweep(args, base_spec, bundle) -> int:
     """One invocation, the whole scenario grid (ELBO / ε / bytes table)."""
-    import jax
-
-    from repro.federated import Server, scenario_matrix
-    from repro.optim.adam import adam
+    from repro.federated.api import build, scenario_specs
+    from repro.federated.scheduler import scenario_matrix
 
     def floats(s):
         return tuple(float(x) for x in s.split(","))
@@ -211,30 +206,18 @@ def _run_sweep(args, built) -> int:
         dp_clip=args.dp_clip,
         dp_delta=args.dp_delta,
     )
-    prob, theta0, datas, num_obs, eval_fn = built
-    print(f"\n== scenario sweep: {args.model}, J={args.silos}, "
-          f"{len(grid)} scenarios x {args.rounds} rounds ==")
+    specs = scenario_specs(base_spec, grid)
+    print(f"\n== scenario sweep: {base_spec.model.name}, J={base_spec.num_silos}, "
+          f"{len(specs)} scenarios x {base_spec.rounds} rounds ==")
     rows = []
-    for sc in grid:
-        srv = Server(
-            prob, datas, theta0,
-            prob.global_family.init(jax.random.PRNGKey(args.seed)),
-            num_obs=num_obs,
-            server_opt=adam(args.lr),
-            local_opt=adam(args.lr) if prob.model.has_local else None,
-            aggregator=sc.make_aggregator(),
-            compressor=sc.compressor(),
-            privacy=sc.privacy(),
-            seed=args.seed,
-        )
+    for spec in specs:
+        exp = build(spec, bundle=bundle)
         t0 = time.time()
-        h = srv.run(args.rounds, algorithm=sc.algorithm,
-                    local_steps=args.local_steps,
-                    scheduler=sc.scheduler(args.silos, seed=args.seed))
+        h = exp.run()
         dt = time.time() - t0
         eps = h["epsilon"][-1] if "epsilon" in h else float("inf")
-        rows.append((sc.name, h["elbo"][-1], eps,
-                     srv.comm.per_round / 1024, dt / args.rounds))
+        rows.append((spec.scenario.name, h["elbo"][-1], eps,
+                     exp.comm.per_round / 1024, dt / spec.rounds))
     w = max(len(r[0]) for r in rows)
     print(f"  {'scenario':<{w}}  {'ELBO':>12}  {'eps':>8}  "
           f"{'KiB/round':>10}  {'s/round':>8}")
@@ -244,22 +227,97 @@ def _run_sweep(args, built) -> int:
     return 0
 
 
+def _resume(args) -> int:
+    """Continue a checkpointed run from ``--resume DIR``.
+
+    ``--rounds N`` extends (or shrinks) the checkpointed spec's total
+    budget — e.g. resume a finished 20-round run out to 50.
+    """
+    import dataclasses
+
+    from repro.federated.api import Experiment, ExperimentSpec
+
+    spec = ExperimentSpec.load(os.path.join(args.resume, "spec.json"))
+    if args.rounds is not None:
+        spec = dataclasses.replace(spec, rounds=args.rounds)
+    exp = Experiment.resume(args.resume, spec=spec)
+    remaining = exp.remaining_rounds
+    print(f"== resume: {spec.name} at round {exp.round}/{spec.rounds} "
+          f"({remaining} remaining) ==")
+    if remaining:
+        out = args.ckpt_dir or args.resume
+        log = _log_round(spec.num_silos)
+
+        def cb(r, metrics):
+            log(r, metrics)
+            # Resumed runs stay preemption-safe under --ckpt-every too.
+            if args.ckpt_every and (r + 1) % args.ckpt_every == 0 \
+                    and (r + 1) < spec.rounds:
+                exp.save(out)
+
+        exp.run(callback=cb)
+        exp.save(out)
+    _report(exp, args.hlo_bytes)
+    return 0
+
+
 def main(argv=None) -> int:
-    """Run the requested algorithm(s) and assert the §3.2 byte ordering."""
+    """Run the requested spec(s) and assert the §3.2 byte ordering."""
     args = build_parser().parse_args(argv)
+    if args.list_models:
+        width = max(len(n) for n, _ in list_models())
+        for name, desc in list_models():
+            print(f"{name:<{width}}  {desc}")
+        return 0
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         )
-    built = _build_problem(args)  # one dataset/problem, shared by all runs
+    if args.resume:
+        return _resume(args)
+
+    from repro.federated.api import ExperimentSpec
+
+    if args.spec:
+        specs = [ExperimentSpec.load(args.spec)]
+    else:
+        algos = ["sfvi", "sfvi_avg"] if args.algo == "both" else [args.algo]
+        specs = [_spec_from_args(args, a) for a in algos]
+    if args.dump_spec:
+        if len(specs) != 1:
+            print("--dump-spec needs a single algorithm; pass --algo "
+                  "sfvi or --algo sfvi_avg", file=sys.stderr)
+            return 2
+        print(specs[0].to_json())
+        return 0
+
+    # One dataset/problem staging, shared by every run of this invocation.
+    from repro.models.paper.registry import get_model
+
+    base = specs[0]
+    # Mirror api.build's staging rule: data_seed overrides seed. Staging
+    # with base.seed here would hand --spec runs a different dataset than
+    # build(spec)/--resume rebuild.
+    data_seed = base.data_seed if base.data_seed is not None else base.seed
+    bundle = get_model(base.model.name).build(
+        data_seed, base.num_silos, **base.model.kwargs)
     if args.sweep:
-        return _run_sweep(args, built)
-    algos = ["sfvi", "sfvi_avg"] if args.algo == "both" else [args.algo]
-    servers = {a: _run_one(args, a, built) for a in algos}
-    if len(servers) == 2:
-        sfvi_pr = servers["sfvi"].comm.per_round
-        avg_pr = servers["sfvi_avg"].comm.per_round
+        return _run_sweep(args, base, bundle)
+
+    def ckpt_dir_for(spec):
+        if not args.ckpt_dir:
+            return None
+        return (args.ckpt_dir if len(specs) == 1
+                else os.path.join(args.ckpt_dir, spec.algorithm))
+
+    exps = {s.algorithm: _run_one(s, bundle, args.hlo_bytes,
+                                  ckpt_dir=ckpt_dir_for(s),
+                                  ckpt_every=args.ckpt_every)
+            for s in specs}
+    if len(exps) == 2:
+        sfvi_pr = exps["sfvi"].comm.per_round
+        avg_pr = exps["sfvi_avg"].comm.per_round
         print(f"\nbytes/round: SFVI={sfvi_pr:,.0f}  SFVI-Avg={avg_pr:,.0f}  "
               f"(x{sfvi_pr / max(avg_pr, 1):.1f} reduction — §3.2: one sync "
               f"per round instead of one per local step)")

@@ -30,7 +30,6 @@ zero wire bytes); ε_{L_j} additionally folds in the silo id.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
@@ -42,6 +41,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.sfvi import SFVIProblem
 from repro.core.families import DiagGaussian
 from repro.federated.aggregation import MeanAggregator, NoCompression
+from repro.federated.metering import CommMeter, tree_bytes
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.scheduler import RoundScheduler
 from repro.launch.mesh import make_silo_mesh
@@ -133,29 +133,6 @@ def _coalesced_all_gather(tree: PyTree, axis_name: str) -> PyTree:
             out[i] = piece.reshape((-1,) + leaves[i].shape[1:])
             off += size
     return jax.tree_util.tree_unflatten(treedef, out)
-
-
-@dataclasses.dataclass
-class CommMeter:
-    """Algorithm-level bytes-on-wire accounting (host side, per round)."""
-
-    rounds: int = 0
-    bytes_up: int = 0  # silo -> server (post-compression)
-    bytes_down: int = 0  # server -> silo broadcast
-
-    def record(self, up: int, down: int) -> None:
-        """Log one round's realized (up, down) bytes."""
-        self.rounds += 1
-        self.bytes_up += int(up)
-        self.bytes_down += int(down)
-
-    @property
-    def total(self) -> int:
-        return self.bytes_up + self.bytes_down
-
-    @property
-    def per_round(self) -> float:
-        return self.total / max(self.rounds, 1)
 
 
 class Server:
@@ -557,8 +534,17 @@ class Server:
         local_steps: int = 1,
         scheduler: Optional[RoundScheduler] = None,
         callback: Optional[Callable[[int, dict], None]] = None,
+        start_round: int = 0,
     ) -> Dict[str, list]:
         """Advance the federation ``num_rounds`` rounds; returns history.
+
+        ``start_round`` is the absolute index of the first round: the
+        round PRNG key, the scheduler's participation draws and the
+        accountant's exchange indices are all functions of the absolute
+        round, so ``run(a); run(b, start_round=a)`` replays exactly the
+        same stream as one ``run(a + b)`` — the property
+        ``federated.api.Experiment`` builds its bit-exact save/resume
+        guarantee on.
 
         One round is ``local_steps`` optimizer steps: SFVI pays one
         up+down exchange per step, SFVI-Avg one per round — the meter
@@ -596,7 +582,7 @@ class Server:
             # participation attribute are accounted at full participation.
             q = float(getattr(sched, "participation", 1.0))
         base_key = jax.random.PRNGKey(self.seed)
-        for r in range(num_rounds):
+        for r in range(start_round, start_round + num_rounds):
             # SFVI synchronizes every local step, so each of the round's
             # `exchanges` gathers is its OWN participation draw (schedule
             # index = exchange index) — required for the accountant's

@@ -23,7 +23,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import make_token_stream
 from repro.checkpoint.io import CheckpointManager
-from repro.federated import CommMeter, NoCompression, PrivacyPolicy, run_rounds
+from repro.federated import (CommMeter, ExperimentSpec, ModelSpec,
+                             NoCompression, OptimizerSpec, Scenario,
+                             run_rounds)
 from repro.launch import steps as S
 from repro.models.backbone import transformer as T
 
@@ -61,7 +63,35 @@ def main(argv=None):
     ap.add_argument("--dp-delta", type=float, default=1e-5)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print this run's declarative spec as JSON and "
+                         "exit. The SPMD path executes outside "
+                         "federated.api.build (its server is a psum, not "
+                         "a Server object), so the spec is the run's "
+                         "provenance record: the same scenario fields the "
+                         "compiled runtime would be built from.")
     args = ap.parse_args(argv)
+
+    # Declarative record of the run: the SPMD cadence expressed in the
+    # same (scenario, optimizer, seed) vocabulary as repro.federated.api.
+    scenario = Scenario(
+        algorithm="sfvi" if args.algo == "sfvi" else "sfvi_avg",
+        dp_noise=args.dp_noise, dp_clip=args.dp_clip, dp_delta=args.dp_delta,
+    )
+    spec = ExperimentSpec(
+        model=ModelSpec(f"llm/{args.arch}",
+                        kwargs={"batch": args.batch, "seq": args.seq,
+                                "full": bool(args.full)}),
+        scenario=scenario,
+        num_silos=args.silos,
+        rounds=args.steps,
+        local_steps=1 if args.algo == "sfvi" else args.avg_every,
+        server_opt=OptimizerSpec("adam", args.lr),
+        seed=0,
+    )
+    if args.dump_spec:
+        print(spec.to_json())
+        return None
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -142,10 +172,9 @@ def main(argv=None):
     # every --avg-every steps. The noising itself lives in the compiled
     # round of repro.federated.Server; here we compose the equivalent
     # Gaussian-mechanism ledger so the SPMD path reports (eps, delta).
-    privacy = (PrivacyPolicy(clip_norm=args.dp_clip,
-                             noise_multiplier=args.dp_noise,
-                             delta=args.dp_delta)
-               if args.dp_noise > 0 else None)
+    # The policy comes from the run's declarative scenario so the two
+    # paths can never configure DP differently.
+    privacy = spec.scenario.privacy()
     exchanges = (1 if args.algo == "sfvi"
                  else (lambda i: 1 if (i + 1) % args.avg_every == 0 else 0))
 

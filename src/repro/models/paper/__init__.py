@@ -1,6 +1,27 @@
-from repro.models.paper.hier_bnn import build_hier_bnn
-from repro.models.paper.prodlda import build_prodlda
-from repro.models.paper.glmm import build_glmm
-from repro.models.paper.multinomial import build_multinomial
+"""The paper's experiment models (§4, supplement S3).
 
-__all__ = ["build_hier_bnn", "build_prodlda", "build_glmm", "build_multinomial"]
+Lazy re-exports (PEP 562): importing this package — e.g. to read the
+model registry (``repro.models.paper.registry``) for CLI ``--list-models``
+or ``choices`` — must not pull in JAX; the model modules import it at
+top level, so they load only when a builder is actually touched.
+"""
+_LAZY = {
+    "build_hier_bnn": "repro.models.paper.hier_bnn",
+    "build_prodlda": "repro.models.paper.prodlda",
+    "build_glmm": "repro.models.paper.glmm",
+    "build_multinomial": "repro.models.paper.multinomial",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,356 @@
+"""Tests for the declarative experiment API (repro.federated.api).
+
+Covers the acceptance surface of the API redesign:
+  * spec JSON round trip, including scenario/privacy fields;
+  * save -> resume bit-exactness vs an uninterrupted run;
+  * the deprecated eager adapters (SFVIServer / SFVIAvgServer) produce
+    the compiled Server's trajectories exactly (K = 1 equivalence);
+  * registry lookup + the CLI's --list-models / --dump-spec paths.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConditionalGaussian,
+    DiagGaussian,
+    SFVIAvgServer,
+    SFVIProblem,
+    SFVIServer,
+    Silo,
+    StructuredModel,
+)
+from repro.federated import (
+    Experiment,
+    ExperimentSpec,
+    ModelSpec,
+    OptimizerSpec,
+    Scenario,
+    Server,
+    build,
+    stack_silos,
+)
+from repro.federated import run as cli
+from repro.models.paper.registry import get_model, list_models, model_names
+from repro.optim.sgd import sgd
+
+PAPER_MODELS = ["toy", "hier_bnn", "fedpop_bnn", "prodlda", "glmm", "multinomial"]
+
+
+def _full_spec(**over):
+    """A spec exercising every field, privacy and scenario included."""
+    base = dict(
+        model=ModelSpec("toy", {"num_obs": 8}),
+        scenario=Scenario(
+            algorithm="sfvi_avg", participation=0.75, dropout=0.1,
+            compression="int8", dp_noise=0.6, dp_clip=0.8, dp_delta=1e-6,
+            aggregator="trimmed", trim_frac=0.2,
+        ),
+        num_silos=4, rounds=6, local_steps=2,
+        server_opt=OptimizerSpec("adam", 3e-2, {"b1": 0.85}),
+        local_opt=OptimizerSpec("sgd", 1e-2),
+        eta_mode="param", eval_every=2, seed=5, data_seed=2,
+    )
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+class TestSpecRoundTrip:
+    def test_dict_round_trip_includes_privacy_and_scenario(self):
+        s = _full_spec()
+        d = s.to_dict()
+        assert d["scenario"]["dp_noise"] == 0.6
+        assert d["scenario"]["participation"] == 0.75
+        assert d["local_opt"]["name"] == "sgd"
+        assert ExperimentSpec.from_dict(d) == s
+
+    def test_json_round_trip(self):
+        s = _full_spec()
+        assert ExperimentSpec.from_json(s.to_json()) == s
+        # And through an actual serialize -> parse cycle of the dict form.
+        assert ExperimentSpec.from_dict(json.loads(json.dumps(s.to_dict()))) == s
+
+    def test_defaults_round_trip(self):
+        s = ExperimentSpec(model=ModelSpec("toy"))
+        assert ExperimentSpec.from_json(s.to_json()) == s
+        assert s.local_opt is None
+        assert s.algorithm == s.scenario.algorithm
+
+    def test_file_round_trip(self, tmp_path):
+        s = _full_spec()
+        path = str(tmp_path / "spec.json")
+        s.save(path)
+        assert ExperimentSpec.load(path) == s
+
+    def test_unknown_optimizer_rejected_at_build(self):
+        with pytest.raises(ValueError, match="unknown optimizer"):
+            OptimizerSpec("lbfgs").build()
+
+
+class TestRegistry:
+    def test_all_paper_models_registered(self):
+        names = model_names()
+        for name in PAPER_MODELS:
+            assert name in names, f"{name} missing from registry"
+
+    def test_descriptions_nonempty(self):
+        for name, desc in list_models():
+            assert desc.strip(), f"{name} has no description"
+
+    def test_unknown_model_raises_with_available_names(self):
+        with pytest.raises(KeyError, match="registered models"):
+            get_model("nope")
+
+    def test_toy_bundle_stages_equal_silos(self):
+        bundle = get_model("toy").build(0, 3, num_obs=5)
+        assert len(bundle.datas) == 3
+        assert all(d["y"].shape == (5,) for d in bundle.datas)
+        assert bundle.num_obs == [5, 5, 5]
+        assert "posterior_mu" in bundle.extras
+
+
+class TestCLI:
+    def test_list_models_exits_zero(self, capsys):
+        assert cli.main(["--list-models"]) == 0
+        out = capsys.readouterr().out
+        for name in PAPER_MODELS:
+            assert name in out
+
+    def test_dump_spec_round_trips_through_from_json(self, capsys):
+        rc = cli.main(["--model", "toy", "--algo", "sfvi", "--silos", "3",
+                       "--rounds", "2", "--dp-noise", "0.5", "--dump-spec"])
+        assert rc == 0
+        spec = ExperimentSpec.from_json(capsys.readouterr().out)
+        assert spec.model.name == "toy"
+        assert spec.algorithm == "sfvi"
+        assert spec.num_silos == 3
+        assert spec.scenario.dp_noise == 0.5
+        assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+    def test_dump_spec_requires_single_algo(self, capsys):
+        assert cli.main(["--model", "toy", "--dump-spec"]) == 2
+
+    def test_spec_run_stages_with_data_seed(self, tmp_path, capsys):
+        """The CLI must stage data with data_seed (api.build's rule) —
+        staging with the run seed would hand --spec runs a different
+        dataset than --resume/build(spec) rebuild."""
+        spec = ExperimentSpec(
+            model=ModelSpec("toy", {"num_obs": 6}),
+            scenario=Scenario(algorithm="sfvi"),
+            num_silos=3, rounds=1, local_steps=1, seed=1, data_seed=9)
+        path = str(tmp_path / "spec.json")
+        spec.save(path)
+        assert cli.main(["--spec", path]) == 0
+        out = capsys.readouterr().out
+        ref = build(spec)
+        ref.run()
+        expected = ref.evaluate()["abs_error_vs_exact"]
+        assert f"abs_error_vs_exact: {expected:.3f}" in out
+
+
+def _run_state(exp):
+    return {k: exp.server.state[k] for k in ("theta", "eta_G", "eta_L")}
+
+
+def _assert_trees_bit_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestSaveResume:
+    def _spec(self):
+        # DP + compression + partial participation: the states the resume
+        # guarantee must thread (accountant ledger, scheduler stream,
+        # round keys) are all live.
+        return ExperimentSpec(
+            model=ModelSpec("toy", {"num_obs": 6}),
+            scenario=Scenario(algorithm="sfvi_avg", participation=0.75,
+                              compression="int8", dp_noise=0.5, dp_clip=0.9),
+            num_silos=4, rounds=6, local_steps=2,
+            server_opt=OptimizerSpec("adam", 2e-2), seed=3,
+        )
+
+    def test_resume_is_bit_exact(self, tmp_path):
+        spec = self._spec()
+        full = build(spec)
+        full.run()  # uninterrupted: all 6 rounds
+
+        part = build(spec)
+        part.run(3)
+        part.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path))
+        assert resumed.round == 3
+        resumed.run()  # the remaining 3 rounds
+
+        _assert_trees_bit_equal(_run_state(full), _run_state(resumed))
+        # Accountant composed the same ledger -> identical epsilon.
+        eps_full = full.accountant.epsilon(spec.scenario.dp_delta)
+        eps_res = resumed.accountant.epsilon(spec.scenario.dp_delta)
+        assert eps_full == eps_res
+        # Communication counters carried across the boundary too.
+        assert full.comm.state_dict() == resumed.comm.state_dict()
+
+    def test_resume_restores_round_and_counters(self, tmp_path):
+        spec = self._spec()
+        exp = build(spec)
+        exp.run(2)
+        exp.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path))
+        assert resumed.round == 2
+        assert resumed.remaining_rounds == spec.rounds - 2
+        assert resumed.comm.state_dict() == exp.comm.state_dict()
+        assert resumed.accountant.steps == exp.accountant.steps
+
+    def test_midrun_callback_save_resumes_bit_exact(self, tmp_path):
+        """Checkpointing FROM a run callback (the CLI's --ckpt-every
+        path) records the in-flight absolute round, so the resume
+        continues bit-exactly from mid-chunk."""
+        spec = self._spec()
+        full = build(spec)
+        full.run()
+
+        part = build(spec)
+
+        def save_at_4(r, metrics):
+            if r + 1 == 4:
+                part.save(str(tmp_path))
+
+        part.run(callback=save_at_4)
+        resumed = Experiment.resume(str(tmp_path))
+        assert resumed.round == 4
+        resumed.run()
+        _assert_trees_bit_equal(_run_state(full), _run_state(resumed))
+
+    def test_data_seed_decouples_staging_from_run_seed(self):
+        """Same data_seed + different run seeds -> identical silo data."""
+        import dataclasses
+
+        a = build(dataclasses.replace(self._spec(), seed=1, data_seed=9))
+        b = build(dataclasses.replace(self._spec(), seed=2, data_seed=9))
+        _assert_trees_bit_equal(a.bundle.datas, b.bundle.datas)
+
+    def test_resume_without_checkpoint_raises(self, tmp_path):
+        spec = self._spec()
+        spec.save(str(tmp_path / "spec.json"))
+        with pytest.raises(FileNotFoundError):
+            Experiment.resume(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Adapter equivalence: the deprecated eager API runs the compiled graph
+# ---------------------------------------------------------------------------
+
+
+def _global_only_problem(dG=3):
+    model = StructuredModel(
+        global_dim=dG, local_dim=0,
+        log_prior_global=lambda th, zg: -0.5 * jnp.sum((zg - th["m"]) ** 2),
+        log_local=lambda th, zg, zl, d: -0.5 * jnp.sum((d["y"] - zg[None, :]) ** 2),
+    )
+    return SFVIProblem(model, DiagGaussian(dG))
+
+
+def _hier_problem(dG=3, dL=2):
+    model = StructuredModel(
+        global_dim=dG, local_dim=dL,
+        log_prior_global=lambda th, zg: -0.5 * jnp.sum((zg - th["m"]) ** 2),
+        log_local=lambda th, zg, zl, d: (
+            -0.5 * jnp.sum((zl - jnp.mean(zg)) ** 2)
+            - 0.5 * jnp.sum((d["y"] - zl[None, :]) ** 2)
+        ),
+    )
+    return SFVIProblem(model, DiagGaussian(dG), ConditionalGaussian(dL, dG))
+
+
+def _datas(key, J, n, d):
+    return [{"y": jax.random.normal(jax.random.fold_in(key, j), (n, d))}
+            for j in range(J)]
+
+
+class TestAdapterEquivalence:
+    def test_sfvi_adapter_matches_server_k1(self):
+        """Legacy SFVIServer == compiled Server, bit for bit, at K=1."""
+        lr, J, n = 0.05, 3, 4
+        prob = _global_only_problem()
+        theta = {"m": jnp.asarray(0.2)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1), mu_scale=0.4)
+        datas = _datas(jax.random.PRNGKey(2), J, n, 3)
+        silos = [Silo(j, prob, datas[j], None, None, n) for j in range(J)]
+
+        with pytest.warns(DeprecationWarning):
+            legacy = SFVIServer(prob, silos, theta, eta_G, sgd(lr), seed=7)
+        direct = Server(prob, datas, theta, eta_G, num_obs=[n] * J,
+                        server_opt=sgd(lr), eta_mode="param", seed=7)
+        h_legacy = legacy.run(3)
+        h_direct = direct.run(3, algorithm="sfvi", local_steps=1)
+
+        _assert_trees_bit_equal(legacy.theta, direct.theta)
+        _assert_trees_bit_equal(legacy.eta_G, direct.eta_G)
+        assert h_legacy["elbo"] == h_direct["elbo"]
+        assert h_legacy["bytes_up"] == h_direct["bytes_up"]
+
+    def test_sfvi_adapter_matches_server_with_locals(self):
+        """Same, with local latents: caller-initialized η_{L_j} are
+        honoured and the trajectories coincide exactly."""
+        lr, J, n = 0.05, 3, 4
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.1)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(3), mu_scale=0.4)
+        datas = _datas(jax.random.PRNGKey(4), J, n, 2)
+        key = jax.random.PRNGKey(9)
+        etas_L = [prob.local_family.init(jax.random.fold_in(key, j))
+                  for j in range(J)]
+        silos = [Silo(j, prob, datas[j], etas_L[j], sgd(lr), n)
+                 for j in range(J)]
+
+        with pytest.warns(DeprecationWarning):
+            legacy = SFVIServer(prob, silos, theta, eta_G, sgd(lr), seed=11)
+        direct = Server(prob, datas, theta, eta_G, num_obs=[n] * J,
+                        server_opt=sgd(lr), local_opt=sgd(lr),
+                        eta_mode="param", seed=11)
+        direct.state["eta_L"] = stack_silos(etas_L)
+
+        legacy.run(2)
+        direct.run(2, algorithm="sfvi", local_steps=1)
+
+        _assert_trees_bit_equal(legacy.theta, direct.theta)
+        _assert_trees_bit_equal(legacy.eta_G, direct.eta_G)
+        _assert_trees_bit_equal(legacy._compiled.eta_L, direct.eta_L)
+        # And the adapter wrote the updated slices back into the Silos.
+        for j, silo in enumerate(silos):
+            _assert_trees_bit_equal(
+                silo.eta_L,
+                jax.tree_util.tree_map(lambda x: x[j], direct.eta_L))
+
+    def test_avg_adapter_matches_server(self):
+        """Legacy SFVIAvgServer == compiled Server (sfvi_avg), bit for bit."""
+        lr, J, n, K = 0.03, 3, 4, 3
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.1)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(5), mu_scale=0.4)
+        datas = _datas(jax.random.PRNGKey(6), J, n, 2)
+        key = jax.random.PRNGKey(13)
+        etas_L = [prob.local_family.init(jax.random.fold_in(key, j))
+                  for j in range(J)]
+        silos = [Silo(j, prob, datas[j], etas_L[j], sgd(lr), n)
+                 for j in range(J)]
+
+        with pytest.warns(DeprecationWarning):
+            legacy = SFVIAvgServer(prob, silos, theta, eta_G,
+                                   lambda: sgd(lr), seed=17)
+        direct = Server(prob, datas, theta, eta_G, num_obs=[n] * J,
+                        server_opt=sgd(lr), local_opt=sgd(lr),
+                        eta_mode="barycenter", seed=17)
+        direct.state["eta_L"] = stack_silos(etas_L)
+
+        h_legacy = legacy.run(2, local_steps=K)
+        h_direct = direct.run(2, algorithm="sfvi_avg", local_steps=K)
+
+        _assert_trees_bit_equal(legacy.theta, direct.theta)
+        _assert_trees_bit_equal(legacy.eta_G, direct.eta_G)
+        assert h_legacy["elbo"] == h_direct["elbo"]
