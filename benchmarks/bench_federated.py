@@ -11,14 +11,22 @@ CLI), so every benchmarked configuration is serializable and resumable.
 
 ``privacy_utility_sweep`` traces the ε↔utility frontier: one row per
 noise multiplier, ε vs ELBO vs accuracy vs wire bytes.
+
+``--smoke --json BENCH_federated.json`` runs a tiny fixed configuration
+(toy model) and writes a machine-readable result — the CI perf gate
+(``benchmarks/check_perf.py``) compares it against the committed
+``benchmarks/baseline.json`` and fails on >25% calibrated regression.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import math
+import sys
 import time
 
 from benchmarks.common import print_table, staged_experiment
-from repro.federated import Scenario
+from repro.federated import AsyncConfig, Scenario
 from repro.models.paper.fixtures import bnn_posterior_accuracy
 from repro.models.paper.registry import get_model
 
@@ -33,6 +41,13 @@ SCENARIOS = [
     Scenario(algorithm="sfvi_avg", dp_noise=1.0),
     Scenario(algorithm="sfvi_avg", dp_noise=1.0, compression="int8",
              participation=0.5),
+    # Buffered-async rows: flush every B=2 arrivals under a heavy
+    # straggler tail — the regime the synchronous server pays for in
+    # wall-clock, composed with DP + int8 to cover the whole stack.
+    Scenario(algorithm="sfvi_avg",
+             async_cfg=AsyncConfig(buffer_size=2, latency="straggler")),
+    Scenario(algorithm="sfvi_avg", dp_noise=1.0, compression="int8",
+             async_cfg=AsyncConfig(buffer_size=2, latency="straggler")),
 ]
 
 
@@ -67,6 +82,7 @@ def run(quick: bool = True, seed: int = 0) -> dict:
             "eps": "inf" if eps == math.inf else round(eps, 2),
             "KiB/round": round(exp.comm.per_round / 1024, 1),
             "s/round": round(dt / rounds, 2),
+            "Sim s": round(exp.comm.sim_seconds, 1),
             "Total MiB": round(exp.comm.total / 2**20, 2),
         })
         out[sc.name] = rows[-1]
@@ -75,7 +91,7 @@ def run(quick: bool = True, seed: int = 0) -> dict:
         f"Federated runtime scenarios (hier BNN, J={J}, "
         f"{rounds} rounds x {local} local steps; DP at delta=1e-05)",
         rows, ["Scenario", "ELBO", "Acc %", "eps", "KiB/round", "s/round",
-               "Total MiB"],
+               "Sim s", "Total MiB"],
     )
     sfvi, avg = out["SFVI"], out["SFVI-Avg"]
     dp = out[Scenario(algorithm="sfvi_avg", dp_noise=1.0).name]
@@ -121,6 +137,160 @@ def privacy_utility_sweep(quick: bool = True, seed: int = 0,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# CI smoke benchmark + machine-readable output (the perf-gate input)
+# ---------------------------------------------------------------------------
+
+# The tiny FIXED configuration the CI gate tracks across commits. Never
+# tune these to make a regression disappear — change them only together
+# with a regenerated benchmarks/baseline.json (check_perf.py --update).
+# rounds = 1 warmup (compile, reported but not gated) + 24 individually
+# timed rounds; s_per_round is their median (robust under runner noise).
+# The multinomial model (1970-dim global) keeps per-round work well
+# above host-dispatch jitter, unlike the microscopic toy posterior.
+SMOKE_CONFIG = {"model": "multinomial",
+                "model_kwargs": {"n_per": 60, "in_dim": 196}, "silos": 4,
+                "rounds": 25, "local_steps": 4, "lr": 2e-2, "seed": 0}
+
+# DP rows use a gentle (z, C): the gate tracks ELBO as a sanity band,
+# which needs a stable (non-diverging) trajectory on the toy posterior.
+SMOKE_SCENARIOS = [
+    Scenario(algorithm="sfvi"),
+    Scenario(algorithm="sfvi_avg"),
+    Scenario(algorithm="sfvi_avg", compression="int8"),
+    Scenario(algorithm="sfvi_avg", dp_noise=0.3, dp_clip=0.3),
+    Scenario(algorithm="sfvi_avg",
+             async_cfg=AsyncConfig(buffer_size=2, latency="straggler")),
+    Scenario(algorithm="sfvi_avg", dp_noise=0.3, dp_clip=0.3,
+             compression="int8",
+             async_cfg=AsyncConfig(buffer_size=2, latency="straggler")),
+]
+
+
+_YARD_INPUT = None
+
+
+def _yardstick(reps: int = 3) -> float:
+    """Seconds for a fixed NumPy workload — a machine-speed yardstick.
+
+    CI runners and developer laptops differ in raw speed by more than
+    any regression we want to catch, so ``check_perf.py`` gates
+    CALIBRATED times (round seconds / yardstick seconds): the yardstick
+    cancels the machine out of the ratio. The smoke benchmark measures
+    it INTERLEAVED with every timed round, so even load that arrives
+    mid-benchmark hits both sides of the ratio. Deliberately
+    single-threaded elementwise work (no BLAS): threaded matmuls
+    measure the scheduler, not the machine, and flap ±25% run to run.
+    """
+    import numpy as np
+
+    global _YARD_INPUT
+    if _YARD_INPUT is None:
+        _YARD_INPUT = np.linspace(0.0, 1.0, 1 << 20, dtype=np.float32)
+    x = _YARD_INPUT
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        x = np.tanh(x) * 0.5 + 0.25
+    return time.perf_counter() - t0
+
+
+def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
+    """Tiny fixed benchmark for the CI perf gate (writes ``json_path``).
+
+    One row per SMOKE_SCENARIO over the toy model: final ELBO,
+    bytes/round (deterministic), wall s/round and the simulated async
+    wall-clock, plus a calibration measurement so times compare across
+    machines. The output schema is what ``benchmarks/check_perf.py``
+    consumes.
+    """
+    cfg = dict(SMOKE_CONFIG)
+    if seed is not None:
+        cfg["seed"] = seed
+    bundle = get_model(cfg["model"]).build(
+        cfg["seed"], cfg["silos"], **cfg["model_kwargs"])
+
+    import statistics
+
+    scenarios = {}
+    yardsticks = []
+    for sc in SMOKE_SCENARIOS:
+        exp = staged_experiment(
+            cfg["model"], bundle, scenario=sc, num_silos=cfg["silos"],
+            rounds=cfg["rounds"], local_steps=cfg["local_steps"],
+            lr=cfg["lr"], seed=cfg["seed"],
+            model_kwargs=cfg["model_kwargs"])
+        # Round 0 pays tracing + XLA compile; report it separately and
+        # gate only the steady-state per-round time (compile latency on
+        # shared CI runners is far noisier than the 25% gate). Every
+        # remaining round is timed individually, bracketed by a
+        # yardstick tick; the gated quantity is the MEDIAN of the
+        # per-round (round s / yardstick s) ratios — machine speed and
+        # even mid-benchmark load cancel, spikes fall to the median.
+        t0 = time.perf_counter()
+        exp.run(1)
+        compile_s = time.perf_counter() - t0
+        per_round, ratios = [], []
+        while exp.remaining_rounds:
+            tick = _yardstick()
+            t0 = time.perf_counter()
+            exp.run(1)
+            dt = time.perf_counter() - t0
+            per_round.append(dt)
+            ratios.append(dt / tick)
+            yardsticks.append(tick)
+        hist = exp.history
+        scenarios[sc.name] = {
+            "elbo": float(hist["elbo"][-1]),
+            "bytes_per_round": float(exp.comm.per_round),
+            "s_per_round": statistics.median(per_round),
+            "calibrated_round": statistics.median(ratios),
+            "compile_s": compile_s,
+            "sim_seconds": float(exp.comm.sim_seconds),
+            "epsilon": (float(hist["epsilon"][-1])
+                        if "epsilon" in hist else None),
+        }
+
+    result = {
+        "benchmark": "bench_federated-smoke",
+        "config": cfg,
+        "calibration_s": statistics.median(yardsticks),
+        "scenarios": scenarios,
+    }
+    rows = [{"Scenario": name, **{k: (round(v, 4) if isinstance(v, float)
+                                      else v) for k, v in r.items()}}
+            for name, r in scenarios.items()]
+    print_table(
+        f"bench-smoke (toy, J={cfg['silos']}, {cfg['rounds']} rounds; "
+        f"calibration {result['calibration_s']:.3f}s)",
+        rows, ["Scenario", "elbo", "bytes_per_round", "s_per_round",
+               "calibrated_round", "compile_s", "sim_seconds", "epsilon"],
+    )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        print(f"\nwrote {json_path}")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_federated",
+        description="Federated runtime scenario benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed config for the CI perf gate")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="write machine-readable results to FILE")
+    ap.add_argument("--full", action="store_true",
+                    help="non-quick sizes for the hier_bnn tables")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke(json_path=args.json)
+        return 0
+    run(quick=not args.full)
+    privacy_utility_sweep(quick=not args.full)
+    return 0
+
+
 if __name__ == "__main__":
-    run(quick=True)
-    privacy_utility_sweep(quick=True)
+    sys.exit(main())

@@ -1,0 +1,126 @@
+"""CI perf-regression gate for the federated benchmark.
+
+    python benchmarks/check_perf.py BENCH_federated.json benchmarks/baseline.json
+    python benchmarks/check_perf.py BENCH_federated.json benchmarks/baseline.json --update
+
+Compares a fresh ``bench_federated.py --smoke --json`` result against the
+committed baseline, per scenario:
+
+  * **bytes/round** — deterministic; any drift beyond 0.5% fails (a wire
+    regression is a bug, not noise);
+  * **calibrated time** — the benchmark's ``calibrated_round`` (median
+    over rounds of round-seconds / interleaved-yardstick-seconds; the
+    fixed NumPy yardstick cancels runner speed and even mid-benchmark
+    load out of the ratio); fails when it exceeds the baseline's by
+    more than ``TIME_REGRESSION`` (25%);
+  * **ELBO** — a loose 10% sanity band (cross-platform float drift is
+    ~1e-6; a 10% move means the optimization changed, which a perf PR
+    must not do silently);
+  * **simulated async wall-clock** — deterministic (event-loop output);
+    0.5% band.
+
+Scenarios present only in the new result are reported but do not fail
+(they need a baseline refresh); scenarios missing from the new result
+fail (coverage must not silently shrink). ``--update`` rewrites the
+baseline from the new result instead of gating — run it locally and
+commit the file whenever the smoke config or scenario list changes.
+
+Exit codes: 0 pass, 1 regression, 2 usage.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TIME_REGRESSION = 0.25  # fail when calibrated time grows more than this
+BYTES_TOLERANCE = 0.005
+ELBO_TOLERANCE = 0.10
+SIM_TOLERANCE = 0.005
+
+
+def _rel(new: float, old: float) -> float:
+    return abs(new - old) / max(abs(old), 1e-12)
+
+
+def _calibrated(entry: dict, top: dict) -> float:
+    """The gated time: pre-normalized if present, else normalize here."""
+    if "calibrated_round" in entry:
+        return float(entry["calibrated_round"])
+    return float(entry["s_per_round"]) / float(top["calibration_s"])
+
+
+def compare(new: dict, base: dict) -> list:
+    """Return a list of human-readable regression strings (empty = pass)."""
+    problems = []
+    new_sc = new["scenarios"]
+    base_sc = base["scenarios"]
+
+    for name in sorted(set(base_sc) - set(new_sc)):
+        problems.append(f"scenario dropped from the benchmark: {name!r}")
+    for name in sorted(set(new_sc) - set(base_sc)):
+        print(f"note: new scenario {name!r} has no baseline yet "
+              "(run check_perf.py --update and commit)")
+
+    for name in sorted(set(new_sc) & set(base_sc)):
+        a, b = new_sc[name], base_sc[name]
+        if _rel(a["bytes_per_round"], b["bytes_per_round"]) > BYTES_TOLERANCE:
+            problems.append(
+                f"{name}: bytes/round {b['bytes_per_round']:.0f} -> "
+                f"{a['bytes_per_round']:.0f}")
+        if _rel(a["elbo"], b["elbo"]) > ELBO_TOLERANCE:
+            problems.append(
+                f"{name}: ELBO moved {b['elbo']:.3f} -> {a['elbo']:.3f} "
+                f"(>{ELBO_TOLERANCE:.0%})")
+        # No zero-baseline guard: 0 -> 0 passes (rel 0), but a sync
+        # scenario STARTING to accumulate simulated time must fail just
+        # like an async scenario losing it.
+        if _rel(a.get("sim_seconds", 0.0), b.get("sim_seconds", 0.0)) \
+                > SIM_TOLERANCE:
+            problems.append(
+                f"{name}: simulated wall-clock {b['sim_seconds']:.3f}s -> "
+                f"{a['sim_seconds']:.3f}s")
+        t_new = _calibrated(a, new)
+        t_base = _calibrated(b, base)
+        if t_new > t_base * (1.0 + TIME_REGRESSION):
+            problems.append(
+                f"{name}: calibrated s/round {t_base:.3f} -> {t_new:.3f} "
+                f"(+{(t_new / t_base - 1.0):.0%}, gate {TIME_REGRESSION:.0%})")
+        else:
+            print(f"ok: {name}  calibrated {t_base:.3f} -> {t_new:.3f}  "
+                  f"bytes {a['bytes_per_round']:.0f}")
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) not in (3, 4) or (len(argv) == 4 and argv[3] != "--update"):
+        print(__doc__)
+        return 2
+    new_path, base_path = argv[1], argv[2]
+    with open(new_path) as f:
+        new = json.load(f)
+    if len(argv) == 4:
+        with open(base_path, "w") as f:
+            json.dump(new, f, indent=2)
+            f.write("\n")
+        print(f"baseline updated: {base_path}")
+        return 0
+    try:
+        with open(base_path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"REGRESSION GATE: no baseline at {base_path} — generate one "
+              "with --update and commit it")
+        return 1
+    problems = compare(new, base)
+    if problems:
+        print(f"\nPERF REGRESSION ({len(problems)}):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"\nno perf regressions vs {base_path} "
+          f"({len(base['scenarios'])} scenarios)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

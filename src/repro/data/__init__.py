@@ -14,8 +14,10 @@ from repro.data.synthetic import (
     make_token_stream,
 )
 from repro.data.partition import (
+    dirichlet_label_partition,
     heterogeneous_label_partition,
     iid_partition,
+    pad_ragged_silos,
     sizes_partition,
 )
 
@@ -25,7 +27,9 @@ __all__ = [
     "make_lda_corpus",
     "make_six_cities",
     "make_token_stream",
+    "dirichlet_label_partition",
     "heterogeneous_label_partition",
     "iid_partition",
+    "pad_ragged_silos",
     "sizes_partition",
 ]

@@ -23,6 +23,84 @@ def sizes_partition(rng: np.random.Generator, n: int, sizes: List[int]) -> List[
     return out
 
 
+def dirichlet_label_partition(
+    rng: np.random.Generator,
+    labels: np.ndarray,
+    num_silos: int,
+    alpha: float = 0.5,
+    min_per_silo: int = 1,
+) -> List[np.ndarray]:
+    """Dirichlet non-IID partition (Hsu et al., 2019) with unequal N_j.
+
+    For every class (or topic — any integer assignment works: partition
+    a corpus by each document's dominant topic to get topic-skewed
+    silos), draw per-silo proportions ``p ~ Dir(alpha · 1_J)`` and split
+    that class's samples accordingly. Small ``alpha`` concentrates each
+    class on few silos (extreme heterogeneity, with naturally unequal
+    silo sizes); large ``alpha`` recovers an IID-like split. Silos left
+    below ``min_per_silo`` samples are topped up from the largest silo
+    so every silo stays non-empty (the compiled runtime needs at least
+    one observation per silo).
+    """
+    labels = np.asarray(labels)
+    num_classes = int(labels.max()) + 1
+    assignments: List[List[int]] = [[] for _ in range(num_silos)]
+    for c in range(num_classes):
+        idx = rng.permutation(np.where(labels == c)[0])
+        if len(idx) == 0:
+            continue
+        p = rng.dirichlet(np.full(num_silos, alpha))
+        # Largest-remainder apportionment of len(idx) samples to silos.
+        quota = p * len(idx)
+        counts = np.floor(quota).astype(np.int64)
+        short = len(idx) - int(counts.sum())
+        for j in np.argsort(-(quota - counts))[:short]:
+            counts[j] += 1
+        start = 0
+        for j in range(num_silos):
+            assignments[j].extend(idx[start : start + counts[j]])
+            start += counts[j]
+    # Re-balance pathological draws so no silo is empty.
+    for j in range(num_silos):
+        while len(assignments[j]) < min_per_silo:
+            donor = max(range(num_silos), key=lambda i: len(assignments[i]))
+            if len(assignments[donor]) <= min_per_silo:
+                raise ValueError(
+                    f"cannot give every silo {min_per_silo} samples: "
+                    f"only {len(labels)} samples over {num_silos} silos")
+            assignments[j].append(assignments[donor].pop())
+    return [np.sort(np.asarray(a, np.int64)) for a in assignments]
+
+
+def pad_ragged_silos(datas: List[dict], weight_key: str = "w") -> List[dict]:
+    """Pad unequal-N_j silo dicts to a common leading size + 0/1 weights.
+
+    The compiled runtime stacks silo data along a leading axis, which
+    requires equal leaf shapes; a ragged federation pads every array to
+    the widest silo (repeating row 0 — values are inert) and adds a
+    ``weight_key`` vector that is 1.0 on real rows and 0.0 on padding.
+    Models consume the weights in their likelihood (e.g. the registry's
+    ``hetero_mn``), so padded rows contribute exactly nothing.
+    """
+    sizes = [len(next(iter(d.values()))) for d in datas]
+    n_max = max(sizes)
+    out = []
+    for d, n in zip(datas, sizes):
+        if weight_key in d:
+            raise ValueError(f"silo data already has a {weight_key!r} key")
+        pad = n_max - n
+        padded = {
+            k: np.concatenate([v, np.repeat(v[:1], pad, axis=0)], axis=0)
+            if pad else np.asarray(v)
+            for k, v in d.items()
+        }
+        w = np.zeros((n_max,), np.float32)
+        w[:n] = 1.0
+        padded[weight_key] = w
+        out.append(padded)
+    return out
+
+
 def heterogeneous_label_partition(
     rng: np.random.Generator,
     labels: np.ndarray,

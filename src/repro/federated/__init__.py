@@ -15,9 +15,17 @@ and differentially private rounds
 the compiled graph, :class:`~repro.federated.privacy.RdpAccountant`
 (ε, δ) tracking — docs/privacy.md). A
 :func:`~repro.federated.scheduler.scenario_matrix` crosses
-participation × stragglers × compression × DP into named
+participation × stragglers × compression × DP × async into named
 :class:`~repro.federated.scheduler.Scenario` rows for one-invocation
 sweeps.
+
+Asynchronous execution (docs/federated.md §Async): a Scenario carrying
+an :class:`~repro.federated.scheduler.AsyncConfig` runs FedBuff-style
+buffered flushes (:mod:`repro.federated.async_engine`) — the server
+applies an aggregate whenever ``buffer_size`` contributions arrive,
+staleness-weighted, under a deterministic per-(seed, silo, task)
+latency model — through the SAME compiled round graph, so DP,
+compression and the coalesced gather apply unchanged.
 
 Declarative layer (docs/api.md): an
 :class:`~repro.federated.api.ExperimentSpec` serializes a whole run
@@ -48,7 +56,13 @@ from repro.federated.runtime import (
     stack_silos,
     tree_bytes,
 )
-from repro.federated.scheduler import RoundScheduler, Scenario, scenario_matrix
+from repro.federated.async_engine import BufferState, run_buffered
+from repro.federated.scheduler import (
+    AsyncConfig,
+    RoundScheduler,
+    Scenario,
+    scenario_matrix,
+)
 from repro.federated.api import (
     Experiment,
     ExperimentSpec,
@@ -60,7 +74,10 @@ from repro.federated.api import (
 )
 
 __all__ = [
+    "AsyncConfig",
+    "BufferState",
     "CommMeter",
+    "run_buffered",
     "Experiment",
     "ExperimentSpec",
     "ModelSpec",

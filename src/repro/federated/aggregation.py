@@ -31,16 +31,19 @@ def _bcast_mask(mask: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class MeanAggregator:
-    """Uniform mean over the round's active silos.
+    """Weighted mean over the round's active silos.
 
-    ``combine`` returns Σ_j m_j x_j / Σ_j m_j for participation mask m —
-    the paper's server reduction up to the J rescale applied by the
-    runtime (J · mean over active = (J/|A|) Σ_active, the unbiased
-    partial-participation estimator).
+    ``combine`` returns Σ_j m_j x_j / Σ_j m_j — for a binary
+    participation mask m this is the paper's server reduction up to the
+    J rescale applied by the runtime (J · mean over active =
+    (J/|A|) Σ_active, the unbiased partial-participation estimator).
+    The async engine passes fractional staleness-decay weights instead
+    of a 0/1 mask, turning the same expression into the FedBuff-style
+    staleness-weighted mean.
     """
 
     def combine(self, stacked: PyTree, mask: jnp.ndarray) -> PyTree:
-        """Masked mean over the leading silo axis of every leaf."""
+        """Weighted mean over the leading silo axis of every leaf."""
         denom = jnp.maximum(jnp.sum(mask), 1.0)
 
         def leaf(x):
@@ -63,13 +66,19 @@ class TrimmedMeanAggregator:
     trim_frac: float = 0.1
 
     def combine(self, stacked: PyTree, mask: jnp.ndarray) -> PyTree:
-        """Per-coordinate trimmed mean over the active silos of every leaf."""
-        n_active = jnp.maximum(jnp.sum(mask), 1.0)
+        """Per-coordinate trimmed mean over the active silos of every leaf.
+
+        Any silo with weight > 0 counts as active; the trimmed mean
+        itself is unweighted (rank statistics have no canonical
+        fractional weighting), so under the async engine staleness
+        affects only WHICH silos enter the trim, not their weight.
+        """
+        n_active = jnp.maximum(jnp.sum((mask > 0.0).astype(mask.dtype)), 1.0)
         k = jnp.floor(self.trim_frac * n_active)
         k = jnp.minimum(k, jnp.floor((n_active - 1.0) / 2.0))
 
         def leaf(x):
-            m = _bcast_mask(mask, x) > 0.5
+            m = _bcast_mask(mask, x) > 0.0
             order = jnp.sort(jnp.where(m, x, jnp.inf), axis=0)
             rank = jnp.arange(x.shape[0]).reshape(-1, *([1] * (x.ndim - 1)))
             keep = (rank >= k) & (rank < n_active - k)

@@ -172,7 +172,7 @@ class ExperimentSpec:
         """Inverse of :meth:`to_dict`: ``from_dict(to_dict(s)) == s``."""
         return cls(
             model=ModelSpec.from_dict(d["model"]),
-            scenario=Scenario(**d.get("scenario", {})),
+            scenario=Scenario.from_dict(d.get("scenario", {})),
             num_silos=d.get("num_silos", 4),
             rounds=d.get("rounds", 10),
             local_steps=d.get("local_steps", 1),
@@ -223,6 +223,7 @@ def build(spec: ExperimentSpec, bundle=None) -> "Experiment":
     from repro.federated.runtime import Server
     from repro.models.paper.registry import get_model
 
+    spec.scenario.validate(spec.num_silos)
     if bundle is None:
         entry = get_model(spec.model.name)
         data_seed = spec.data_seed if spec.data_seed is not None else spec.seed
@@ -273,6 +274,10 @@ class Experiment:
         self.scheduler = scheduler
         self.round = 0
         self.history: Dict[str, list] = {}
+        # Buffered-async event-loop state (None until the first async
+        # flush, or restored by resume); rounds count flushes in async
+        # mode, so `self.round` needs no second counter.
+        self.async_state = None
 
     # -- delegation conveniences -------------------------------------------
 
@@ -322,6 +327,12 @@ class Experiment:
         ``eval_every``, the registry's eval metrics are merged into the
         round's metrics (and recorded under ``history["eval"]``) at that
         cadence.
+
+        When the scenario carries an async block, "rounds" are buffered
+        flushes driven by :func:`repro.federated.async_engine.run_buffered`
+        over the same compiled graph; the engine's
+        :class:`~repro.federated.async_engine.BufferState` lives on
+        ``self.async_state`` and is checkpointed with everything else.
         """
         n = self.remaining_rounds if rounds is None else rounds
         if n <= 0:
@@ -344,14 +355,25 @@ class Experiment:
             if callback is not None:
                 callback(r, metrics)
 
-        chunk = self.server.run(
-            n,
-            algorithm=spec.algorithm,
-            local_steps=spec.local_steps,
-            scheduler=self.scheduler,
-            callback=cb,
-            start_round=start,
-        )
+        if spec.scenario.async_cfg is not None:
+            from repro.federated.async_engine import run_buffered
+
+            chunk, self.async_state = run_buffered(
+                self.server, n, spec.scenario.async_cfg,
+                local_steps=spec.local_steps,
+                start_flush=start,
+                state=self.async_state,
+                callback=cb,
+            )
+        else:
+            chunk = self.server.run(
+                n,
+                algorithm=spec.algorithm,
+                local_steps=spec.local_steps,
+                scheduler=self.scheduler,
+                callback=cb,
+                start_round=start,
+            )
         for k, v in chunk.items():
             self.history.setdefault(k, []).extend(v)
         self.round = start + n
@@ -378,6 +400,11 @@ class Experiment:
             # Python's repr-based JSON floats round-trip doubles exactly.
             meta["acct"] = {"rdp": [float(x) for x in np.asarray(acct["rdp"])],
                             "steps": int(acct["steps"])}
+        if self.async_state is not None:
+            # Buffered-async event loop: simulated clock, in-flight tasks
+            # and the partially-filled buffer (JSON doubles are exact, so
+            # the arrival schedule resumes bit-exactly).
+            meta["async_state"] = self.async_state.state_dict()
         return meta
 
     @staticmethod
@@ -469,8 +496,11 @@ class Experiment:
             ]
             stacked = jax.tree_util.tree_map(
                 lambda *xs: jax.numpy.stack(xs), *slices)
-            state["eta_L"] = stacked["eta_L"]
-            state["opt_local"] = stacked["opt_local"]
+            # Checkpoints hold the J REAL silos; re-pad the stacked axis
+            # to this mesh's J_pad (a resume may land on a different
+            # device count — padded rows are masked and never read).
+            state["eta_L"] = exp.server.pad_silo_axis(stacked["eta_L"])
+            state["opt_local"] = exp.server.pad_silo_axis(stacked["opt_local"])
 
         with open(cls._meta_path(directory, step)) as f:
             meta = json.load(f)
@@ -481,6 +511,10 @@ class Experiment:
                 "rdp": np.asarray(meta["acct"]["rdp"], np.float64),
                 "steps": int(meta["acct"]["steps"]),
             })
+        if "async_state" in meta:
+            from repro.federated.async_engine import BufferState
+
+            exp.async_state = BufferState.from_state(meta["async_state"])
         return exp
 
 

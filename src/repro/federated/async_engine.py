@@ -1,0 +1,333 @@
+"""Buffered-asynchronous federated execution (FedBuff-style flushes).
+
+Real federations are asynchronous: silos finish local work at wildly
+different speeds, and a server that waits for the slowest silo every
+round (the synchronous ``Server.run``) wastes the fast ones. This module
+adds the buffered-asynchronous execution mode of Nguyen et al. (2022,
+FedBuff), in the damped/asynchronous update regime that Partitioned
+Variational Inference (Ashman et al., 2022) shows remains sound for the
+structured-VI update family:
+
+  * every silo loops forever: pull the current (θ, η_G), run
+    ``local_steps`` local VI steps, upload the contribution, repeat;
+  * the server buffers arriving contributions and applies one aggregate
+    — a **flush** — as soon as ``buffer_size`` of them are waiting,
+    weighting each contribution by ``(1 + staleness)^-staleness_decay``
+    where staleness counts how many flushes the server applied since
+    that silo last pulled;
+  * per-silo task latencies come from a deterministic model
+    (constant / lognormal / straggler-tail) keyed on
+    ``(seed, silo, task index)``, so a run — and a checkpoint-resumed
+    run — replays **bit-exactly**.
+
+The implementation keeps everything compiled: the arrival process is
+simulated on the host (microseconds — it is a tiny event loop), yielding
+per-flush participation **counts** and **staleness** vectors, and each
+flush executes the *existing* ``shard_map`` SFVI-Avg round graph with
+those static tensors — the participation mask gates local-state updates
+and the staleness-decayed weights drive the aggregation. DP clip/noise,
+int8 wire compression and the single coalesced ``all_gather`` therefore
+apply to async rounds unchanged.
+
+Two deliberate modeling choices, documented in docs/federated.md:
+
+  * contributions are *computed* against the flush-time server state and
+    staleness enters through the aggregation weight (the damped-update
+    view of asynchrony); the arrival process — which silos contribute,
+    how often, how stale — is simulated faithfully;
+  * with ``buffer_size == J`` and constant latency every flush contains
+    every silo at staleness 0 with weight 1, which reproduces the
+    synchronous SFVI-Avg trajectory **bit-exactly**
+    (``tests/test_async.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated.scheduler import AsyncConfig
+
+PyTree = Any
+
+# Salt for the latency stream, so it can never collide with the round-key
+# or DP-noise streams (which are jax PRNG folds of the same user seed).
+_LATENCY_SALT = 0x5AF0
+
+
+def latency_draw(cfg: AsyncConfig, seed: int, silo: int, task: int) -> float:
+    """Simulated seconds silo ``silo`` spends on its ``task``-th task.
+
+    A pure function of ``(seed, silo, task)`` — NumPy's ``SeedSequence``
+    hashing makes the draw reproducible across runs, platforms and
+    resume boundaries, which is what makes the whole arrival schedule
+    replayable.
+    """
+    if cfg.latency == "constant":
+        return float(cfg.latency_scale)
+    rng = np.random.default_rng([_LATENCY_SALT, seed, silo, task])
+    if cfg.latency == "lognormal":
+        return float(
+            cfg.latency_scale * math.exp(cfg.latency_sigma * rng.standard_normal())
+        )
+    if cfg.latency == "straggler":
+        slow = rng.random() < cfg.straggler_frac
+        return float(cfg.latency_scale * (cfg.straggler_slowdown if slow else 1.0))
+    raise ValueError(
+        f"unknown latency model {cfg.latency!r} (constant/lognormal/straggler)"
+    )
+
+
+@dataclasses.dataclass
+class BufferState:
+    """The server-side event-loop state between flushes.
+
+    This is the "buffer state" of the checkpoint/resume guarantee: it
+    captures the simulated clock, each silo's in-flight task (which
+    server version it pulled, when it will finish) and the contributions
+    already buffered toward the next flush. ``state_dict``/``load_state``
+    round-trip it losslessly through JSON (Python floats are doubles and
+    ``json`` serializes them via repr, which is exact), so a resumed run
+    continues the arrival schedule bit-exactly mid-buffer.
+
+    Attributes:
+      version: flushes applied so far (the server's parameter version).
+      clock: simulated wall-clock seconds.
+      last_flush: simulated time of the previous flush (0.0 initially).
+      task_idx: per-silo index of the task currently in flight.
+      start_version: per-silo server version pulled at task start.
+      start_time: per-silo simulated time the in-flight task started
+        (used to resolve pull-vs-flush ties: a silo that re-pulls at the
+        exact instant of a flush sees the post-flush model).
+      finish_time: per-silo simulated completion time of the in-flight
+        task.
+      buffer: pending contributions as (silo, staleness) pairs, in
+        arrival order — staleness is recorded at buffering time
+        (versions elapsed since that silo's pull; 0 in the synchronous
+        regime, matching FedBuff's convention); flushed when it reaches
+        ``buffer_size``.
+    """
+
+    version: int
+    clock: float
+    last_flush: float
+    task_idx: List[int]
+    start_version: List[int]
+    start_time: List[float]
+    finish_time: List[float]
+    buffer: List[Tuple[int, int]]
+
+    @classmethod
+    def init(cls, num_silos: int, cfg: AsyncConfig, seed: int) -> "BufferState":
+        """All silos pull version 0 at t=0 and start their first task."""
+        return cls(
+            version=0,
+            clock=0.0,
+            last_flush=0.0,
+            task_idx=[0] * num_silos,
+            start_version=[0] * num_silos,
+            start_time=[0.0] * num_silos,
+            finish_time=[
+                latency_draw(cfg, seed, j, 0) for j in range(num_silos)
+            ],
+            buffer=[],
+        )
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-native snapshot (checkpointed by ``federated.api``)."""
+        return {
+            "version": self.version,
+            "clock": self.clock,
+            "last_flush": self.last_flush,
+            "task_idx": list(self.task_idx),
+            "start_version": list(self.start_version),
+            "start_time": list(self.start_time),
+            "finish_time": list(self.finish_time),
+            "buffer": [[int(j), int(s)] for j, s in self.buffer],
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any]) -> "BufferState":
+        """Inverse of :meth:`state_dict`."""
+        return cls(
+            version=int(state["version"]),
+            clock=float(state["clock"]),
+            last_flush=float(state["last_flush"]),
+            task_idx=[int(x) for x in state["task_idx"]],
+            start_version=[int(x) for x in state["start_version"]],
+            start_time=[float(x) for x in state["start_time"]],
+            finish_time=[float(x) for x in state["finish_time"]],
+            buffer=[(int(j), int(s)) for j, s in state["buffer"]],
+        )
+
+
+def simulate_flush(
+    state: BufferState, cfg: AsyncConfig, seed: int, num_silos: int
+) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Advance the event loop to the next flush; mutates ``state``.
+
+    Pops arrivals in (finish_time, silo id) order — the id tie-break is
+    what pins the schedule down under constant latency — buffering each
+    with its staleness (server versions elapsed since that silo's pull,
+    recorded AT BUFFERING TIME: a contribution that arrives before the
+    server has moved is staleness 0, FedBuff's convention) and
+    immediately restarting the silo on a fresh task pulled at the
+    current server version. When ``buffer_size`` contributions are
+    waiting, returns their per-silo counts (a fast silo can land twice
+    in one buffer; duplicate entries keep the latest staleness), the
+    staleness vector and the simulated flush time, bumps the version
+    and clears the buffer.
+
+    Tie resolution at the flush instant: a silo whose re-pull coincides
+    with the flush (its arrival completed the buffer, or it arrived at
+    the exact same simulated time) downloads the POST-flush model —
+    uploads are processed before downloads are served. This is what
+    makes the ``buffer_size == J`` constant-latency schedule exactly
+    synchronous: every silo re-pulls the just-flushed version, so the
+    next flush is staleness 0 again.
+    """
+    J = num_silos
+    restarted = set()
+    while len(state.buffer) < cfg.buffer_size:
+        j = min(range(J), key=lambda i: (state.finish_time[i], i))
+        state.clock = state.finish_time[j]
+        state.buffer.append((j, state.version - state.start_version[j]))
+        state.task_idx[j] += 1
+        state.start_version[j] = state.version
+        state.start_time[j] = state.clock
+        state.finish_time[j] = state.clock + latency_draw(
+            cfg, seed, j, state.task_idx[j]
+        )
+        restarted.add(j)
+    counts = np.zeros((J,), np.float32)
+    staleness = np.zeros((J,), np.float32)
+    for j, s in state.buffer:
+        counts[j] += 1.0
+        staleness[j] = float(s)
+    flush_time = state.clock
+    state.version += 1
+    state.buffer = []
+    for j in restarted:
+        # Pulls at the flush instant see the post-flush model. Only
+        # THIS drain's restarts qualify — a silo that re-pulled at an
+        # EARLIER flush sharing the same simulated timestamp (common
+        # under constant latency) keeps its recorded pull version, or
+        # its staleness would be silently under-counted.
+        if state.start_time[j] == flush_time:
+            state.start_version[j] = state.version
+    return counts, staleness, flush_time
+
+
+def flush_weights(
+    counts: np.ndarray, staleness: np.ndarray, decay: float
+) -> np.ndarray:
+    """Aggregation weights: ``count · (1 + staleness)^-decay`` per silo.
+
+    Zero staleness gives weight exactly ``count`` (``x**-0.0 == 1.0`` in
+    IEEE arithmetic), which is what makes the ``buffer_size == J``
+    constant-latency flush bit-identical to a synchronous full round.
+    """
+    return (counts * (1.0 + staleness) ** (-decay)).astype(np.float32)
+
+
+def run_buffered(
+    server,
+    num_flushes: int,
+    cfg: AsyncConfig,
+    *,
+    local_steps: int = 1,
+    start_flush: int = 0,
+    state: Optional[BufferState] = None,
+    callback: Optional[Callable[[int, dict], None]] = None,
+) -> Tuple[Dict[str, list], BufferState]:
+    """Drive a :class:`~repro.federated.runtime.Server` asynchronously.
+
+    The async counterpart of ``Server.run``: each flush executes the
+    compiled SFVI-Avg round graph with the flush's participation mask
+    (which silos ran local steps and may update their η_{L_j}) and its
+    staleness-decayed aggregation weights. ``start_flush`` is the
+    absolute flush index — the round-key stream is the same
+    ``fold_in(seed, absolute index)`` stream the synchronous path uses,
+    so checkpoint/resume replays bit-exactly given the saved
+    :class:`BufferState`.
+
+    Billing: uploads are the buffered contributions (``counts`` per
+    flush); each buffered arrival immediately triggers a fresh broadcast
+    pull, so downloads are billed at the same multiplicity. The meter
+    additionally accumulates the simulated wall-clock between flushes
+    (``CommMeter.sim_seconds``); ``history["sim_time"]`` carries the
+    absolute flush times.
+
+    With DP, every flush is one (subsampled) Gaussian-mechanism gather;
+    the accountant composes them at the Poisson surrogate rate
+    ``q = buffer_size / J`` (same surrogate the synchronous path uses
+    for its fixed-size invitations — docs/privacy.md).
+
+    Returns ``(history, state)`` — pass ``state`` back in to continue.
+    """
+    if local_steps < 1:
+        raise ValueError(f"local_steps must be >= 1, got {local_steps}")
+    J = server.J
+    if not 1 <= cfg.buffer_size <= J:
+        raise ValueError(
+            f"buffer_size must be in [1, J={J}], got {cfg.buffer_size}")
+    fn = server._get_round("sfvi_avg", local_steps)
+    if state is None:
+        state = BufferState.init(J, cfg, server.seed)
+    up1 = server.bytes_up_per_silo("sfvi_avg")
+    down1 = server.bytes_down_per_silo()
+    history: Dict[str, list] = {
+        "elbo": [], "elbo_trace": [], "bytes_up": [], "bytes_down": [],
+        "n_active": [], "staleness": [], "sim_time": [],
+    }
+    if server.accountant is not None:
+        history["epsilon"] = []
+        q = cfg.buffer_size / J
+    base_key = jax.random.PRNGKey(server.seed)
+    for f in range(start_flush, start_flush + num_flushes):
+        counts, staleness, t_flush = simulate_flush(state, cfg, server.seed, J)
+        mask = (counts > 0.0).astype(np.float32)
+        weights = flush_weights(counts, staleness, cfg.staleness_decay)
+        round_key = jax.random.fold_in(base_key, f)
+        server.state, metrics = fn(
+            server.state,
+            server.data,
+            round_key,
+            server._pad_mask(jnp.asarray(mask)),
+            server._pad_mask(jnp.asarray(weights)),
+        )
+        elbos = np.asarray(metrics["elbo"])
+        n_contrib = int(counts.sum())
+        n_active = int((counts > 0).sum())
+        up, down = n_contrib * up1, n_contrib * down1
+        sim_dt = t_flush - state.last_flush
+        state.last_flush = t_flush
+        server.comm.record(up, down, sim_seconds=sim_dt)
+        stale_max = float(staleness.max(initial=0.0, where=counts > 0))
+        history["elbo"].append(float(elbos[-1]))
+        history["elbo_trace"].extend(float(e) for e in elbos)
+        history["bytes_up"].append(up)
+        history["bytes_down"].append(down)
+        history["n_active"].append(n_active)
+        history["staleness"].append(stale_max)
+        history["sim_time"].append(t_flush)
+        metrics_out = {
+            "elbo": history["elbo"][-1], "bytes_up": up, "bytes_down": down,
+            "n_active": n_active, "staleness": stale_max, "sim_time": t_flush,
+        }
+        if server.accountant is not None:
+            server.accountant.step(
+                noise_multiplier=server.privacy.noise_multiplier,
+                sampling_rate=q,
+                steps=1,
+            )
+            eps = server.accountant.epsilon(server.privacy.delta)[0]
+            history["epsilon"].append(eps)
+            metrics_out["epsilon"] = eps
+        if callback:
+            callback(f, metrics_out)
+    return history, state

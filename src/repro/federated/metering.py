@@ -29,17 +29,24 @@ def tree_bytes(tree: PyTree) -> int:
 
 @dataclasses.dataclass
 class CommMeter:
-    """Algorithm-level bytes-on-wire accounting (host side, per round)."""
+    """Algorithm-level bytes-on-wire accounting (host side, per round).
+
+    ``sim_seconds`` accumulates the *simulated* wall-clock of the async
+    engine's deterministic latency model (zero on synchronous runs) —
+    the quantity buffered-asynchronous execution trades bytes against.
+    """
 
     rounds: int = 0
     bytes_up: int = 0  # silo -> server (post-compression)
     bytes_down: int = 0  # server -> silo broadcast
+    sim_seconds: float = 0.0  # simulated wall-clock (async latency model)
 
-    def record(self, up: int, down: int) -> None:
-        """Log one round's realized (up, down) bytes."""
+    def record(self, up: int, down: int, sim_seconds: float = 0.0) -> None:
+        """Log one round's realized (up, down) bytes [+ simulated time]."""
         self.rounds += 1
         self.bytes_up += int(up)
         self.bytes_down += int(down)
+        self.sim_seconds += float(sim_seconds)
 
     @property
     def total(self) -> int:
@@ -49,13 +56,16 @@ class CommMeter:
     def per_round(self) -> float:
         return self.total / max(self.rounds, 1)
 
-    def state_dict(self) -> Dict[str, int]:
+    def state_dict(self) -> Dict[str, Any]:
         """Serializable counters (checkpointed by ``federated.api``)."""
         return {"rounds": self.rounds, "bytes_up": self.bytes_up,
-                "bytes_down": self.bytes_down}
+                "bytes_down": self.bytes_down,
+                "sim_seconds": self.sim_seconds}
 
-    def load_state(self, state: Dict[str, int]) -> None:
+    def load_state(self, state: Dict[str, Any]) -> None:
         """Restore counters saved by :meth:`state_dict`."""
         self.rounds = int(state["rounds"])
         self.bytes_up = int(state["bytes_up"])
         self.bytes_down = int(state["bytes_down"])
+        # Pre-async checkpoints lack the key; they are sync runs (0.0).
+        self.sim_seconds = float(state.get("sim_seconds", 0.0))

@@ -20,6 +20,10 @@ aggregation, int8 wire compression and differential privacy:
     ... --participation 0.5 --dropout 0.1 --aggregator trimmed --compress int8
     ... --dp-noise 1.0 --dp-clip 0.5 --dp-delta 1e-5   # DP round + (ε, δ)
 
+Buffered-asynchronous execution (FedBuff-style, docs/federated.md):
+
+    ... --async --buffer-size 2 --staleness-decay 0.5 --latency lognormal
+
 ``--sweep`` ignores the single-scenario knobs and walks the full
 scenario matrix (participation × stragglers × compression × DP from
 ``scenario_matrix``) in one invocation, printing an ELBO/ε/bytes table:
@@ -64,6 +68,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compress", default="none", choices=["none", "int8"])
     ap.add_argument("--eta-mode", default="barycenter",
                     choices=["barycenter", "param"])
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="buffered-asynchronous execution (FedBuff-style "
+                         "flushes; sfvi_avg only — see docs/federated.md)")
+    ap.add_argument("--buffer-size", type=int, default=2,
+                    help="with --async: contributions per server flush")
+    ap.add_argument("--staleness-decay", type=float, default=0.5,
+                    help="with --async: weight (1+staleness)^-decay")
+    ap.add_argument("--latency", default="lognormal",
+                    choices=["constant", "lognormal", "straggler"],
+                    help="with --async: deterministic per-silo latency model")
+    ap.add_argument("--latency-scale", type=float, default=1.0,
+                    help="with --async: median simulated seconds per task")
+    ap.add_argument("--latency-sigma", type=float, default=0.5,
+                    help="with --async: lognormal latency spread")
     ap.add_argument("--dp-noise", type=float, default=0.0,
                     help="Gaussian noise multiplier z (0 = DP off)")
     ap.add_argument("--dp-clip", type=float, default=1.0,
@@ -101,11 +119,27 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _async_cfg_from_args(args):
+    """The --async flags as an AsyncConfig, or None without --async."""
+    if not args.async_mode:
+        return None
+    from repro.federated.scheduler import AsyncConfig
+
+    return AsyncConfig(
+        buffer_size=args.buffer_size,
+        staleness_decay=args.staleness_decay,
+        latency=args.latency,
+        latency_scale=args.latency_scale,
+        latency_sigma=args.latency_sigma,
+    )
+
+
 def _spec_from_args(args, algorithm: str):
     """The thin spec-builder: CLI flags -> declarative ExperimentSpec."""
     from repro.federated.api import ExperimentSpec, ModelSpec, OptimizerSpec
     from repro.federated.scheduler import Scenario
 
+    async_cfg = _async_cfg_from_args(args)
     scenario = Scenario(
         algorithm=algorithm,
         participation=args.participation,
@@ -116,6 +150,7 @@ def _spec_from_args(args, algorithm: str):
         dp_delta=args.dp_delta,
         aggregator=args.aggregator,
         trim_frac=args.trim_frac,
+        async_cfg=async_cfg,
     )
     return ExperimentSpec(
         model=ModelSpec(args.model, kwargs=json.loads(args.model_kwargs or "{}")),
@@ -133,9 +168,12 @@ def _spec_from_args(args, algorithm: str):
 def _log_round(total_silos: int):
     def log(r, m):
         eps = f"  eps={m['epsilon']:7.3f}" if "epsilon" in m else ""
+        # Async flushes additionally report simulated time + staleness.
+        sim = (f"  t={m['sim_time']:8.2f}s  stale<={m['staleness']:.0f}"
+               if "sim_time" in m else "")
         print(f"  round {r:3d}  elbo={m['elbo']:14.2f}  "
               f"up={m['bytes_up']:>9d}B  down={m['bytes_down']:>9d}B  "
-              f"active={m['n_active']}/{total_silos}{eps}")
+              f"active={m['n_active']}/{total_silos}{sim}{eps}")
     return log
 
 
@@ -143,6 +181,9 @@ def _report(exp, hlo_bytes: bool) -> None:
     srv, spec = exp.server, exp.spec
     print(f"  total: {srv.comm.total:,} B in {srv.comm.rounds} rounds "
           f"({srv.comm.per_round:,.0f} B/round)")
+    if srv.comm.sim_seconds:
+        print(f"  simulated wall-clock: {srv.comm.sim_seconds:,.1f}s "
+              f"({srv.comm.sim_seconds / max(srv.comm.rounds, 1):.2f}s/flush)")
     if exp.accountant is not None:
         policy = spec.scenario.privacy()
         eps, order = exp.accountant.epsilon(policy.delta)
@@ -167,6 +208,7 @@ def _run_one(spec, bundle, hlo_bytes: bool = False, ckpt_dir=None,
     sc = spec.scenario
     print(f"\n== {name}: {spec.model.name}, J={spec.num_silos}, "
           f"{spec.rounds} rounds x {spec.local_steps} local steps"
+          + (f", {sc.async_cfg.name}" if sc.async_cfg is not None else "")
           + (f", DP(z={sc.dp_noise:g}, C={sc.dp_clip:g})" if sc.dp_noise > 0 else "")
           + " ==")
     t0 = time.time()
@@ -196,6 +238,9 @@ def _run_sweep(args, base_spec, bundle) -> int:
     def floats(s):
         return tuple(float(x) for x in s.split(","))
 
+    # --async adds an async axis to the sweep (sync rows kept for
+    # comparison; the matrix drops invalid async combinations itself).
+    async_cfg = _async_cfg_from_args(args)
     grid = scenario_matrix(
         algorithms=(["sfvi", "sfvi_avg"] if args.algo == "both"
                     else [args.algo]),
@@ -205,6 +250,7 @@ def _run_sweep(args, base_spec, bundle) -> int:
         dp_noise=floats(args.sweep_dp_noise),
         dp_clip=args.dp_clip,
         dp_delta=args.dp_delta,
+        async_cfgs=((None,) if async_cfg is None else (None, async_cfg)),
     )
     specs = scenario_specs(base_spec, grid)
     print(f"\n== scenario sweep: {base_spec.model.name}, J={base_spec.num_silos}, "
@@ -282,7 +328,14 @@ def main(argv=None) -> int:
     if args.spec:
         specs = [ExperimentSpec.load(args.spec)]
     else:
-        algos = ["sfvi", "sfvi_avg"] if args.algo == "both" else [args.algo]
+        if args.async_mode:
+            # Buffered-async execution is defined for SFVI-Avg only
+            # (SFVI has no round-granular contribution to buffer).
+            algos = ["sfvi_avg"]
+        elif args.algo == "both":
+            algos = ["sfvi", "sfvi_avg"]
+        else:
+            algos = [args.algo]
         specs = [_spec_from_args(args, a) for a in algos]
     if args.dump_spec:
         if len(specs) != 1:

@@ -192,12 +192,22 @@ class Server:
     ):
         self.problem = problem
         self.J = len(datas)
-        self.data = stack_silos(datas)
         self.aggregator = aggregator or MeanAggregator()
         self.compressor = compressor or NoCompression()
         self.privacy = privacy
         self.accountant = RdpAccountant() if privacy is not None else None
         self.mesh = mesh if mesh is not None else make_silo_mesh(self.J)
+        # The stacked silo axis is padded up to a multiple of the mesh
+        # size with dummy silos (copies of silo 0's data, permanently
+        # masked out), so ANY J shards over every device — a prime J on
+        # a 4-device mesh no longer collapses the federation onto one
+        # device. All masks/weights entering the compiled round carry
+        # zeros for the padded tail; the J-rescales below always use the
+        # real J. On divisible meshes J_pad == J and nothing changes.
+        n_dev = int(self.mesh.shape["silo"])
+        self.J_pad = ((self.J + n_dev - 1) // n_dev) * n_dev
+        datas = list(datas)
+        self.data = stack_silos(datas + [datas[0]] * (self.J_pad - self.J))
         self.seed = seed
         self._server_opt = server_opt
         self._local_opt = local_opt
@@ -215,15 +225,22 @@ class Server:
 
         if num_obs is None:
             num_obs = [
-                int(jax.tree_util.tree_leaves(d)[0].shape[0]) for d in datas
+                int(jax.tree_util.tree_leaves(d)[0].shape[0])
+                for d in datas[: self.J]
             ]
+        num_obs = list(num_obs) + [num_obs[0]] * (self.J_pad - self.J)
         self.num_obs = np.asarray(num_obs, np.float32)
 
         if self._has_local:
             if local_opt is None:
                 raise ValueError("local_opt is required when the model has Z_L")
+            # Real silos draw the same keys regardless of padding (the
+            # split width is J, not J_pad) so trajectories agree across
+            # device counts; the padded rows reuse silo 0's init and are
+            # frozen by their permanent zero mask.
             keys = jax.random.split(jax.random.PRNGKey(seed + 1), self.J)
             eta_L = jax.vmap(problem.local_family.init)(keys)
+            eta_L = self.pad_silo_axis(eta_L)
             opt_L = jax.vmap(local_opt.init)(eta_L)
         else:
             eta_L, opt_L = {}, {}
@@ -251,8 +268,39 @@ class Server:
 
     @property
     def eta_L(self) -> PyTree:
-        """Stacked per-silo variational parameters η_{L_j}, leading axis J."""
+        """Stacked per-silo variational parameters η_{L_j}.
+
+        Leading axis is ``J_pad`` (= J rounded up to the mesh size);
+        rows ``J:`` are permanently-masked padding — slice ``[:J]`` for
+        the real federation.
+        """
         return self.state["eta_L"]
+
+    # -- silo-axis padding ---------------------------------------------------
+
+    def pad_silo_axis(self, tree: PyTree) -> PyTree:
+        """Pad a J-leading stacked tree to ``J_pad`` rows (tile row 0).
+
+        Padded rows never influence the run: every mask/weight vector
+        carries zeros for them, so their state stays frozen and their
+        uploads are masked out of the aggregation.
+        """
+        pad = self.J_pad - self.J
+        if pad == 0:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda x: jnp.concatenate(
+                [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])], axis=0
+            ),
+            tree,
+        )
+
+    def _pad_mask(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """Extend a (J,) mask/weight vector with zeros for padded silos."""
+        pad = self.J_pad - self.J
+        if pad == 0:
+            return mask
+        return jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
 
     # -- wire accounting -----------------------------------------------------
 
@@ -286,13 +334,15 @@ class Server:
         from repro.launch.roofline import collective_bytes
 
         fn = self._get_round(algorithm, local_steps)
-        mask_shape = ((local_steps, self.J) if algorithm == "sfvi"
-                      else (self.J,))
+        mask_shape = ((local_steps, self.J_pad) if algorithm == "sfvi"
+                      else (self.J_pad,))
+        ones = jnp.ones(mask_shape, jnp.float32)
         args = (
             self.state,
             self.data,
             jax.random.PRNGKey(0),
-            jnp.ones(mask_shape, jnp.float32),
+            ones,
+            ones,
         )
         return collective_bytes(fn.lower(*args).compile().as_text())
 
@@ -318,19 +368,21 @@ class Server:
                     # slices its silos' entries via sids. Passing it a
                     # second time with P("silo") made GSPMD reshard it with
                     # an extra 4-byte all-gather in the compiled round.
-                    P(), P(),  # full mask, round key
+                    # ``weights`` are the aggregation weights (== mask on
+                    # the sync path; staleness-decayed on the async path).
+                    P(), P(), P(),  # full mask, full weights, round key
                 ),
                 out_specs=(P(), P(), P(), P("silo"), P("silo"), P()),
                 check_rep=False,
             )
 
-            def round_fn(state, data, round_key, mask):
-                sids = jnp.arange(self.J, dtype=jnp.int32)
+            def round_fn(state, data, round_key, mask, weights):
+                sids = jnp.arange(self.J_pad, dtype=jnp.int32)
                 n_j = jnp.asarray(self.num_obs)
                 theta, eta_G, opt_server, eta_L, opt_L, elbos = sharded(
                     state["theta"], state["eta_G"], state["opt_server"],
                     state["eta_L"], state["opt_local"],
-                    data, sids, n_j, mask, round_key,
+                    data, sids, n_j, mask, weights, round_key,
                 )
                 new_state = {
                     "theta": theta, "eta_G": eta_G, "eta_L": eta_L,
@@ -350,16 +402,18 @@ class Server:
         privacy = self.privacy
 
         def body(theta, eta_G, opt_server, eta_L, opt_L,
-                 data_sh, sids, n_j, masks_full, round_key):
+                 data_sh, sids, n_j, masks_full, weights_full, round_key):
             # masks_full: (K, J) — SFVI samples participation PER EXCHANGE
             # (it synchronizes every step, so each gather is its own
             # subsampling event; this is what makes the accountant's
             # per-exchange amplification sound — one shared mask across
             # the K gathers would expose K correlated outputs per draw).
+            # weights_full: (K, J) aggregation weights — identical to
+            # masks_full on the sync path.
             del n_j  # SFVI needs no N/N_j rescale (likelihood_scale = 1)
 
             def sync_step(carry, step_xs):
-                t, mask_full = step_xs
+                t, mask_full, w_full = step_xs
                 mask_sh = mask_full[sids]  # this block's silos
                 n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
                 theta, eta_G, opt_server, eta_L, opt_L = carry
@@ -402,7 +456,7 @@ class Server:
                 shipped = jax.vmap(comp.decode)(enc)  # (J, ...) per leaf
                 hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
 
-                mean_g = agg.combine(shipped, mask_full)
+                mean_g = agg.combine(shipped, w_full)
                 g_sum = jax.tree_util.tree_map(lambda x: x * float(J), mean_g)
                 g_th0, g_eta0, hatL0 = problem.server_grads(theta, eta_G, eps_G)
                 g = {
@@ -418,7 +472,7 @@ class Server:
 
             carry = (theta, eta_G, opt_server, eta_L, opt_L)
             carry, elbos = jax.lax.scan(
-                sync_step, carry, (jnp.arange(K), masks_full)
+                sync_step, carry, (jnp.arange(K), masks_full, weights_full)
             )
             return (*carry, elbos)
 
@@ -432,10 +486,13 @@ class Server:
         has_local = self._has_local
         eta_mode = self.eta_mode
         privacy = self.privacy
-        total_obs = float(np.sum(self.num_obs))
+        # N = Σ_j N_j over the REAL federation — the padded tail repeats
+        # silo 0's count purely to keep the dummy silos' per-silo scale
+        # finite (their contribution is masked out regardless).
+        total_obs = float(np.sum(self.num_obs[: self.J]))
 
         def body(theta, eta_G, opt_server, eta_L, opt_L,
-                 data_sh, sids, n_j, mask_full, round_key):
+                 data_sh, sids, n_j, mask_full, w_full, round_key):
             mask_sh = mask_full[sids]  # this block's silos
             n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
 
@@ -508,16 +565,16 @@ class Server:
             shipped = jax.vmap(comp.decode)(enc)
             elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
 
-            theta_new = agg.combine(shipped["theta"], mask_full)
+            theta_new = agg.combine(shipped["theta"], w_full)
             if eta_mode == "param":
-                eta_new = agg.combine(shipped["eta_G"], mask_full)
+                eta_new = agg.combine(shipped["eta_G"], w_full)
             else:
                 # Analytic diag-Gaussian W2 barycenter in moment space:
                 # mean of μ_j, mean of σ_j (core.barycenter.diag_barycenter)
                 # — robustified by whatever aggregator is plugged in.
-                mu = agg.combine(shipped["eta_G"]["mu"], mask_full)
+                mu = agg.combine(shipped["eta_G"]["mu"], w_full)
                 sigma = agg.combine(
-                    jnp.exp(shipped["eta_G"]["log_sigma"]), mask_full
+                    jnp.exp(shipped["eta_G"]["log_sigma"]), w_full
                 )
                 eta_new = {"mu": mu, "log_sigma": jnp.log(sigma)}
             return theta_new, eta_new, opt_server, eta_L, opt_L, elbo_t
@@ -600,10 +657,14 @@ class Server:
                     else ex_masks[k]))), active[k])
                 for k, i in enumerate(ex_idx)
             ]
+            ex_masks = [self._pad_mask(m) for m in ex_masks]
             mask = (jnp.stack(ex_masks) if algorithm == "sfvi"
                     else ex_masks[0])
             round_key = jax.random.fold_in(base_key, r)
-            self.state, metrics = fn(self.state, self.data, round_key, mask)
+            # Sync rounds aggregate with the participation mask itself;
+            # the async engine passes staleness-decayed weights instead.
+            self.state, metrics = fn(self.state, self.data, round_key,
+                                     mask, mask)
             elbos = np.asarray(metrics["elbo"])
             up = sum(active) * up1
             down = sum(invited) * down1

@@ -100,7 +100,59 @@ def _first_invited(mask: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Scenario matrix: participation × stragglers × compression × DP
+# Asynchronous execution block (consumed by repro.federated.async_engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Declarative knobs of the buffered-asynchronous execution mode.
+
+    All fields are JSON-native so the block round-trips inside
+    :class:`Scenario` / ``ExperimentSpec``. The semantics (FedBuff-style
+    buffer, staleness-decayed weights, deterministic latency models) are
+    implemented by :mod:`repro.federated.async_engine`.
+
+    Attributes:
+      buffer_size: B — the server applies one aggregate ("flush") as
+        soon as B silo contributions have arrived (1 ≤ B ≤ J;
+        ``B == J`` with constant latency reproduces the synchronous
+        SFVI-Avg trajectory bit-exactly).
+      staleness_decay: exponent d of the weight ``(1 + s)^-d`` applied
+        to a contribution that is ``s`` server versions behind
+        (0 disables staleness weighting).
+      latency: per-task silo latency model — ``"constant"`` (every task
+        takes ``latency_scale``), ``"lognormal"`` (median
+        ``latency_scale``, log-sd ``latency_sigma``), or
+        ``"straggler"`` (constant, but a ``straggler_frac`` fraction of
+        tasks run ``straggler_slowdown``× slower — the heavy-tail
+        regime). Every draw is a pure function of
+        (seed, silo, task index), so schedules replay bit-exactly.
+      latency_scale: median simulated seconds per silo task.
+      latency_sigma: log-normal spread (``"lognormal"`` only).
+      straggler_frac: probability a task straggles (``"straggler"``).
+      straggler_slowdown: multiplier for straggling tasks.
+    """
+
+    buffer_size: int = 2
+    staleness_decay: float = 0.5
+    latency: str = "lognormal"
+    latency_scale: float = 1.0
+    latency_sigma: float = 0.5
+    straggler_frac: float = 0.1
+    straggler_slowdown: float = 10.0
+
+    @property
+    def name(self) -> str:
+        """Compact label fragment for scenario tables."""
+        bits = [f"B={self.buffer_size}", self.latency]
+        if self.staleness_decay:
+            bits.append(f"d={self.staleness_decay:g}")
+        return f"async({','.join(bits)})"
+
+
+# ---------------------------------------------------------------------------
+# Scenario matrix: participation × stragglers × compression × DP [× async]
 # ---------------------------------------------------------------------------
 
 
@@ -126,6 +178,11 @@ class Scenario:
         cost of clipping; ε stays ∞).
       aggregator: ``"mean"`` or ``"trimmed"`` server combine rule.
       trim_frac: trim fraction for the ``"trimmed"`` aggregator.
+      async_cfg: buffered-asynchronous execution block
+        (:class:`AsyncConfig`), or None for synchronous rounds. Async
+        scenarios require ``algorithm="sfvi_avg"`` with full
+        participation and no dropout — the latency model owns the
+        arrival dynamics (:meth:`validate`).
     """
 
     algorithm: str = "sfvi_avg"
@@ -138,11 +195,14 @@ class Scenario:
     dp_clip_only: bool = False
     aggregator: str = "mean"
     trim_frac: float = 0.1
+    async_cfg: Optional[AsyncConfig] = None
 
     @property
     def name(self) -> str:
         """Compact human-readable label for tables and logs."""
         bits = ["SFVI" if self.algorithm == "sfvi" else "SFVI-Avg"]
+        if self.async_cfg is not None:
+            bits.append(self.async_cfg.name)
         if self.participation < 1.0:
             bits.append(f"part={self.participation:g}")
         if self.dropout > 0.0:
@@ -156,6 +216,47 @@ class Scenario:
         if self.aggregator != "mean":
             bits.append(f"{self.aggregator}({self.trim_frac:g})")
         return " ".join(bits)
+
+    def validate(self, num_silos: Optional[int] = None) -> "Scenario":
+        """Reject physically-meaningless knob combinations (returns self).
+
+        Async mode composes with compression, aggregation and DP, but
+        not with the synchronous scheduler's participation/straggler
+        knobs (the latency model subsumes them) and only under SFVI-Avg
+        (SFVI synchronizes every local step — there is no round-granular
+        contribution to buffer).
+        """
+        if self.async_cfg is None:
+            return self
+        if self.algorithm != "sfvi_avg":
+            raise ValueError(
+                "async execution requires algorithm='sfvi_avg'; SFVI "
+                "synchronizes every local step and has no round-granular "
+                "contribution to buffer")
+        if self.participation < 1.0 or self.dropout > 0.0:
+            raise ValueError(
+                "async scenarios model arrival dynamics with the latency "
+                "model; set participation=1.0 and dropout=0.0 (got "
+                f"participation={self.participation}, dropout={self.dropout})")
+        if self.async_cfg.buffer_size < 1:
+            raise ValueError("async buffer_size must be >= 1")
+        if num_silos is not None and self.async_cfg.buffer_size > num_silos:
+            raise ValueError(
+                f"async buffer_size={self.async_cfg.buffer_size} exceeds "
+                f"the federation width J={num_silos}")
+        if self.async_cfg.latency not in ("constant", "lognormal", "straggler"):
+            raise ValueError(
+                f"unknown latency model {self.async_cfg.latency!r} "
+                "(constant/lognormal/straggler)")
+        return self
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        """Inverse of ``dataclasses.asdict`` (rebuilds the async block)."""
+        d = dict(d)
+        if d.get("async_cfg") is not None:
+            d["async_cfg"] = AsyncConfig(**d["async_cfg"])
+        return cls(**d)
 
     def scheduler(self, num_silos: int, seed: int = 0) -> RoundScheduler:
         """The participation/straggler schedule for this scenario."""
@@ -200,20 +301,28 @@ def scenario_matrix(
     dp_noise: Sequence[float] = (0.0, 1.0),
     dp_clip: float = 1.0,
     dp_delta: float = 1e-5,
+    async_cfgs: Sequence[Optional[AsyncConfig]] = (None,),
 ) -> list:
-    """Cross participation × stragglers × compression × DP into Scenarios.
+    """Cross participation × stragglers × compression × DP × async.
 
-    The full cartesian product, minus physically-meaningless rows
-    (dropout without partial participation is kept — stragglers exist
-    under full invitation too). One invocation of
-    ``python -m repro.federated.run --sweep`` walks the returned list.
+    The full cartesian product, minus physically-meaningless rows:
+    dropout without partial participation is kept (stragglers exist
+    under full invitation too), but async rows are emitted only for
+    SFVI-Avg under full participation (see :meth:`Scenario.validate`).
+    One invocation of ``python -m repro.federated.run --sweep`` walks
+    the returned list.
     """
     grid = []
-    for algo, part, drop, comp, z in itertools.product(
-        algorithms, participation, dropout, compression, dp_noise
+    for algo, part, drop, comp, z, acfg in itertools.product(
+        algorithms, participation, dropout, compression, dp_noise, async_cfgs
     ):
+        if acfg is not None and (
+            algo != "sfvi_avg" or part < 1.0 or drop > 0.0
+        ):
+            continue
         grid.append(Scenario(
             algorithm=algo, participation=part, dropout=drop,
             compression=comp, dp_noise=z, dp_clip=dp_clip, dp_delta=dp_delta,
+            async_cfg=acfg,
         ))
     return grid

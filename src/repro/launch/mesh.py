@@ -45,18 +45,19 @@ def use_mesh(mesh):
 def make_silo_mesh(num_silos: int, devices=None):
     """1-D mesh with a dedicated ``silo`` axis for the federated runtime.
 
-    The axis spans the largest divisor of ``num_silos`` that fits the
-    available device count, so J silos always shard evenly: each device
-    holds ``num_silos / mesh.shape['silo']`` stacked silos and the runtime
-    vmaps over that local stack inside its ``shard_map`` block. On the
-    single-device CPU container this degenerates to a 1-device mesh (all
-    silos stacked, collectives become local no-ops) — the compiled graph
-    is identical in structure to the multi-host lowering.
+    The axis spans ``min(num_silos, available devices)`` devices —
+    unconditionally, not the largest divisor of J. A divisor rule
+    collapses catastrophically for prime federations (J=7 on 4 devices
+    ran the whole federation on ONE device); instead the runtime pads
+    its stacked silo axis up to a multiple of the mesh size with masked
+    dummy silos (``Server`` handles the padding), so every device is
+    used for any J. On the single-device CPU container this degenerates
+    to a 1-device mesh (all silos stacked, collectives become local
+    no-ops) — the compiled graph is identical in structure to the
+    multi-host lowering.
     """
     devices = list(jax.devices() if devices is None else devices)
-    n = len(devices)
-    while num_silos % n:
-        n -= 1
+    n = max(min(len(devices), num_silos), 1)
     return jax.sharding.Mesh(devices[:n], ("silo",))
 
 

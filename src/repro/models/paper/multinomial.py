@@ -58,7 +58,13 @@ def build_multinomial(in_dim: int = 784, num_classes: int = 10) -> MultinomialRe
         g = spec.unpack(z_G)
         logits = data_j["x"] @ g["W"] + g["b"]
         logp = jax.nn.log_softmax(logits, axis=-1)
-        return jnp.sum(jnp.take_along_axis(logp, data_j["y"][:, None], axis=-1))
+        rows = jnp.take_along_axis(logp, data_j["y"][:, None], axis=-1)[:, 0]
+        if "w" in data_j:
+            # Ragged federations pad silo shards to a common size and
+            # mark real rows with w=1 (repro.data.pad_ragged_silos);
+            # weighting here makes padded rows contribute exactly 0.
+            rows = rows * data_j["w"]
+        return jnp.sum(rows)
 
     model = StructuredModel(
         global_dim=spec.dim,

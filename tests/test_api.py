@@ -111,6 +111,27 @@ class TestRegistry:
         assert bundle.num_obs == [5, 5, 5]
         assert "posterior_mu" in bundle.extras
 
+    def test_hetero_mn_stages_unequal_weighted_silos(self):
+        """The heterogeneity generator: Dirichlet label skew, TRUE
+        unequal N_j in num_obs, equal padded shapes + row weights."""
+        bundle = get_model("hetero_mn").build(
+            0, 5, n_total=120, in_dim=16, alpha=0.3)
+        assert len(set(bundle.num_obs)) > 1  # genuinely unequal N_j
+        assert sum(bundle.num_obs) == 120
+        shapes = {d["x"].shape for d in bundle.datas}
+        assert len(shapes) == 1  # padded to a common stackable shape
+        for d, n in zip(bundle.datas, bundle.num_obs):
+            w = np.asarray(d["w"])
+            assert w.sum() == n  # weights mark exactly the real rows
+        # Padded rows contribute nothing to the likelihood: doubling a
+        # padded row's features must not change log_local.
+        prob = bundle.problem
+        d0 = bundle.datas[int(np.argmin(bundle.num_obs))]
+        z = jnp.zeros((prob.model.global_dim,))
+        poked = dict(d0, x=d0["x"].at[-1].mul(2.0))
+        assert float(prob.model.log_local({}, z, None, d0)) == pytest.approx(
+            float(prob.model.log_local({}, z, None, poked)))
+
 
 class TestCLI:
     def test_list_models_exits_zero(self, capsys):

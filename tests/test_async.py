@@ -1,0 +1,339 @@
+"""Tests for the buffered-asynchronous engine (repro.federated.async_engine)
+and the padded silo mesh (prime-J fix).
+
+Acceptance anchors:
+  * ``buffer_size == J`` with constant latency reproduces the synchronous
+    SFVI-Avg trajectory BIT-EXACTLY (same round-key stream, unit weights);
+  * an async + DP + int8 spec round-trips through save -> resume
+    bit-exactly, buffer state included;
+  * a prime federation (J=7) on a forced 4-device host mesh uses all 4
+    devices and matches the single-device trajectory (subprocess — JAX's
+    device count is locked at first init in this process).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.federated import (
+    AsyncConfig,
+    BufferState,
+    Experiment,
+    ExperimentSpec,
+    ModelSpec,
+    OptimizerSpec,
+    Scenario,
+    build,
+    scenario_matrix,
+)
+from repro.federated.async_engine import (
+    flush_weights,
+    latency_draw,
+    simulate_flush,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _spec(sc: Scenario, *, silos=3, rounds=4, seed=3) -> ExperimentSpec:
+    return ExperimentSpec(
+        model=ModelSpec("toy", {"num_obs": 6}), scenario=sc,
+        num_silos=silos, rounds=rounds, local_steps=2,
+        server_opt=OptimizerSpec("adam", 2e-2), seed=seed,
+    )
+
+
+def _assert_trees_bit_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Latency model + event loop
+# ---------------------------------------------------------------------------
+
+
+class TestLatencyModel:
+    def test_draws_are_deterministic(self):
+        cfg = AsyncConfig(latency="lognormal", latency_scale=2.0)
+        for j, t in [(0, 0), (3, 17), (1, 5)]:
+            assert latency_draw(cfg, 7, j, t) == latency_draw(cfg, 7, j, t)
+
+    def test_draws_vary_per_silo_and_task(self):
+        cfg = AsyncConfig(latency="lognormal")
+        draws = {latency_draw(cfg, 0, j, t) for j in range(4) for t in range(4)}
+        assert len(draws) == 16
+
+    def test_constant_is_constant(self):
+        cfg = AsyncConfig(latency="constant", latency_scale=1.5)
+        assert {latency_draw(cfg, 0, j, t) for j in range(3)
+                for t in range(3)} == {1.5}
+
+    def test_straggler_tail(self):
+        cfg = AsyncConfig(latency="straggler", latency_scale=1.0,
+                          straggler_frac=0.3, straggler_slowdown=10.0)
+        draws = [latency_draw(cfg, 0, j, t) for j in range(20) for t in range(20)]
+        assert set(draws) == {1.0, 10.0}
+        frac = sum(d == 10.0 for d in draws) / len(draws)
+        assert 0.15 < frac < 0.45  # ~straggler_frac
+
+    def test_unknown_model_raises(self):
+        cfg = AsyncConfig(latency="uniform")
+        with pytest.raises(ValueError, match="latency model"):
+            latency_draw(cfg, 0, 0, 0)
+
+
+class TestEventLoop:
+    def test_constant_full_buffer_is_synchronous_schedule(self):
+        cfg = AsyncConfig(buffer_size=4, latency="constant", latency_scale=1.0)
+        st = BufferState.init(4, cfg, seed=0)
+        for f in range(3):
+            counts, stale, t = simulate_flush(st, cfg, 0, 4)
+            np.testing.assert_array_equal(counts, np.ones(4))
+            np.testing.assert_array_equal(stale, np.zeros(4))
+            assert t == pytest.approx(float(f + 1))
+
+    def test_same_timestamp_flushes_keep_symmetric_staleness(self):
+        """Two flushes sharing one simulated timestamp (J=4, B=2,
+        constant latency) must not cross-contaminate pull versions:
+        the flush-instant re-pull bump applies only to the silos that
+        restarted in THAT drain, so the steady state is staleness == 1
+        for every contributor, alternating {0,1} / {2,3} — not a
+        spurious 0 for whichever pair restarted at the shared time."""
+        cfg = AsyncConfig(buffer_size=2, latency="constant",
+                          latency_scale=1.0)
+        st = BufferState.init(4, cfg, seed=0)
+        flushes = [simulate_flush(st, cfg, 0, 4) for _ in range(8)]
+        np.testing.assert_array_equal(flushes[0][0], [1, 1, 0, 0])
+        np.testing.assert_array_equal(flushes[0][1], [0, 0, 0, 0])
+        np.testing.assert_array_equal(flushes[1][0], [0, 0, 1, 1])
+        np.testing.assert_array_equal(flushes[1][1], [0, 0, 1, 1])
+        for counts, stale, _ in flushes[2:]:
+            np.testing.assert_array_equal(stale[counts > 0], [1.0, 1.0])
+
+    def test_staleness_grows_for_slow_silo(self):
+        # Silo 1 is ~10x slower than silo 0 under the straggler model:
+        # force it by a lognormal with a huge spread and checking that
+        # SOME flush carries staleness > 0.
+        cfg = AsyncConfig(buffer_size=1, latency="lognormal",
+                          latency_sigma=1.5)
+        st = BufferState.init(3, cfg, seed=1)
+        max_stale = 0.0
+        for _ in range(12):
+            counts, stale, _ = simulate_flush(st, cfg, 1, 3)
+            max_stale = max(max_stale, float(stale.max(where=counts > 0,
+                                                       initial=0.0)))
+        assert max_stale > 0.0
+
+    def test_buffer_state_json_round_trip(self):
+        cfg = AsyncConfig(buffer_size=2, latency="lognormal")
+        st = BufferState.init(3, cfg, seed=5)
+        simulate_flush(st, cfg, 5, 3)
+        blob = json.dumps(st.state_dict())
+        back = BufferState.from_state(json.loads(blob))
+        assert back == st  # dataclass equality: every field, floats exact
+
+    def test_resumed_event_loop_matches_uninterrupted(self):
+        cfg = AsyncConfig(buffer_size=2, latency="straggler")
+        full = BufferState.init(4, cfg, seed=2)
+        ref = [simulate_flush(full, cfg, 2, 4) for _ in range(6)]
+
+        part = BufferState.init(4, cfg, seed=2)
+        got = [simulate_flush(part, cfg, 2, 4) for _ in range(3)]
+        part = BufferState.from_state(
+            json.loads(json.dumps(part.state_dict())))
+        got += [simulate_flush(part, cfg, 2, 4) for _ in range(3)]
+        for (c0, s0, t0), (c1, s1, t1) in zip(ref, got):
+            np.testing.assert_array_equal(c0, c1)
+            np.testing.assert_array_equal(s0, s1)
+            assert t0 == t1
+
+    def test_flush_weights(self):
+        w = flush_weights(np.array([1.0, 2.0, 0.0]), np.array([0.0, 3.0, 0.0]),
+                          decay=1.0)
+        np.testing.assert_allclose(w, [1.0, 0.5, 0.0])
+        # decay=0 disables staleness weighting entirely.
+        w0 = flush_weights(np.array([1.0, 1.0]), np.array([0.0, 9.0]), 0.0)
+        np.testing.assert_array_equal(w0, [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: sync equivalence + save/resume
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncEngine:
+    def test_full_buffer_zero_jitter_matches_sync_bit_exact(self):
+        """buffer_size == J + constant latency == the synchronous
+        SFVI-Avg trajectory, bit for bit (acceptance criterion)."""
+        sync = build(_spec(Scenario(algorithm="sfvi_avg")))
+        h_sync = sync.run()
+        async_ = build(_spec(Scenario(
+            algorithm="sfvi_avg",
+            async_cfg=AsyncConfig(buffer_size=3, staleness_decay=1.0,
+                                  latency="constant"))))
+        h_async = async_.run()
+        for k in ("theta", "eta_G", "eta_L"):
+            _assert_trees_bit_equal(sync.server.state[k], async_.server.state[k])
+        assert h_sync["elbo"] == h_async["elbo"]
+        # Full buffer at zero jitter: everyone contributes every flush.
+        assert h_async["n_active"] == [3] * 4
+        assert h_async["staleness"] == [0.0] * 4
+
+    def test_async_runs_make_progress_under_stragglers(self):
+        exp = build(_spec(Scenario(
+            algorithm="sfvi_avg",
+            async_cfg=AsyncConfig(buffer_size=2, latency="straggler")),
+            rounds=12))
+        h = exp.run()
+        assert h["elbo"][-1] > h["elbo"][0]
+        # Simulated time advances monotonically and the meter tracked it.
+        assert np.all(np.diff(h["sim_time"]) >= 0)
+        assert exp.comm.sim_seconds == pytest.approx(h["sim_time"][-1])
+
+    def test_async_dp_int8_save_resume_bit_exact(self, tmp_path):
+        """Async + DP + int8 spec: save -> resume reproduces the
+        uninterrupted run bit-exactly, buffer state included
+        (acceptance criterion)."""
+        sc = Scenario(algorithm="sfvi_avg", compression="int8", dp_noise=0.6,
+                      dp_clip=0.9,
+                      async_cfg=AsyncConfig(buffer_size=2, latency="lognormal"))
+        spec = _spec(sc, rounds=6)
+        full = build(spec)
+        full.run()
+
+        part = build(spec)
+        part.run(3)
+        part.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path))
+        assert resumed.round == 3
+        # The buffer state crossed the checkpoint boundary.
+        assert resumed.async_state == part.async_state
+        resumed.run()
+
+        for k in ("theta", "eta_G", "eta_L"):
+            _assert_trees_bit_equal(full.server.state[k],
+                                    resumed.server.state[k])
+        assert (full.accountant.epsilon(sc.dp_delta)
+                == resumed.accountant.epsilon(sc.dp_delta))
+        assert full.comm.state_dict() == resumed.comm.state_dict()
+
+    def test_spec_json_round_trip_with_async_block(self):
+        sc = Scenario(algorithm="sfvi_avg", dp_noise=0.5,
+                      async_cfg=AsyncConfig(buffer_size=4, latency="straggler",
+                                            straggler_slowdown=25.0))
+        spec = _spec(sc, silos=6)
+        assert ExperimentSpec.from_json(spec.to_json()) == spec
+        d = json.loads(spec.to_json())
+        assert d["scenario"]["async_cfg"]["buffer_size"] == 4
+
+    def test_async_name_in_scenario_label(self):
+        sc = Scenario(algorithm="sfvi_avg",
+                      async_cfg=AsyncConfig(buffer_size=2, latency="straggler"))
+        assert "async(B=2,straggler" in sc.name
+
+    def test_scenario_matrix_emits_async_rows_only_where_valid(self):
+        grid = scenario_matrix(async_cfgs=(None, AsyncConfig(buffer_size=2)))
+        async_rows = [s for s in grid if s.async_cfg is not None]
+        assert async_rows, "matrix must include async rows"
+        for s in async_rows:
+            s.validate(4)  # must not raise
+
+    def test_validation_rejects_bad_combinations(self):
+        acfg = AsyncConfig(buffer_size=2)
+        with pytest.raises(ValueError, match="sfvi_avg"):
+            Scenario(algorithm="sfvi", async_cfg=acfg).validate()
+        with pytest.raises(ValueError, match="participation"):
+            Scenario(participation=0.5, async_cfg=acfg).validate()
+        with pytest.raises(ValueError, match="exceeds"):
+            Scenario(async_cfg=AsyncConfig(buffer_size=9)).validate(4)
+        with pytest.raises(ValueError, match="sfvi_avg"):
+            build(_spec(Scenario(algorithm="sfvi", async_cfg=acfg)))
+
+
+# ---------------------------------------------------------------------------
+# Padded silo mesh: the prime-J regression (subprocess, 4 forced devices)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+    import jax, numpy as np
+    import jax.sharding
+    from repro.federated import (ExperimentSpec, ModelSpec, OptimizerSpec,
+                                 Scenario, build)
+    from repro.federated.runtime import Server
+    from repro.launch.mesh import make_silo_mesh
+    from repro.models.paper.registry import get_model
+
+    assert jax.device_count() == 4
+    # Regression: a prime J used to shrink the mesh to its largest
+    # divisor of J — gcd(7, 4) = 1 device, the whole federation on one
+    # chip. The mesh must now span all 4 devices.
+    mesh = make_silo_mesh(7)
+    assert mesh.shape["silo"] == 4, mesh.shape
+
+    spec = ExperimentSpec(model=ModelSpec("toy", {"num_obs": 6}),
+                          scenario=Scenario(algorithm="sfvi_avg"),
+                          num_silos=7, rounds=3, local_steps=2,
+                          server_opt=OptimizerSpec("adam", 2e-2), seed=0)
+    multi = build(spec)
+    assert multi.server.mesh.shape["silo"] == 4
+    assert multi.server.J_pad == 8
+    h4 = multi.run()
+
+    bundle = get_model("toy").build(0, 7, num_obs=6)
+    prob = bundle.problem
+    srv = Server(prob, bundle.datas, bundle.theta0,
+                 prob.global_family.init(jax.random.PRNGKey(0)),
+                 num_obs=bundle.num_obs, server_opt=spec.server_opt.build(),
+                 local_opt=spec.server_opt.build(),
+                 mesh=jax.sharding.Mesh(jax.devices()[:1], ("silo",)), seed=0)
+    h1 = srv.run(3, algorithm="sfvi_avg", local_steps=2)
+    for x, y in zip(jax.tree_util.tree_leaves(multi.server.eta_G),
+                    jax.tree_util.tree_leaves(srv.eta_G)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h4["elbo"], h1["elbo"], rtol=1e-5)
+    print("MESH-OK")
+""")
+
+
+@pytest.mark.slow
+def test_prime_j_uses_all_devices_and_matches_single_device():
+    """J=7 on a 4-device CPU mesh spans all 4 devices (padded silo axis)
+    and reproduces the J=7 single-device trajectory (satellite task)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1200,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "MESH-OK" in out.stdout
+
+
+class TestPaddedMeshSingleDevice:
+    def test_no_padding_on_divisible_mesh(self):
+        exp = build(_spec(Scenario(algorithm="sfvi_avg"), silos=3))
+        assert exp.server.J_pad == exp.server.J == 3
+
+    def test_resume_repads_silo_axis(self, tmp_path):
+        """Resume restores the J real silo shards and re-pads to the
+        current mesh's J_pad (single-device here: J_pad == J)."""
+        spec = _spec(Scenario(algorithm="sfvi_avg"), silos=3)
+        exp = build(spec)
+        exp.run(2)
+        exp.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path))
+        leaves = jax.tree_util.tree_leaves(resumed.server.eta_L)
+        assert all(x.shape[0] == resumed.server.J_pad for x in leaves)
+        _assert_trees_bit_equal(exp.server.eta_L, resumed.server.eta_L)

@@ -4,12 +4,14 @@ import numpy as np
 import pytest
 
 from repro.data import (
+    dirichlet_label_partition,
     heterogeneous_label_partition,
     iid_partition,
     make_lda_corpus,
     make_six_cities,
     make_synthetic_mnist,
     make_token_stream,
+    pad_ragged_silos,
     sizes_partition,
 )
 
@@ -99,3 +101,51 @@ class TestPartitioners:
         parts = heterogeneous_label_partition(rng, labels, 50)
         sizes = {len(p) for p in parts}
         assert len(sizes) == 1  # equal-size silos
+
+    def test_dirichlet_partition_covers_disjointly_with_unequal_sizes(self):
+        rng = np.random.default_rng(3)
+        labels = rng.integers(0, 10, size=4000)
+        parts = dirichlet_label_partition(rng, labels, 8, alpha=0.3)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 4000
+        assert len(np.unique(allidx)) == 4000
+        # Small alpha: silo sizes must be genuinely unequal.
+        sizes = [len(p) for p in parts]
+        assert np.std(sizes) / np.mean(sizes) > 0.1
+
+    def test_dirichlet_partition_alpha_controls_skew(self):
+        """Small alpha concentrates each silo on few labels; large alpha
+        approaches IID (silo label histogram ~ global histogram)."""
+        rng = np.random.default_rng(4)
+        labels = rng.integers(0, 10, size=20_000)
+
+        def mean_dominant(alpha):
+            parts = dirichlet_label_partition(
+                np.random.default_rng(5), labels, 10, alpha=alpha)
+            doms = [np.bincount(labels[p], minlength=10).max() / len(p)
+                    for p in parts]
+            return float(np.mean(doms))
+
+        assert mean_dominant(0.05) > mean_dominant(100.0) + 0.2
+        assert mean_dominant(100.0) < 0.2  # near-IID: ~0.1 for 10 classes
+
+    def test_dirichlet_partition_min_per_silo(self):
+        rng = np.random.default_rng(6)
+        labels = rng.integers(0, 5, size=200)
+        parts = dirichlet_label_partition(rng, labels, 20, alpha=0.05,
+                                          min_per_silo=3)
+        assert all(len(p) >= 3 for p in parts)
+        assert len(np.unique(np.concatenate(parts))) == 200
+
+    def test_pad_ragged_silos(self):
+        datas = [{"x": np.arange(6.0).reshape(3, 2), "y": np.arange(3)},
+                 {"x": np.arange(2.0).reshape(1, 2), "y": np.arange(1)}]
+        padded = pad_ragged_silos(datas)
+        assert all(d["x"].shape == (3, 2) for d in padded)
+        np.testing.assert_array_equal(padded[0]["w"], [1.0, 1.0, 1.0])
+        np.testing.assert_array_equal(padded[1]["w"], [1.0, 0.0, 0.0])
+        # Real rows are untouched; padding repeats row 0.
+        np.testing.assert_array_equal(padded[1]["x"][0], datas[1]["x"][0])
+        np.testing.assert_array_equal(padded[1]["x"][1], datas[1]["x"][0])
+        with pytest.raises(ValueError, match="already has"):
+            pad_ragged_silos(padded)

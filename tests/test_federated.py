@@ -220,6 +220,51 @@ class TestScheduling:
         m = np.asarray(s.masks(50))
         assert (m.sum(axis=1) >= 1).all()
 
+    def test_zero_participation_draw_still_invites_one(self):
+        """participation so low it rounds to zero silos: the scheduler
+        must never draw an empty invitation (at least one silo is always
+        invited), and the round must still run."""
+        s = RoundScheduler(4, participation=0.01, seed=0)
+        m = np.asarray(s.masks(20))
+        assert (m.sum(axis=1) == 1).all()
+
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        srv = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                     server_opt=adam(2e-2), local_opt=adam(2e-2))
+        h = srv.run(3, algorithm="sfvi", local_steps=1,
+                    scheduler=RoundScheduler(4, participation=0.01, seed=0))
+        assert all(n == 1 for n in h["n_active"])
+        assert all(np.isfinite(e) for e in h["elbo"])
+
+    def test_all_silos_straggling_keeps_one_reporter(self):
+        """dropout=1.0 (every invited silo straggles): the scheduler
+        keeps the lowest-index invited silo so the round is never lost,
+        only that silo's local state moves, and downloads are still
+        billed for every invited straggler."""
+        sched = RoundScheduler(4, dropout=1.0, seed=5)
+        m = np.asarray(sched.masks(10))
+        assert (m.sum(axis=1) == 1).all()
+        assert (m[:, 0] == 1.0).all()  # lowest-index invitee survives
+
+        prob = _hier_problem()
+        theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(1))
+        srv = Server(prob, _datas(jax.random.PRNGKey(2), 4, 6, 2), theta, eta_G,
+                     server_opt=adam(2e-2), local_opt=adam(2e-2))
+        eta_L0 = jax.tree_util.tree_map(jnp.copy, srv.eta_L)
+        h = srv.run(2, algorithm="sfvi", local_steps=1, scheduler=sched)
+        assert all(n == 1 for n in h["n_active"])
+        # Frozen stragglers: silos 1..3 kept their exact η_L.
+        for j in range(1, 4):
+            for a, b in zip(jax.tree_util.tree_leaves(eta_L0),
+                            jax.tree_util.tree_leaves(srv.eta_L)):
+                np.testing.assert_array_equal(np.asarray(a[j]), np.asarray(b[j]))
+        # All 4 invited silos received the broadcast each round.
+        assert h["bytes_down"][0] == 4 * srv.bytes_down_per_silo()
+        assert h["bytes_up"][0] == 1 * srv.bytes_up_per_silo("sfvi")
+
     def test_partial_participation_round_runs(self):
         prob = _hier_problem()
         theta = {"m": jnp.asarray(0.0), "lt": jnp.asarray(0.0)}

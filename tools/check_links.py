@@ -1,0 +1,48 @@
+"""Offline relative-link checker for README.md and docs/*.md.
+
+    python tools/check_links.py [root]
+
+Verifies every markdown link target that is not an external URL or a
+pure in-page anchor resolves to an existing file relative to the
+document. Runs locally and in CI (the ``docs-link-check`` job) — it
+used to live as a heredoc inside the workflow, where it could neither
+be executed locally nor linted.
+
+Exit codes: 0 all links resolve, 1 broken links (listed on stdout).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+_EXTERNAL = re.compile(r"^[a-z]+://")
+
+
+def broken_links(root: pathlib.Path) -> list:
+    """All dangling relative links under ``root`` (README + docs/)."""
+    docs = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    bad = []
+    for md in docs:
+        if not md.exists():
+            continue
+        base = md.parent
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if _EXTERNAL.match(target):
+                continue  # external URL; the offline check skips these
+            if not (base / target).exists():
+                bad.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return bad
+
+
+def main(argv) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else pathlib.Path(".")
+    bad = broken_links(root)
+    print("\n".join(bad) if bad else "all relative links resolve")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
