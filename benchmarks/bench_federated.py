@@ -250,11 +250,37 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
                         if "epsilon" in hist else None),
         }
 
+    # Flat (J, P) wire vs the per-leaf legacy layout: same config, same
+    # bundle, both layouts timed back to back (median of per-round
+    # ratios against the interleaved yardstick, like the gated rows).
+    # Reported for visibility — not gated, legacy is a debug reference.
+    wire_compare = {}
+    for sc in (SMOKE_SCENARIOS[1], SMOKE_SCENARIOS[2]):
+        per = {}
+        for layout in ("flat", "legacy"):
+            exp = staged_experiment(
+                cfg["model"], bundle, scenario=sc, num_silos=cfg["silos"],
+                rounds=cfg["rounds"], local_steps=cfg["local_steps"],
+                lr=cfg["lr"], seed=cfg["seed"],
+                model_kwargs=cfg["model_kwargs"], wire=layout)
+            exp.run(1)  # compile
+            ratios = []
+            for _ in range(8):
+                tick = _yardstick()
+                t0 = time.perf_counter()
+                exp.run(1)
+                ratios.append((time.perf_counter() - t0) / tick)
+                yardsticks.append(tick)
+            per[layout] = statistics.median(ratios)
+        wire_compare[sc.name] = {
+            **per, "flat_speedup": per["legacy"] / per["flat"]}
+
     result = {
         "benchmark": "bench_federated-smoke",
         "config": cfg,
         "calibration_s": statistics.median(yardsticks),
         "scenarios": scenarios,
+        "wire_compare": wire_compare,
     }
     rows = [{"Scenario": name, **{k: (round(v, 4) if isinstance(v, float)
                                       else v) for k, v in r.items()}}
@@ -264,6 +290,15 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
         f"calibration {result['calibration_s']:.3f}s)",
         rows, ["Scenario", "elbo", "bytes_per_round", "s_per_round",
                "calibrated_round", "compile_s", "sim_seconds", "epsilon"],
+    )
+    print_table(
+        "wire layout: flat (J, P) vs legacy per-leaf (calibrated s/round)",
+        [{"Scenario": name,
+          "wire=flat": round(r["flat"], 4),
+          "wire=legacy": round(r["legacy"], 4),
+          "flat speedup": f"x{r['flat_speedup']:.2f}"}
+         for name, r in wire_compare.items()],
+        ["Scenario", "wire=flat", "wire=legacy", "flat speedup"],
     )
     if json_path:
         with open(json_path, "w") as f:

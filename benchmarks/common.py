@@ -40,7 +40,8 @@ def staged_experiment(model: str, bundle, *, num_silos: int, rounds: int,
                       local_steps: int = 1, scenario=None, algorithm=None,
                       lr: float = 2e-2, local_lr=None, seed: int = 0,
                       data_seed=None, eta_mode: str = "barycenter",
-                      model_kwargs=None, eval_every: int = 0):
+                      model_kwargs=None, eval_every: int = 0,
+                      wire: str = "flat"):
     """Spec-build an Experiment over a pre-staged registry bundle.
 
     One bundle (one dataset staging) can serve many specs — algorithms,
@@ -71,7 +72,9 @@ def staged_experiment(model: str, bundle, *, num_silos: int, rounds: int,
         seed=seed,
         data_seed=data_seed,
     )
-    return build(spec, bundle=bundle)
+    # ``wire`` is the Server's silo->server layout ("flat" packed (J, P)
+    # vs per-leaf "legacy") — an execution knob, not part of the spec.
+    return build(spec, bundle=bundle, wire=wire)
 
 
 def silo_subset(bundle, indices):

@@ -49,13 +49,9 @@ def elbo_value(
     num_samples: int = 32,
 ) -> jnp.ndarray:
     """Monte-Carlo ELBO value (no gradient tricks) for monitoring."""
-    dim = getattr(family, "dim", None)
-    if dim is None:
-        dim = (family.batch, family.dim)
-        shape = (num_samples,) + dim
-    else:
-        shape = (num_samples, dim)
-    eps = jax.random.normal(key, shape)
+    from repro.core.family import eps_shape
+
+    eps = jax.random.normal(key, (num_samples,) + eps_shape(family))
 
     def one(e):
         z = family.sample(params, e)

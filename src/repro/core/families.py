@@ -1,4 +1,4 @@
-"""Variational families (paper §2–3.1).
+"""Variational families (paper §2–3.1) — concrete `VariationalFamily`s.
 
 The paper's structured Gaussian family:
 
@@ -8,19 +8,28 @@ The paper's structured Gaussian family:
 with L_G, L_j lower-unitriangular. ``DiagGaussian`` is the special case
 L ≡ I (used in the paper's MNIST/ProdLDA experiments); ``CholeskyGaussian``
 carries the full unitriangular factor; ``ConditionalGaussian`` adds the
-coupling C_j that models Cov(Z_G, Z_{L_j}) = Σ_GG C_jᵀ.
+coupling C_j that models Cov(Z_G, Z_{L_j}) = Σ_GG C_jᵀ;
+``LowRankGaussian`` (diag + rank-r factor) extends the family beyond the
+paper — its existence is the proof the protocol is open.
 
-All families are immutable descriptors; parameters live in plain dict
-pytrees so they flow through jit/grad/psum and the Wasserstein barycenter.
+Every family implements the :class:`~repro.core.family.VariationalFamily`
+protocol: capability flags instead of isinstance probes, a
+``pack``/``unpack`` flat-vector bijection (derived from
+:meth:`param_shapes`), and — where Gaussian moments exist — the
+``to_moments``/``from_moments`` bridge the §3.2 barycenter merge
+consumes. All families are immutable descriptors; parameters live in
+plain dict pytrees so they flow through jit/grad/psum.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.family import VariationalFamily, register_family
 
 Params = Dict[str, jnp.ndarray]
 
@@ -40,11 +49,18 @@ def _unpack_unitriangular(packed: jnp.ndarray, dim: int) -> jnp.ndarray:
     return mat
 
 
+@register_family("diag")
 @dataclasses.dataclass(frozen=True)
-class DiagGaussian:
+class DiagGaussian(VariationalFamily):
     """Mean-field Gaussian: z = mu + sigma ⊙ eps. The paper's workhorse family."""
 
     dim: int
+
+    has_moments = True
+    moment_form = "diag"
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return {"mu": (self.dim,), "log_sigma": (self.dim,)}
 
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
         return {
@@ -70,19 +86,26 @@ class DiagGaussian:
     def from_moments(self, mu: jnp.ndarray, sigma: jnp.ndarray) -> Params:
         return {"mu": mu, "log_sigma": jnp.log(sigma)}
 
-    @property
-    def num_params(self) -> int:
-        return 2 * self.dim
 
-
+@register_family("cholesky")
 @dataclasses.dataclass(frozen=True)
-class CholeskyGaussian:
+class CholeskyGaussian(VariationalFamily):
     """z = mu + sigma ⊙ (L eps), L lower-unitriangular (paper §3.1).
 
     Covariance = D L Lᵀ D with D = diag(sigma); log|det| = Σ log sigma.
     """
 
     dim: int
+
+    has_moments = True
+    moment_form = "full"
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return {
+            "mu": (self.dim,),
+            "log_sigma": (self.dim,),
+            "L_packed": (self.dim * (self.dim - 1) // 2,),
+        }
 
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
         n_off = self.dim * (self.dim - 1) // 2
@@ -122,16 +145,133 @@ class CholeskyGaussian:
         diag = jnp.diagonal(chol)
         L = chol / diag[:, None]
         rows, cols = _tril_indices(self.dim)
-        packed = L[rows, cols] if self.dim > 1 else jnp.zeros((0,))
+        packed = L[rows, cols] if self.dim > 1 else jnp.zeros((0,), mu.dtype)
         return {"mu": mu, "log_sigma": jnp.log(diag), "L_packed": packed}
 
-    @property
-    def num_params(self) -> int:
-        return 2 * self.dim + self.dim * (self.dim - 1) // 2
 
-
+@register_family("lowrank")
 @dataclasses.dataclass(frozen=True)
-class ConditionalGaussian:
+class LowRankGaussian(VariationalFamily):
+    """z = mu + sigma ⊙ eps_d + U eps_r  with  Σ = diag(σ²) + U Uᵀ.
+
+    The classic diag-plus-low-rank posterior: O(d·r) parameters capture
+    the r strongest posterior correlation directions without the O(d²)
+    cost of :class:`CholeskyGaussian`. ``eps_shape`` is ``(dim + rank,)``
+    — the first ``dim`` coordinates drive the diagonal part, the last
+    ``rank`` the factor. ``log_prob`` uses the Woodbury identity and the
+    matrix determinant lemma, so it stays O(d·r² + r³).
+
+    Not in the paper — this family exists to prove the
+    :class:`~repro.core.family.VariationalFamily` protocol is open: it
+    plugs into the runtime, the flat wire format and the generic
+    barycenter merge (``moment_form == "full"``) with no changes
+    anywhere else.
+    """
+
+    dim: int
+    rank: int = 1
+
+    has_moments = True
+    moment_form = "full"
+
+    def __post_init__(self):
+        if not 1 <= self.rank <= self.dim:
+            raise ValueError(
+                f"rank must be in [1, dim={self.dim}], got {self.rank}")
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return {
+            "mu": (self.dim,),
+            "log_sigma": (self.dim,),
+            "U": (self.dim, self.rank),
+        }
+
+    @property
+    def eps_shape(self) -> Tuple[int, ...]:
+        return (self.dim + self.rank,)
+
+    def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
+        return {
+            "mu": mu_scale * jax.random.normal(key, (self.dim,)),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+            "U": jnp.zeros((self.dim, self.rank)),
+        }
+
+    def sample(self, params: Params, eps: jnp.ndarray) -> jnp.ndarray:
+        eps_d, eps_r = eps[: self.dim], eps[self.dim :]
+        return (
+            params["mu"]
+            + jnp.exp(params["log_sigma"]) * eps_d
+            + params["U"] @ eps_r
+        )
+
+    def _capacitance(self, params: Params) -> jnp.ndarray:
+        """M = I_r + Uᵀ D⁻¹ U with D = diag(σ²) (the Woodbury core)."""
+        inv_d = jnp.exp(-2.0 * params["log_sigma"])
+        u = params["U"]
+        return jnp.eye(self.rank, dtype=u.dtype) + (u.T * inv_d) @ u
+
+    def _logdet(self, params: Params) -> jnp.ndarray:
+        """log|Σ| = Σ log σ² + log|M| (matrix determinant lemma)."""
+        _, logdet_m = jnp.linalg.slogdet(self._capacitance(params))
+        return 2.0 * jnp.sum(params["log_sigma"]) + logdet_m
+
+    def log_prob(self, params: Params, z: jnp.ndarray) -> jnp.ndarray:
+        inv_d = jnp.exp(-2.0 * params["log_sigma"])
+        u = params["U"]
+        x = z - params["mu"]
+        dx = inv_d * x
+        # Woodbury: Σ⁻¹x = D⁻¹x − D⁻¹U M⁻¹ Uᵀ D⁻¹ x
+        w = jnp.linalg.solve(self._capacitance(params), u.T @ dx)
+        quad = jnp.dot(x, dx) - jnp.dot(u.T @ dx, w)
+        return -0.5 * quad - 0.5 * self._logdet(params) - 0.5 * self.dim * _LOG_2PI
+
+    def entropy(self, params: Params) -> jnp.ndarray:
+        return 0.5 * self._logdet(params) + 0.5 * self.dim * (1.0 + _LOG_2PI)
+
+    def covariance(self, params: Params) -> jnp.ndarray:
+        u = params["U"]
+        return jnp.diag(jnp.exp(2.0 * params["log_sigma"])) + u @ u.T
+
+    def to_moments(self, params: Params):
+        """(mean, full covariance) — the barycenter's ``"full"`` form."""
+        return params["mu"], self.covariance(params)
+
+    def from_moments(self, mu: jnp.ndarray, cov: jnp.ndarray,
+                     num_iters: int = 200) -> Params:
+        """Best diag + rank-r fit of ``cov`` by alternating projection.
+
+        Alternates (a) the top-r eigenpair factor of ``cov − diag(s)``
+        and (b) the diagonal that matches ``diag(cov)`` given the
+        factor, starting from the Guttman bound ``1 / diag(Σ⁻¹)``
+        (which under-counts the factor mass less than ``diag(Σ)``).
+        The rate is linear, so this is a PROJECTION, not an exact
+        inverse: for Σ of the family's own form it converges to the
+        true factorization (U up to right-rotation — every density
+        unchanged), for a general PSD matrix to a locally-best
+        diag + rank-r approximation.
+        """
+        r = self.rank
+
+        def body(_, carry):
+            diag_s, _u = carry
+            vals, vecs = jnp.linalg.eigh(cov - jnp.diag(diag_s))
+            top = jnp.clip(vals[-r:], 0.0, None)
+            u = vecs[:, -r:] * jnp.sqrt(top)
+            diag_s = jnp.clip(
+                jnp.diagonal(cov) - jnp.sum(u * u, axis=1), 1e-12, None)
+            return diag_s, u
+
+        init = (jnp.clip(1.0 / jnp.diagonal(jnp.linalg.inv(cov)), 1e-12,
+                         None),
+                jnp.zeros((self.dim, r), cov.dtype))
+        diag_s, u = jax.lax.fori_loop(0, num_iters, body, init)
+        return {"mu": mu, "log_sigma": 0.5 * jnp.log(diag_s), "U": u}
+
+
+@register_family("conditional")
+@dataclasses.dataclass(frozen=True)
+class ConditionalGaussian(VariationalFamily):
     """q(Z_L | Z_G) = N(mu_bar + C (z_G − mu_G), D L Lᵀ D)  (paper §3.1).
 
     ``use_coupling=False`` drops C (mean-field across the G/L boundary);
@@ -143,6 +283,22 @@ class ConditionalGaussian:
     global_dim: int
     use_coupling: bool = True
     use_chol: bool = False
+
+    conditional = True
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        shapes: Dict[str, Tuple[int, ...]] = {
+            "mu_bar": (self.dim,),
+            "log_sigma": (self.dim,),
+        }
+        if self.use_coupling:
+            shapes["C"] = (self.dim, self.global_dim)
+        if self.use_chol:
+            shapes["L_packed"] = (self.dim * (self.dim - 1) // 2,)
+        return shapes
+
+    def mean(self, params: Params) -> jnp.ndarray:
+        return params["mu_bar"]
 
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
         k1, _ = jax.random.split(key)
@@ -179,23 +335,32 @@ class ConditionalGaussian:
             eps = resid / jnp.exp(params["log_sigma"])
         return -0.5 * jnp.sum(eps**2) - jnp.sum(params["log_sigma"]) - 0.5 * self.dim * _LOG_2PI
 
-    @property
-    def num_params(self) -> int:
-        n = 2 * self.dim
-        if self.use_coupling:
-            n += self.dim * self.global_dim
-        if self.use_chol:
-            n += self.dim * (self.dim - 1) // 2
-        return n
+    def entropy(self, params: Params) -> jnp.ndarray:
+        """H[q(Z_L | Z_G)] — independent of z_G (L is unitriangular)."""
+        return jnp.sum(params["log_sigma"]) + 0.5 * self.dim * (1.0 + _LOG_2PI)
 
 
+@register_family("batched_diag")
 @dataclasses.dataclass(frozen=True)
-class BatchedDiagGaussian:
+class BatchedDiagGaussian(VariationalFamily):
     """A batch of independent diagonal Gaussians, e.g. per-document W_k in
     ProdLDA or per-silo adapters in the LLM configs. Shape (batch, dim)."""
 
     batch: int
     dim: int
+
+    has_moments = True
+    moment_form = "diag"
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return {
+            "mu": (self.batch, self.dim),
+            "log_sigma": (self.batch, self.dim),
+        }
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return (self.batch,)
 
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
         return {
@@ -215,6 +380,13 @@ class BatchedDiagGaussian:
             - 0.5 * self.batch * self.dim * _LOG_2PI
         )
 
-    @property
-    def num_params(self) -> int:
-        return 2 * self.batch * self.dim
+    def entropy(self, params: Params) -> jnp.ndarray:
+        return (jnp.sum(params["log_sigma"])
+                + 0.5 * self.batch * self.dim * (1.0 + _LOG_2PI))
+
+    def to_moments(self, params: Params):
+        """(mean, marginal std), both (batch, dim) — elementwise diag form."""
+        return params["mu"], jnp.exp(params["log_sigma"])
+
+    def from_moments(self, mu: jnp.ndarray, sigma: jnp.ndarray) -> Params:
+        return {"mu": mu, "log_sigma": jnp.log(sigma)}

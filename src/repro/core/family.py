@@ -1,0 +1,288 @@
+"""First-class variational-family API (paper §2–3.1).
+
+Families used to be ad-hoc duck-typed objects: the runtime probed them
+with ``isinstance(fam, ConditionalGaussian)`` and ``hasattr(fam,
+"batch")``, and the barycenter merge hard-rejected anything but
+``DiagGaussian``. This module replaces those probes with one explicit
+contract:
+
+  * :class:`VariationalFamily` — the protocol base every family in
+    :mod:`repro.core.families` implements: ``init / sample / log_prob /
+    entropy / num_params / pack / unpack`` plus the optional moment
+    bridge ``to_moments / from_moments`` (the barycenter surface).
+    Capability *flags* replace runtime type probes:
+
+      - ``conditional`` — the family parameterizes q(Z_L | Z_G); its
+        ``sample``/``log_prob`` take ``(params, z_G, mu_G, eps)`` /
+        ``(params, z_L, z_G, mu_G)`` instead of the unconditional
+        ``(params, eps)`` / ``(params, z)``;
+      - ``batch_shape`` / ``eps_shape`` — the leading batch axes and
+        the full shape of the standard-normal draw ``sample`` consumes
+        (replaces every ``hasattr(fam, "batch")`` probe);
+      - ``has_moments`` + ``moment_form`` (``"diag"`` | ``"full"``) —
+        whether ``to_moments``/``from_moments`` exist and whether the
+        second moment is a vector of marginal stds or a full covariance
+        (what :func:`repro.core.barycenter.family_barycenter` dispatches
+        on).
+
+  * ``FAMILIES`` — a name-keyed registry (``register_family`` /
+    ``get_family`` / ``family_names``), so a family is selectable from a
+    serialized spec exactly like a model.
+
+  * :class:`FamilySpec` — the declarative ``(name, kwargs)`` node that
+    rides on ``ModelSpec`` (``repro.federated.api``) with a lossless
+    JSON round trip; :func:`build_family` resolves it against the
+    registry, filling the structural dimensions (``dim``,
+    ``global_dim``) from the model so specs stay model-agnostic.
+
+The module-level helpers :func:`eps_shape` and :func:`is_conditional`
+are the ONLY place legacy duck-typed probing survives (as a fallback for
+third-party families that predate the protocol); everything else in the
+repo goes through the flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Optional, Tuple, Type
+
+import jax.numpy as jnp
+
+from repro.core.flatten import VectorSpec
+
+Params = Dict[str, jnp.ndarray]
+
+
+class VariationalFamily:
+    """Protocol base class for variational families.
+
+    Concrete families are frozen dataclasses deriving from this base.
+    The base supplies the packed-vector bijection (``pack``/``unpack``
+    from :meth:`param_shapes`), the derived ``num_params`` /
+    ``eps_shape`` and the default capability flags; subclasses implement
+    the distribution itself.
+
+    Unconditional families (``conditional = False``)::
+
+        z  = sample(params, eps)         # eps ~ N(0, I) of shape eps_shape
+        lp = log_prob(params, z)
+
+    Conditional families (``conditional = True``) parameterize
+    q(Z_L | Z_G) and additionally receive the conditioning draw and the
+    global mean::
+
+        z  = sample(params, z_G, mu_G, eps)
+        lp = log_prob(params, z_L, z_G, mu_G)
+
+    Families with ``has_moments = True`` expose the Gaussian moment
+    bridge used by the §3.2 Wasserstein-barycenter merge:
+    ``to_moments(params) -> (mean, second)`` and its inverse
+    ``from_moments(mean, second)``, where ``second`` is a vector of
+    marginal stds (``moment_form == "diag"``) or a full covariance
+    matrix (``moment_form == "full"``).
+    """
+
+    # -- capability flags (class-level; override in subclasses) -------------
+    conditional: ClassVar[bool] = False
+    has_moments: ClassVar[bool] = False
+    moment_form: ClassVar[Optional[str]] = None  # "diag" | "full" | None
+
+    # -- structure ----------------------------------------------------------
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        """Name -> shape of every parameter leaf (defines the pack layout)."""
+        raise NotImplementedError
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        """Leading batch axes of one sample (``()`` for unbatched families)."""
+        return ()
+
+    @property
+    def eps_shape(self) -> Tuple[int, ...]:
+        """Shape of the standard-normal draw ``sample`` consumes."""
+        return self.batch_shape + (self.dim,)  # type: ignore[attr-defined]
+
+    @property
+    def num_params(self) -> int:
+        """Total scalar parameter count (= the packed vector length)."""
+        return self.vector_spec.dim
+
+    @property
+    def vector_spec(self) -> VectorSpec:
+        """The flat-vector bijection over :meth:`param_shapes`."""
+        return VectorSpec.create(self.param_shapes())
+
+    def pack(self, params: Params) -> jnp.ndarray:
+        """Parameters -> one contiguous ``(num_params,)`` vector."""
+        return self.vector_spec.pack(params)
+
+    def unpack(self, vec: jnp.ndarray) -> Params:
+        """Inverse of :meth:`pack` (jit-safe: static shapes/slices)."""
+        return self.vector_spec.unpack(vec)
+
+    # -- distribution (subclass responsibility) -----------------------------
+
+    def init(self, key, **kwargs) -> Params:
+        raise NotImplementedError
+
+    def sample(self, params: Params, *args) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def log_prob(self, params: Params, *args) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def entropy(self, params: Params) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def mean(self, params: Params) -> jnp.ndarray:
+        """The (unconditional) mean — the μ the C-coupling centers on."""
+        return params["mu"]
+
+    # -- moment bridge (only when has_moments) ------------------------------
+
+    def to_moments(self, params: Params):
+        raise NotImplementedError(
+            f"{type(self).__name__} exposes no Gaussian moments "
+            "(has_moments=False); eta_mode='barycenter' needs a family "
+            "with to_moments/from_moments")
+
+    def from_moments(self, mean, second) -> Params:
+        raise NotImplementedError(
+            f"{type(self).__name__} exposes no Gaussian moments "
+            "(has_moments=False)")
+
+
+# ---------------------------------------------------------------------------
+# Probe helpers — the single home of legacy duck-type fallbacks
+# ---------------------------------------------------------------------------
+
+
+def eps_shape(family: Any) -> Tuple[int, ...]:
+    """Shape of the N(0, I) draw ``family.sample`` consumes.
+
+    Protocol families answer via ``family.eps_shape``; pre-protocol
+    duck-typed families fall back to the historical ``(batch, dim)`` /
+    ``(dim,)`` convention. This function is the only place that probe
+    lives.
+    """
+    shape = getattr(family, "eps_shape", None)
+    if shape is not None:
+        return tuple(shape)
+    if hasattr(family, "batch"):  # legacy duck-typed batched family
+        return (family.batch, family.dim)
+    return (family.dim,)
+
+
+def is_conditional(family: Any) -> bool:
+    """True when ``family`` parameterizes q(Z_L | Z_G) (the C-coupling)."""
+    return bool(getattr(family, "conditional", False))
+
+
+def supports_moments(family: Any) -> bool:
+    """True when ``family`` exposes the to_moments/from_moments bridge."""
+    return bool(getattr(family, "has_moments", False))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+FAMILIES: Dict[str, Type[VariationalFamily]] = {}
+
+
+def register_family(name: str):
+    """Class decorator: register a family under ``name`` in ``FAMILIES``."""
+
+    def deco(cls: Type[VariationalFamily]) -> Type[VariationalFamily]:
+        if name in FAMILIES:
+            raise ValueError(f"family {name!r} registered twice")
+        FAMILIES[name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    # The concrete families live in repro.core.families (which imports
+    # this module for the base class); importing it here, lazily, fills
+    # the registry without a circular import at module load.
+    if not FAMILIES:
+        import repro.core.families  # noqa: F401
+
+
+def get_family(name: str) -> Type[VariationalFamily]:
+    """Resolve a registered family class; raises with available names."""
+    _ensure_registered()
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown family {name!r}; registered families: "
+            + ", ".join(sorted(FAMILIES))
+        ) from None
+
+
+def family_names() -> Tuple[str, ...]:
+    """Sorted registered names (CLI choices, docs tables)."""
+    _ensure_registered()
+    return tuple(sorted(FAMILIES))
+
+
+# ---------------------------------------------------------------------------
+# FamilySpec: the declarative (name, kwargs) node on ModelSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """Declarative reference to a registered family.
+
+    ``kwargs`` must be JSON-native (the spec rides inside
+    ``ExperimentSpec.to_json``); structural dimensions the model owns
+    (``dim``, ``global_dim``) are filled at build time by
+    :func:`build_family`, so the same spec applies to any model —
+    ``FamilySpec("cholesky")`` upgrades whatever the model's global
+    family is to a full unitriangular factor, ``FamilySpec("lowrank",
+    {"rank": 2})`` to a diag + rank-2 one.
+    """
+
+    name: str
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FamilySpec":
+        return cls(name=d["name"], kwargs=dict(d.get("kwargs", {})))
+
+
+def build_family(
+    spec: FamilySpec,
+    dim: Optional[int] = None,
+    global_dim: Optional[int] = None,
+) -> VariationalFamily:
+    """Instantiate ``spec`` against the registry.
+
+    ``dim`` / ``global_dim`` are the model-owned structural dimensions;
+    they fill the family's matching constructor fields unless the spec's
+    kwargs already pin them (explicit kwargs win, e.g. to build a family
+    for a different latent block).
+    """
+    cls = get_family(spec.name)
+    kwargs = dict(spec.kwargs)
+    fields = dataclasses.fields(cls)
+    if dim is not None and any(f.name == "dim" for f in fields):
+        kwargs.setdefault("dim", dim)
+    if global_dim is not None and any(f.name == "global_dim" for f in fields):
+        kwargs.setdefault("global_dim", global_dim)
+    missing = [
+        f.name for f in fields
+        if f.name not in kwargs
+        and f.default is dataclasses.MISSING
+        and f.default_factory is dataclasses.MISSING
+    ]
+    if missing:
+        raise ValueError(
+            f"family {spec.name!r} needs explicit kwargs for {missing} — "
+            f"only dim/global_dim are derivable from the model; pass them "
+            f"in FamilySpec.kwargs (got {sorted(kwargs)})")
+    return cls(**kwargs)

@@ -1,14 +1,25 @@
-"""Flat-vector <-> structured-latent packing.
+"""Flat-vector <-> structured packing (families, latents, wire payloads).
 
-Variational families operate on flat latent vectors; models think in named
-blocks (weights, biases, variance parameters). ``VectorSpec`` provides the
-bijection, jit-safely (static shapes/slices).
+Two bijections, both jit-safe (static shapes/slices):
+
+  * :class:`VectorSpec` — named blocks <-> one flat vector. Variational
+    families operate on flat latent vectors while models think in named
+    blocks (weights, biases, variance parameters); this is the bridge,
+    and it also backs ``VariationalFamily.pack``/``unpack``.
+  * :class:`TreeSpec` — an arbitrary pytree of array leaves <-> ONE
+    contiguous float32 vector. This is the federated wire format: a
+    silo's whole upload (gradients or parameters, however nested) packs
+    to a single ``(P,)`` vector, so the stacked federation is a single
+    ``(J, P)`` matrix and aggregation / DP clip+noise / quantization /
+    the cross-silo gather are all single-array ops instead of per-leaf
+    ``tree_map``s.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -35,3 +46,52 @@ class VectorSpec:
 
     def pack(self, parts: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         return jnp.concatenate([parts[name].reshape(-1) for name, _ in self.shapes])
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Static descriptor of a pytree of array leaves: treedef + shapes.
+
+    ``pack`` flattens every leaf (cast to float32 — the wire dtype) into
+    one contiguous ``(dim,)`` vector in treedef leaf order; ``unpack``
+    is the exact inverse, restoring shapes, dtypes and structure.
+    Hashable and equality-comparable, so it rides into jitted closures
+    as a static value.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+
+    @classmethod
+    def of(cls, tree: Any) -> "TreeSpec":
+        """Descriptor for ``tree``'s structure (values are ignored)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return cls(
+            treedef=treedef,
+            shapes=tuple(tuple(x.shape) for x in leaves),
+            dtypes=tuple(jnp.dtype(x.dtype).name for x in leaves),
+        )
+
+    @property
+    def dim(self) -> int:
+        """Total scalar count P of the packed vector."""
+        return int(sum(np.prod(s, dtype=np.int64) for s in self.shapes))
+
+    def pack(self, tree: Any) -> jnp.ndarray:
+        """Pytree -> one contiguous (dim,) float32 wire vector."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if not leaves:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(
+            [x.astype(jnp.float32).reshape(-1) for x in leaves]
+        )
+
+    def unpack(self, vec: jnp.ndarray) -> Any:
+        """Inverse of :meth:`pack`: restore shapes, dtypes, structure."""
+        leaves, off = [], 0
+        for shape, dtype in zip(self.shapes, self.dtypes):
+            size = int(np.prod(shape, dtype=np.int64))
+            leaves.append(vec[off : off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)

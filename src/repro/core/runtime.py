@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.barycenter import barycenter_params_diag, barycenter_params_full
-from repro.core.families import CholeskyGaussian, DiagGaussian
+from repro.core.family import eps_shape, supports_moments
 from repro.core.sfvi import SFVIProblem
 # Leaf module: safe while repro.federated.runtime (which imports repro.core
 # submodules) may itself be mid-import. Server/stack_silos are imported
@@ -124,10 +124,7 @@ class Silo:
         self._jit_step = jax.jit(self._step_impl, static_argnames=("likelihood_scale",))
 
     def _local_eps_shape(self):
-        fam = self.problem.local_family
-        if hasattr(fam, "batch"):
-            return (fam.batch, fam.dim)
-        return (fam.dim,)
+        return eps_shape(self.problem.local_family)
 
     # ---------------- Algorithm 1 body (single-exchange reference) ----------
 
@@ -262,7 +259,7 @@ class SFVIServer(_AdapterBase):
         self.optimizer = optimizer
         self.seed = seed
         # eta_mode is unused by the SFVI round graph; "param" skips the
-        # DiagGaussian-only barycenter validation.
+        # barycenter's moment-bridge validation.
         self._compiled = _adapter_server(
             problem, silos, theta, eta_G, optimizer, "param", seed)
         self._round = 0
@@ -295,10 +292,14 @@ class SFVIAvgServer(_AdapterBase):
 
     ``run(num_rounds, local_steps)`` executes ``local_steps`` local VI
     steps per silo and one parameter merge per round inside the compiled
-    graph (algorithm ``"sfvi_avg"``): FedAvg for θ, the analytic
-    W2 barycenter for a DiagGaussian η_G (parameter-space mean
-    otherwise — the in-graph runtime has no full-covariance barycenter;
-    :meth:`_barycenter` keeps the exact host-side rule for reference).
+    graph (algorithm ``"sfvi_avg"``): FedAvg for θ and the W2 barycenter
+    for η_G — analytic for ``moment_form == "diag"`` families, the
+    Newton–Schulz fixed point for ``"full"`` ones (CholeskyGaussian,
+    LowRankGaussian), all in-graph via
+    :func:`repro.core.barycenter.family_barycenter`. Families without
+    the moment bridge are rejected with a ``ValueError`` at
+    construction (there is no silent parameter-space downgrade).
+    :meth:`_barycenter` keeps the eager host-side rule for reference.
     """
 
     def __init__(
@@ -321,25 +322,19 @@ class SFVIAvgServer(_AdapterBase):
         self.silos = silos
         self.local_optimizer_factory = local_optimizer_factory
         self.seed = seed
-        if isinstance(problem.global_family, DiagGaussian):
-            eta_mode = "barycenter"
-        else:
-            # The eager loop dispatched CholeskyGaussian to the full-
-            # covariance W2 barycenter (still available as _barycenter);
-            # the compiled round graph only implements the diagonal one,
-            # so the adapter falls back to parameter-space averaging —
-            # a DIFFERENT merge rule. Warn loudly rather than silently
-            # change the posterior.
-            warnings.warn(
-                f"SFVIAvgServer adapter: no in-graph W2 barycenter for "
-                f"{type(problem.global_family).__name__}; eta_G will be "
-                f"merged by parameter-space averaging (eta_mode='param'), "
-                f"not the eager server's full-covariance barycenter. Use "
-                f"repro.federated.Server/api directly if that matters.",
-                UserWarning,
-                stacklevel=2,
-            )
-            eta_mode = "param"
+        # The generic in-graph barycenter (family_barycenter) covers any
+        # family exposing the moment bridge — diag analytically, full-
+        # covariance ones through the Newton–Schulz fixed point — so the
+        # adapter always runs the eager server's true merge rule. A
+        # family without to_moments has no barycenter at all: fail loudly
+        # instead of silently averaging parameters.
+        if not supports_moments(problem.global_family):
+            raise ValueError(
+                f"SFVIAvgServer: {type(problem.global_family).__name__} "
+                f"exposes no to_moments/from_moments — the W2 barycenter "
+                f"merge is undefined for it. Use repro.federated.Server "
+                f"with eta_mode='param' for parameter-space averaging.")
+        eta_mode = "barycenter"
         # The factory's optimizer drives each silo's local (θ, η_G) steps
         # (a fresh state per round, as the eager loop created one per
         # sfvi_avg_round call); the silos' own optimizer drives η_{L_j}.
@@ -351,9 +346,10 @@ class SFVIAvgServer(_AdapterBase):
     def _barycenter(self, eta_G_list: List[PyTree]) -> PyTree:
         """Host-side η_G merge rule of the eager server (kept for tests)."""
         fam = self.problem.global_family
-        if isinstance(fam, DiagGaussian):
+        form = getattr(fam, "moment_form", None)
+        if form == "diag":
             return barycenter_params_diag(fam, eta_G_list)
-        if isinstance(fam, CholeskyGaussian):
+        if form == "full":
             return barycenter_params_full(fam, eta_G_list)
         raise TypeError(f"No barycenter rule for family {type(fam).__name__}")
 

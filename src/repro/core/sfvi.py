@@ -26,7 +26,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.families import ConditionalGaussian
+from repro.core.family import eps_shape, is_conditional
 from repro.core.model import StructuredModel
 
 PyTree = Any
@@ -41,8 +41,8 @@ class SFVIProblem:
     """Bundles the generative model with the variational families."""
 
     model: StructuredModel
-    global_family: Any  # DiagGaussian | CholeskyGaussian over Z_G
-    local_family: Optional[Any] = None  # ConditionalGaussian over Z_{L_j} (or batched)
+    global_family: Any  # VariationalFamily over Z_G (diag/cholesky/lowrank)
+    local_family: Optional[Any] = None  # family over Z_{L_j} (conditional or batched)
 
     # ---- objective pieces -------------------------------------------------
 
@@ -76,17 +76,21 @@ class SFVIProblem:
         loglik = self.model.log_local(theta, z_G, z_L, data_j)
         return likelihood_scale * (loglik - logq)
 
+    def _global_mean(self, eta_G):
+        mean = getattr(self.global_family, "mean", None)
+        return mean(eta_G) if mean is not None else eta_G["mu"]
+
     def _sample_local(self, eta_Lj, z_G, eta_G, eps_Lj):
         fam = self.local_family
-        if isinstance(fam, ConditionalGaussian):
-            return fam.sample(eta_Lj, z_G, eta_G["mu"], eps_Lj)
+        if is_conditional(fam):
+            return fam.sample(eta_Lj, z_G, self._global_mean(eta_G), eps_Lj)
         # Unconditional local family (no C coupling): ignore z_G.
         return fam.sample(eta_Lj, eps_Lj)
 
     def _log_prob_local(self, eta_Lj, z_L, z_G, eta_G):
         fam = self.local_family
-        if isinstance(fam, ConditionalGaussian):
-            return fam.log_prob(eta_Lj, z_L, z_G, eta_G["mu"])
+        if is_conditional(fam):
+            return fam.log_prob(eta_Lj, z_L, z_G, self._global_mean(eta_G))
         return fam.log_prob(eta_Lj, z_L)
 
     # ---- per-silo gradient computation (the silo's inner loop body) -------
@@ -159,15 +163,12 @@ class SFVIProblem:
     def sample_posterior(self, eta_G, eta_L, key, num_samples: int = 1):
         """Draw (Z_G, Z_L) from the variational posterior (for prediction)."""
         kG, kL = jax.random.split(key)
-        eps_G = jax.random.normal(kG, (num_samples, self.model.global_dim))
+        eps_G = jax.random.normal(
+            kG, (num_samples,) + eps_shape(self.global_family))
         z_G = jax.vmap(lambda e: self.global_family.sample(eta_G, e))(eps_G)
         if not self.model.has_local or eta_L is None:
             return z_G, None
-        fam = self.local_family
-        if hasattr(fam, "batch"):
-            shape = (fam.batch, fam.dim)
-        else:
-            shape = (fam.dim,)
-        eps_L = jax.random.normal(kL, (num_samples,) + shape)
+        eps_L = jax.random.normal(
+            kL, (num_samples,) + eps_shape(self.local_family))
         z_L = jax.vmap(lambda zg, e: self._sample_local(eta_L, zg, eta_G, e))(z_G, eps_L)
         return z_G, z_L

@@ -63,6 +63,7 @@ from repro.federated.scheduler import (
     Scenario,
     scenario_matrix,
 )
+from repro.core.family import FamilySpec
 from repro.federated.api import (
     Experiment,
     ExperimentSpec,
@@ -80,6 +81,7 @@ __all__ = [
     "run_buffered",
     "Experiment",
     "ExperimentSpec",
+    "FamilySpec",
     "ModelSpec",
     "OptimizerSpec",
     "build",

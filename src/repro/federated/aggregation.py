@@ -40,11 +40,19 @@ class MeanAggregator:
     The async engine passes fractional staleness-decay weights instead
     of a 0/1 mask, turning the same expression into the FedBuff-style
     staleness-weighted mean.
+
+    The denominator guards only against an exactly-zero total weight
+    (an empty round): clamping it to 1.0, as an earlier version did,
+    silently shrank every aggregate whose fractional weights summed
+    below 1 — e.g. a single stale async arrival with weight 0.25 was
+    divided by 1.0 instead of 0.25, scaling the (parameter!) upload by
+    4× toward zero.
     """
 
     def combine(self, stacked: PyTree, mask: jnp.ndarray) -> PyTree:
         """Weighted mean over the leading silo axis of every leaf."""
-        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        total = jnp.sum(mask)
+        denom = jnp.where(total > 0.0, total, 1.0)
 
         def leaf(x):
             return jnp.sum(_bcast_mask(mask, x) * x, axis=0) / denom

@@ -43,6 +43,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core.family import FamilySpec
 from repro.federated.scheduler import RoundScheduler, Scenario
 
 PyTree = Any
@@ -98,14 +99,31 @@ class ModelSpec:
     ``name`` resolves through :mod:`repro.models.paper.registry`;
     ``kwargs`` are forwarded to the registered builder and must be
     JSON-native (the spec round-trips through ``json.dumps``).
+
+    ``global_family`` / ``local_family`` optionally override the staged
+    problem's variational families with a
+    :class:`~repro.core.family.FamilySpec` — ``null`` keeps the model's
+    default (the paper's choice). Structural dimensions are filled from
+    the model at build time, so ``FamilySpec("cholesky")`` upgrades any
+    model's η_G to a full unitriangular factor and
+    ``FamilySpec("lowrank", {"rank": 2})`` to diag + rank-2.
     """
 
     name: str
     kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    global_family: Optional[FamilySpec] = None
+    local_family: Optional[FamilySpec] = None
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ModelSpec":
-        return cls(name=d["name"], kwargs=dict(d.get("kwargs", {})))
+        return cls(
+            name=d["name"],
+            kwargs=dict(d.get("kwargs", {})),
+            global_family=(FamilySpec.from_dict(d["global_family"])
+                           if d.get("global_family") is not None else None),
+            local_family=(FamilySpec.from_dict(d["local_family"])
+                          if d.get("local_family") is not None else None),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,17 +229,22 @@ class ExperimentSpec:
 # ---------------------------------------------------------------------------
 
 
-def build(spec: ExperimentSpec, bundle=None) -> "Experiment":
+def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experiment":
     """Assemble the compiled runtime for ``spec``.
 
     Resolves the model through the registry (unless a pre-staged
     ``bundle`` is supplied — benchmarks reuse one dataset across many
-    scenario specs that way), instantiates optimizers, aggregation,
-    compression and the privacy policy from the scenario, and returns a
-    ready-to-run :class:`Experiment`.
+    scenario specs that way), applies the spec's family overrides
+    (``ModelSpec.global_family`` / ``local_family``), instantiates
+    optimizers, aggregation, compression and the privacy policy from
+    the scenario, and returns a ready-to-run :class:`Experiment`.
+
+    ``wire`` selects the silo→server wire layout (``"flat"`` — the
+    packed (J, P) path — or the per-leaf ``"legacy"`` reference; a
+    benchmark/debug knob, deliberately NOT part of the spec).
     """
     from repro.federated.runtime import Server
-    from repro.models.paper.registry import get_model
+    from repro.models.paper.registry import apply_family_spec, get_model
 
     spec.scenario.validate(spec.num_silos)
     if bundle is None:
@@ -232,6 +255,8 @@ def build(spec: ExperimentSpec, bundle=None) -> "Experiment":
         raise ValueError(
             f"bundle stages {len(bundle.datas)} silos, spec.num_silos is "
             f"{spec.num_silos}")
+    bundle = apply_family_spec(
+        bundle, spec.model.global_family, spec.model.local_family)
 
     problem = bundle.problem
     has_local = problem.model.has_local
@@ -247,6 +272,7 @@ def build(spec: ExperimentSpec, bundle=None) -> "Experiment":
         aggregator=spec.scenario.make_aggregator(),
         compressor=spec.scenario.compressor(),
         eta_mode=spec.eta_mode,
+        wire=wire,
         privacy=spec.scenario.privacy(),
         seed=spec.seed,
     )
@@ -391,6 +417,10 @@ class Experiment:
         meta: Dict[str, Any] = {
             "round": self.round,
             "comm": self.comm.state_dict(),
+            # The wire layout is an execution knob, not spec state — but
+            # DP noise keys and int8 scales depend on it, so a resume
+            # must rebuild with the SAME layout to stay bit-exact.
+            "wire": self.server.wire,
         }
         if self.accountant is not None:
             acct = self.accountant.state_dict()
@@ -472,12 +502,17 @@ class Experiment:
         """
         if spec is None:
             spec = ExperimentSpec.load(os.path.join(directory, _SPEC_FILE))
-        exp = build(spec, bundle=bundle)
         mgr = CheckpointManager(directory)
         if step is None:
             step = mgr.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory!r}")
+        # Meta first: the run's wire layout must be restored before the
+        # Server is built (DP keys / int8 scales are layout-dependent,
+        # so resuming a wire='legacy' run as 'flat' would diverge).
+        with open(cls._meta_path(directory, step)) as f:
+            meta = json.load(f)
+        exp = build(spec, bundle=bundle, wire=meta.get("wire", "flat"))
 
         state = exp.server.state
         like = {k: state[k] for k in _SERVER_KEYS}
@@ -502,8 +537,6 @@ class Experiment:
             state["eta_L"] = exp.server.pad_silo_axis(stacked["eta_L"])
             state["opt_local"] = exp.server.pad_silo_axis(stacked["opt_local"])
 
-        with open(cls._meta_path(directory, step)) as f:
-            meta = json.load(f)
         exp.round = int(meta["round"])
         exp.comm.load_state(meta["comm"])
         if exp.accountant is not None and "acct" in meta:

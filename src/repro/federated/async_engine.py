@@ -230,6 +230,13 @@ def flush_weights(
     Zero staleness gives weight exactly ``count`` (``x**-0.0 == 1.0`` in
     IEEE arithmetic), which is what makes the ``buffer_size == J``
     constant-latency flush bit-identical to a synchronous full round.
+
+    The aggregator normalizes by the realized total weight (a weighted
+    MEAN — parameter uploads must not shrink toward zero when Σw < 1),
+    so these weights act RELATIVELY: a stale contribution is
+    down-weighted against fresher ones sharing its buffer, and a
+    single-contribution buffer (B=1) is applied at full strength
+    whatever its staleness (``tests/test_async.py``).
     """
     return (counts * (1.0 + staleness) ** (-decay)).astype(np.float32)
 

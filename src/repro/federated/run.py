@@ -14,6 +14,11 @@ every run serializable and resumable:
     ... --resume runs/a                 # continue a preempted run
     ... --list-models                   # registered models + descriptions
 
+Variational families are spec-overridable (``repro.core.family``):
+
+    ... --global-family cholesky           # full unitriangular η_G factor
+    ... --global-family lowrank --global-family-kwargs '{"rank": 2}'
+
 Scenario knobs cover partial participation, straggler dropout, robust
 aggregation, int8 wire compression and differential privacy:
 
@@ -54,6 +59,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--model", default="hier_bnn", choices=model_names())
     ap.add_argument("--model-kwargs", default="", metavar="JSON",
                     help="JSON dict forwarded to the registry builder")
+    ap.add_argument("--global-family", default=None, metavar="NAME",
+                    help="override the model's q(Z_G) family with a "
+                         "registered one (diag, cholesky, lowrank, ...); "
+                         "default: the model's own choice")
+    ap.add_argument("--global-family-kwargs", default="", metavar="JSON",
+                    help="JSON kwargs for --global-family (e.g. "
+                         '\'{"rank": 2}\' for lowrank)')
+    ap.add_argument("--local-family", default=None, metavar="NAME",
+                    help="override the model's q(Z_L | Z_G) family "
+                         "(conditional, batched_diag, ...)")
+    ap.add_argument("--local-family-kwargs", default="", metavar="JSON",
+                    help="JSON kwargs for --local-family")
     ap.add_argument("--silos", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=None,
                     help="total rounds (default 5; with --resume, extends "
@@ -134,6 +151,15 @@ def _async_cfg_from_args(args):
     )
 
 
+def _family_spec(name, kwargs_json):
+    """A FamilySpec from the CLI's (name, JSON-kwargs) flag pair."""
+    if name is None:
+        return None
+    from repro.core.family import FamilySpec
+
+    return FamilySpec(name, kwargs=json.loads(kwargs_json or "{}"))
+
+
 def _spec_from_args(args, algorithm: str):
     """The thin spec-builder: CLI flags -> declarative ExperimentSpec."""
     from repro.federated.api import ExperimentSpec, ModelSpec, OptimizerSpec
@@ -153,7 +179,14 @@ def _spec_from_args(args, algorithm: str):
         async_cfg=async_cfg,
     )
     return ExperimentSpec(
-        model=ModelSpec(args.model, kwargs=json.loads(args.model_kwargs or "{}")),
+        model=ModelSpec(
+            args.model,
+            kwargs=json.loads(args.model_kwargs or "{}"),
+            global_family=_family_spec(
+                args.global_family, args.global_family_kwargs),
+            local_family=_family_spec(
+                args.local_family, args.local_family_kwargs),
+        ),
         scenario=scenario,
         num_silos=args.silos,
         rounds=args.rounds if args.rounds is not None else 5,

@@ -11,9 +11,13 @@ virtualized into collectives:
     a leading axis of size J and sharded over ``silo`` — privacy by
     placement, exactly as in ``launch/steps.py``;
   * the silo→server ship of (g_j^θ, g_j^η) (SFVI) or (θ^(j), η_G^(j))
-    (SFVI-Avg) is an ``all_gather`` over ``silo``, with a pluggable
-    :mod:`~repro.federated.aggregation` compressor applied *before* the
-    collective so quantization reduces real bytes-on-wire;
+    (SFVI-Avg) is packed into ONE contiguous float32 vector per silo
+    (the flat wire format, :class:`~repro.core.flatten.TreeSpec`), so
+    DP clip+noise, the pluggable :mod:`~repro.federated.aggregation`
+    compressor (applied *before* the collective — quantization reduces
+    real bytes-on-wire, with a single int8 scale per silo), the
+    ``all_gather`` over ``silo`` and the server-side aggregation all
+    operate on a single (J, P) matrix instead of per-leaf tree_maps;
   * the server reduction is a pluggable aggregator (mean, trimmed mean)
     evaluated redundantly on every device (standard SPMD replication).
 
@@ -38,8 +42,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.barycenter import family_barycenter
+from repro.core.family import eps_shape as family_eps_shape
+from repro.core.family import supports_moments
+from repro.core.flatten import TreeSpec
 from repro.core.sfvi import SFVIProblem
-from repro.core.families import DiagGaussian
 from repro.federated.aggregation import MeanAggregator, NoCompression
 from repro.federated.metering import CommMeter, tree_bytes
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
@@ -58,7 +65,8 @@ PyTree = Any
 def global_eps(problem: SFVIProblem, round_key: jnp.ndarray, t) -> jnp.ndarray:
     """ε_G for local step ``t`` of a round — identical on every silo."""
     return jax.random.normal(
-        jax.random.fold_in(round_key, t), (problem.model.global_dim,)
+        jax.random.fold_in(round_key, t),
+        family_eps_shape(problem.global_family),
     )
 
 
@@ -66,10 +74,8 @@ def silo_eps(problem: SFVIProblem, round_key: jnp.ndarray, t, silo_id):
     """ε_{L_j} for local step ``t`` on silo ``silo_id`` (None if Z_L = ∅)."""
     if not problem.model.has_local:
         return None
-    fam = problem.local_family
-    shape = (fam.batch, fam.dim) if hasattr(fam, "batch") else (fam.dim,)
     key = jax.random.fold_in(jax.random.fold_in(round_key, 100_003 + t), silo_id)
-    return jax.random.normal(key, shape)
+    return jax.random.normal(key, family_eps_shape(problem.local_family))
 
 
 def stack_silos(datas: Sequence[PyTree]) -> PyTree:
@@ -159,8 +165,18 @@ class Server:
       local_opt: optimizer for each η_{L_j} (state is stacked per silo).
       aggregator: cross-silo combine rule (mean / trimmed mean / custom).
       compressor: silo→server wire codec (identity / int8 quantization).
-      eta_mode: ``"barycenter"`` (paper §3.2; DiagGaussian only) or
-        ``"param"`` (FedAvg in parameter space) for SFVI-Avg's η_G merge.
+      eta_mode: ``"barycenter"`` (paper §3.2 — any family exposing the
+        ``to_moments``/``from_moments`` bridge: analytic for diag-form
+        families, the in-graph Newton–Schulz fixed point for
+        full-covariance ones) or ``"param"`` (FedAvg in parameter
+        space) for SFVI-Avg's η_G merge.
+      wire: silo→server wire layout. ``"flat"`` (default) packs each
+        upload into ONE contiguous float32 vector
+        (:class:`~repro.core.flatten.TreeSpec`), so DP clip+noise,
+        compression, the cross-silo gather and the aggregator all
+        operate on a single (J, P) matrix — fewer HLO ops per round and
+        one int8 scale per silo instead of one per leaf. ``"legacy"``
+        keeps the per-leaf pytree wire (benchmark/debug reference).
       privacy: optional :class:`~repro.federated.privacy.PrivacyPolicy`.
         When set, every silo upload is L2-clipped and Gaussian-noised
         *inside* the compiled round — before the compression hook and
@@ -186,6 +202,7 @@ class Server:
         aggregator=None,
         compressor=None,
         eta_mode: str = "barycenter",
+        wire: str = "flat",
         privacy: Optional[PrivacyPolicy] = None,
         mesh=None,
         seed: int = 0,
@@ -214,14 +231,19 @@ class Server:
         self._has_local = problem.model.has_local
         if eta_mode not in ("barycenter", "param"):
             raise ValueError(f"unknown eta_mode {eta_mode!r}")
-        if eta_mode == "barycenter" and not isinstance(
-            problem.global_family, DiagGaussian
+        if eta_mode == "barycenter" and not supports_moments(
+            problem.global_family
         ):
             raise ValueError(
-                "in-graph barycenter aggregation is implemented for "
-                "DiagGaussian η_G; pass eta_mode='param' for other families"
+                "eta_mode='barycenter' needs a global family exposing "
+                "to_moments/from_moments (DiagGaussian, CholeskyGaussian, "
+                "LowRankGaussian, ...); pass eta_mode='param' for "
+                f"{type(problem.global_family).__name__}"
             )
         self.eta_mode = eta_mode
+        if wire not in ("flat", "legacy"):
+            raise ValueError(f"unknown wire layout {wire!r} (flat/legacy)")
+        self.wire = wire
 
         if num_obs is None:
             num_obs = [
@@ -310,9 +332,21 @@ class Server:
             return {"g_theta": self.state["theta"], "g_eta": self.state["eta_G"]}
         return {"theta": self.state["theta"], "eta_G": self.state["eta_G"]}
 
+    def wire_spec(self, algorithm: str) -> TreeSpec:
+        """The flat wire bijection of one upload (static; P = its dim)."""
+        return TreeSpec.of(self.ship_template(algorithm))
+
     def bytes_up_per_silo(self, algorithm: str) -> int:
-        """Post-compression upload bytes for one silo, one gather."""
-        return self.compressor.wire_bytes(self.ship_template(algorithm))
+        """Post-compression upload bytes for one silo, one gather.
+
+        On the flat wire the compressor sees ONE (P,) float32 vector —
+        an int8 codec therefore pays a single 4-byte scale per silo
+        instead of one per pytree leaf.
+        """
+        template = self.ship_template(algorithm)
+        if self.wire == "flat":
+            template = np.zeros((self.wire_spec(algorithm).dim,), np.float32)
+        return self.compressor.wire_bytes(template)
 
     def bytes_down_per_silo(self) -> int:
         """Broadcast bytes: (θ, η_G) raw; the round key is ~0 and elided."""
@@ -400,6 +434,10 @@ class Server:
         server_opt, local_opt = self._server_opt, self._local_opt
         has_local = self._has_local
         privacy = self.privacy
+        # Flat wire: the whole upload is ONE (P,) f32 vector, so clip,
+        # noise, quantization, the gather and the aggregation below all
+        # see a single array per silo ((J, P) once stacked).
+        wire = self.wire_spec("sfvi") if self.wire == "flat" else None
 
         def body(theta, eta_G, opt_server, eta_L, opt_L,
                  data_sh, sids, n_j, masks_full, weights_full, round_key):
@@ -430,6 +468,8 @@ class Server:
                         eta_Lj = _select(m_j > 0.5, apply_updates(el, upd), el)
                         opt_Lj = _select(m_j > 0.5, new_opt, opt_Lj)
                     ship = {"g_theta": g_th, "g_eta": g_eta}
+                    if wire is not None:
+                        ship = wire.pack(ship)
                     if privacy is not None:
                         # Clip + noise BEFORE compression and the gather:
                         # the wire never carries a raw silo gradient.
@@ -453,11 +493,13 @@ class Server:
                     eta_L, opt_L, data_sh, sids, mask_sh
                 )
                 enc = _coalesced_all_gather(enc, "silo")
-                shipped = jax.vmap(comp.decode)(enc)  # (J, ...) per leaf
+                shipped = jax.vmap(comp.decode)(enc)  # (J, P) | (J, ...) per leaf
                 hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
 
                 mean_g = agg.combine(shipped, w_full)
                 g_sum = jax.tree_util.tree_map(lambda x: x * float(J), mean_g)
+                if wire is not None:
+                    g_sum = wire.unpack(g_sum)
                 g_th0, g_eta0, hatL0 = problem.server_grads(theta, eta_G, eps_G)
                 g = {
                     "theta": _add(g_sum["g_theta"], g_th0),
@@ -486,6 +528,7 @@ class Server:
         has_local = self._has_local
         eta_mode = self.eta_mode
         privacy = self.privacy
+        wire = self.wire_spec("sfvi_avg") if self.wire == "flat" else None
         # N = Σ_j N_j over the REAL federation — the padded tail repeats
         # silo 0's count purely to keep the dummy silos' per-silo scale
         # finite (their contribution is masked out regardless).
@@ -495,6 +538,12 @@ class Server:
                  data_sh, sids, n_j, mask_full, w_full, round_key):
             mask_sh = mask_full[sids]  # this block's silos
             n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
+            # The round's public broadcast in wire form: the DP delta
+            # reference AND the data-independent upload of silos that
+            # did not participate.
+            broadcast = {"theta": theta, "eta_G": eta_G}
+            if wire is not None:
+                broadcast = wire.pack(broadcast)
 
             def per_silo(eta_Lj, opt_Lj, data_j, sid, m_j, n_obs_j):
                 scale = total_obs / n_obs_j  # §3.2 point 2: N / N_j
@@ -537,24 +586,25 @@ class Server:
                     eta_Lj = _select(m_j > 0.5, el, el0)
                     opt_Lj = _select(m_j > 0.5, l_st, opt_Lj)
                 ship = {"theta": th, "eta_G": eg}
+                if wire is not None:
+                    ship = wire.pack(ship)
                 if privacy is not None:
                     # Parameter upload: the private quantity is the delta
                     # from the round's broadcast (θ, η_G), which the server
                     # already knows. Clip + noise the delta, add it back —
-                    # wire format stays a parameter pytree, and it is
-                    # privatized before compression and the gather.
+                    # the wire format (flat vector or parameter pytree) is
+                    # unchanged, and it is privatized before compression
+                    # and the gather.
                     ship = privacy.privatize(
                         ship,
                         privacy.upload_key(round_key, 0, sid),
-                        reference={"theta": theta, "eta_G": eta_G},
+                        reference=broadcast,
                     )
                 # Non-participating silos upload the round's public
                 # broadcast — data-independent, so the subsampling
                 # amplification in the accountant actually holds on the
                 # wire (aggregation masks these rows regardless).
-                ship = _select(
-                    m_j > 0.5, ship, {"theta": theta, "eta_G": eta_G}
-                )
+                ship = _select(m_j > 0.5, ship, broadcast)
                 ship = comp.encode(ship)
                 return eta_Lj, opt_Lj, ship, elbos * m_j
 
@@ -562,21 +612,27 @@ class Server:
                 eta_L, opt_L, data_sh, sids, mask_sh, n_j
             )
             enc = _coalesced_all_gather(enc, "silo")
-            shipped = jax.vmap(comp.decode)(enc)
+            shipped = jax.vmap(comp.decode)(enc)  # (J, P) | stacked pytree
             elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
 
-            theta_new = agg.combine(shipped["theta"], w_full)
-            if eta_mode == "param":
-                eta_new = agg.combine(shipped["eta_G"], w_full)
+            if wire is not None:
+                merged = wire.unpack(agg.combine(shipped, w_full))
+                eta_shipped = jax.vmap(lambda v: wire.unpack(v)["eta_G"])(
+                    shipped)
             else:
-                # Analytic diag-Gaussian W2 barycenter in moment space:
-                # mean of μ_j, mean of σ_j (core.barycenter.diag_barycenter)
-                # — robustified by whatever aggregator is plugged in.
-                mu = agg.combine(shipped["eta_G"]["mu"], w_full)
-                sigma = agg.combine(
-                    jnp.exp(shipped["eta_G"]["log_sigma"]), w_full
-                )
-                eta_new = {"mu": mu, "log_sigma": jnp.log(sigma)}
+                merged = {k: agg.combine(v, w_full)
+                          for k, v in shipped.items()}
+                eta_shipped = shipped["eta_G"]
+            theta_new = merged["theta"]
+            if eta_mode == "param":
+                eta_new = merged["eta_G"]
+            else:
+                # W2 barycenter in moment space, generic over the
+                # family's moment bridge: analytic (aggregator-
+                # robustified) for diag-form families, the in-graph
+                # Newton–Schulz fixed point for full-covariance ones.
+                eta_new = family_barycenter(
+                    problem.global_family, eta_shipped, w_full, agg)
             return theta_new, eta_new, opt_server, eta_L, opt_L, elbo_t
 
         return body

@@ -97,6 +97,38 @@ def model_names() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def apply_family_spec(bundle: ModelBundle, global_family=None,
+                      local_family=None) -> ModelBundle:
+    """Swap the staged problem's variational families from FamilySpecs.
+
+    Every registered model stages a default family pair (the paper's
+    choice); a :class:`~repro.core.family.FamilySpec` on the
+    ``ModelSpec`` overrides either side — the structural dimensions
+    (``dim``, ``global_dim``) come from the staged model, so the same
+    spec applies to any registry entry. Data, θ₀, counts and eval hooks
+    are untouched (family choice never changes the generative model).
+
+    Imports lazily: the registry module must stay importable before JAX
+    (``--list-models`` runs pre-``XLA_FLAGS``).
+    """
+    if global_family is None and local_family is None:
+        return bundle
+    import dataclasses as _dc
+
+    from repro.core.family import build_family
+
+    problem = bundle.problem
+    model = problem.model
+    gfam, lfam = problem.global_family, problem.local_family
+    if global_family is not None:
+        gfam = build_family(global_family, dim=model.global_dim)
+    if local_family is not None:
+        lfam = build_family(local_family, dim=model.local_dim,
+                            global_dim=model.global_dim)
+    problem = _dc.replace(problem, global_family=gfam, local_family=lfam)
+    return _dc.replace(bundle, problem=problem)
+
+
 # ---------------------------------------------------------------------------
 # Builders (imports deferred to call time; see module docstring)
 # ---------------------------------------------------------------------------

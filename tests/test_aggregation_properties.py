@@ -124,6 +124,54 @@ class TestInactiveSiloIndependence:
                                 rtol=1e-5, atol=1e-5)
 
 
+class TestFractionalWeights:
+    """The async staleness-decay regression: weights summing below 1
+    must NOT shrink the aggregate (the denominator guards only exact
+    zero, not < 1). A single stale arrival with weight 0.25 used to be
+    divided by 1.0 — a 4× silent shrink of a PARAMETER upload."""
+
+    def test_single_stale_arrival_is_returned_unscaled(self):
+        agg = MeanAggregator()
+        x = jnp.asarray(np.arange(1.0, 7.0, dtype=np.float32).reshape(2, 3))
+        w = jnp.asarray(np.array([0.25, 0.0], np.float32))
+        out = agg.combine({"g": x}, w)
+        np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(x[0]),
+                                   rtol=1e-6)
+
+    def test_weighted_mean_for_sub_unit_totals(self):
+        rng = np.random.default_rng(7)
+        agg = MeanAggregator()
+        for _ in range(25):
+            stacked, _ = _random_case(rng)
+            J = next(iter(stacked.values())).shape[0]
+            # Fractional staleness-style weights with Σw < 1.
+            w = rng.uniform(0.0, 0.3, J).astype(np.float32)
+            w[int(rng.integers(J))] = max(w.max(), 0.05)
+            assert 0.0 < w.sum() < 1.0 or w.sum() >= 1.0  # any total
+            out = agg.combine(stacked, jnp.asarray(w))
+            for k, v in stacked.items():
+                arr = np.asarray(v)
+                ww = w.reshape(-1, *([1] * (arr.ndim - 1)))
+                ref = (arr * ww).sum(axis=0) / w.sum()
+                np.testing.assert_allclose(np.asarray(out[k]), ref,
+                                           rtol=1e-5, atol=1e-5)
+
+    def test_scalar_weight_invariance(self):
+        """A weighted mean is invariant to rescaling ALL weights — the
+        property the old 1.0-clamp broke for totals below 1."""
+        rng = np.random.default_rng(8)
+        agg = MeanAggregator()
+        stacked, mask = _random_case(rng)
+        a = agg.combine(stacked, mask)
+        b = agg.combine(stacked, mask * 0.1)
+        _assert_trees_close(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_zero_total_still_guarded(self):
+        agg = MeanAggregator()
+        out = agg.combine({"g": jnp.ones((3, 2))}, jnp.zeros((3,)))
+        np.testing.assert_allclose(np.asarray(out["g"]), 0.0)
+
+
 class TestMeanIsMaskedMean:
     def test_seeded_sweep(self):
         rng = np.random.default_rng(2)

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    CholeskyGaussian,
     ConditionalGaussian,
     DiagGaussian,
     SFVIAvgServer,
@@ -23,9 +24,12 @@ from repro.core import (
     Silo,
     StructuredModel,
 )
+from repro.core.families import LowRankGaussian
 from repro.federated import (
+    AsyncConfig,
     Experiment,
     ExperimentSpec,
+    FamilySpec,
     ModelSpec,
     OptimizerSpec,
     Scenario,
@@ -41,9 +45,12 @@ PAPER_MODELS = ["toy", "hier_bnn", "fedpop_bnn", "prodlda", "glmm", "multinomial
 
 
 def _full_spec(**over):
-    """A spec exercising every field, privacy and scenario included."""
+    """A spec exercising every field, privacy, scenario and families."""
     base = dict(
-        model=ModelSpec("toy", {"num_obs": 8}),
+        model=ModelSpec("toy", {"num_obs": 8},
+                        global_family=FamilySpec("lowrank", {"rank": 1}),
+                        local_family=FamilySpec("conditional",
+                                                {"use_coupling": False})),
         scenario=Scenario(
             algorithm="sfvi_avg", participation=0.75, dropout=0.1,
             compression="int8", dp_noise=0.6, dp_clip=0.8, dp_delta=1e-6,
@@ -88,6 +95,97 @@ class TestSpecRoundTrip:
     def test_unknown_optimizer_rejected_at_build(self):
         with pytest.raises(ValueError, match="unknown optimizer"):
             OptimizerSpec("lbfgs").build()
+
+    def test_family_spec_round_trips_inside_model_spec(self):
+        s = _full_spec()
+        d = json.loads(s.to_json())
+        assert d["model"]["global_family"] == {"name": "lowrank",
+                                               "kwargs": {"rank": 1}}
+        assert ExperimentSpec.from_dict(d) == s
+        # Default (no override) serializes as null and round-trips too.
+        bare = ExperimentSpec(model=ModelSpec("toy"))
+        assert bare.model.global_family is None
+        assert ExperimentSpec.from_json(bare.to_json()) == bare
+
+
+class TestFamilyOverrides:
+    def _spec(self, gfam, scenario=None, rounds=4):
+        return ExperimentSpec(
+            model=ModelSpec("toy", {"num_obs": 6}, global_family=gfam),
+            scenario=scenario or Scenario(algorithm="sfvi_avg"),
+            num_silos=4, rounds=rounds, local_steps=2,
+            server_opt=OptimizerSpec("adam", 2e-2), seed=3,
+        )
+
+    def test_build_swaps_the_global_family(self):
+        exp = build(self._spec(FamilySpec("cholesky")))
+        fam = exp.server.problem.global_family
+        assert isinstance(fam, CholeskyGaussian)
+        assert fam.dim == exp.server.problem.model.global_dim
+        assert "L_packed" in exp.server.eta_G
+        exp.run(2)
+        assert np.isfinite(exp.history["elbo"][-1])
+
+    def test_lowrank_family_runs_end_to_end(self):
+        exp = build(self._spec(FamilySpec("lowrank", {"rank": 1})))
+        assert isinstance(exp.server.problem.global_family, LowRankGaussian)
+        h = exp.run()
+        assert np.all(np.isfinite(np.asarray(h["elbo"])))
+
+    def test_default_spec_keeps_model_family(self):
+        exp = build(self._spec(None))
+        assert isinstance(exp.server.problem.global_family, DiagGaussian)
+
+    def test_nondefault_family_resumes_bit_exact_under_dp_int8_async(
+            self, tmp_path):
+        """Acceptance: a spec carrying a non-default FamilySpec resumes
+        bit-exactly mid-run with DP + int8 + async all live — the same
+        guarantee the default family has."""
+        sc = Scenario(algorithm="sfvi_avg", compression="int8",
+                      dp_noise=0.5, dp_clip=0.9,
+                      async_cfg=AsyncConfig(buffer_size=2,
+                                            latency="lognormal"))
+        spec = self._spec(FamilySpec("cholesky"), scenario=sc, rounds=6)
+        full = build(spec)
+        full.run()
+
+        part = build(spec)
+        part.run(3)
+        part.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path))
+        assert isinstance(resumed.server.problem.global_family,
+                          CholeskyGaussian)
+        resumed.run()
+        _assert_trees_bit_equal(_run_state(full), _run_state(resumed))
+        assert full.comm.state_dict() == resumed.comm.state_dict()
+
+    def test_unknown_family_raises_with_names(self):
+        with pytest.raises(KeyError, match="registered families"):
+            build(self._spec(FamilySpec("gumbel")))
+
+    def test_underivable_family_kwargs_raise_cleanly(self):
+        """batched_diag needs a 'batch' the model cannot supply — the
+        error must name the missing kwarg, not die in __init__."""
+        with pytest.raises(ValueError, match="batch"):
+            build(self._spec(FamilySpec("batched_diag")))
+
+    def test_legacy_wire_run_resumes_on_legacy_wire(self, tmp_path):
+        """The wire layout is recorded in the checkpoint meta: a run
+        built with wire='legacy' under DP+int8 (layout-dependent noise
+        keys and scales) must resume on the SAME layout, bit-exactly."""
+        sc = Scenario(algorithm="sfvi_avg", compression="int8",
+                      dp_noise=0.5, dp_clip=0.9)
+        spec = self._spec(None, scenario=sc, rounds=4)
+        full = build(spec, wire="legacy")
+        full.run()
+
+        part = build(spec, wire="legacy")
+        part.run(2)
+        part.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path))
+        assert resumed.server.wire == "legacy"
+        resumed.run()
+        _assert_trees_bit_equal(_run_state(full), _run_state(resumed))
 
 
 class TestRegistry:
@@ -347,6 +445,68 @@ class TestAdapterEquivalence:
             _assert_trees_bit_equal(
                 silo.eta_L,
                 jax.tree_util.tree_map(lambda x: x[j], direct.eta_L))
+
+    def test_avg_adapter_runs_real_cholesky_barycenter(self):
+        """The adapter no longer downgrades CholeskyGaussian to
+        parameter-space averaging: it runs the generic in-graph W2
+        barycenter and matches the direct Server bit for bit."""
+        lr, J, n, K = 0.03, 3, 4, 2
+        dG = 3
+        model = StructuredModel(
+            global_dim=dG, local_dim=2,
+            log_prior_global=lambda th, zg: -0.5 * jnp.sum((zg - th["m"]) ** 2),
+            log_local=lambda th, zg, zl, d: (
+                -0.5 * jnp.sum((zl - jnp.mean(zg)) ** 2)
+                - 0.5 * jnp.sum((d["y"] - zl[None, :]) ** 2)
+            ),
+        )
+        prob = SFVIProblem(model, CholeskyGaussian(dG),
+                           ConditionalGaussian(2, dG))
+        theta = {"m": jnp.asarray(0.1)}
+        eta_G = prob.global_family.init(jax.random.PRNGKey(5), mu_scale=0.4)
+        datas = _datas(jax.random.PRNGKey(6), J, n, 2)
+        key = jax.random.PRNGKey(13)
+        etas_L = [prob.local_family.init(jax.random.fold_in(key, j))
+                  for j in range(J)]
+        silos = [Silo(j, prob, datas[j], etas_L[j], sgd(lr), n)
+                 for j in range(J)]
+
+        import warnings as _w
+
+        with _w.catch_warnings(record=True) as caught:
+            _w.simplefilter("always")
+            legacy = SFVIAvgServer(prob, silos, theta, eta_G,
+                                   lambda: sgd(lr), seed=17)
+        # Deprecation only — the barycenter->param downgrade warning is gone.
+        assert all(issubclass(w.category, DeprecationWarning) for w in caught)
+        assert legacy._compiled.eta_mode == "barycenter"
+
+        direct = Server(prob, datas, theta, eta_G, num_obs=[n] * J,
+                        server_opt=sgd(lr), local_opt=sgd(lr),
+                        eta_mode="barycenter", seed=17)
+        direct.state["eta_L"] = stack_silos(etas_L)
+        legacy.run(2, local_steps=K)
+        direct.run(2, algorithm="sfvi_avg", local_steps=K)
+        _assert_trees_bit_equal(legacy.theta, direct.theta)
+        _assert_trees_bit_equal(legacy.eta_G, direct.eta_G)
+
+    def test_avg_adapter_rejects_family_without_moments(self):
+        """A global family with no to_moments has no barycenter: the
+        adapter fails loudly instead of silently averaging parameters."""
+        class NoMoments(DiagGaussian):
+            has_moments = False
+
+        prob = _hier_problem()
+        prob = SFVIProblem(prob.model, NoMoments(3), prob.local_family)
+        datas = _datas(jax.random.PRNGKey(2), 2, 4, 2)
+        silos = [Silo(j, prob, datas[j],
+                      prob.local_family.init(jax.random.PRNGKey(j)),
+                      sgd(0.05), 4) for j in range(2)]
+        with pytest.warns(DeprecationWarning), \
+                pytest.raises(ValueError, match="to_moments"):
+            SFVIAvgServer(prob, silos, {"m": jnp.asarray(0.1)},
+                          NoMoments(3).init(jax.random.PRNGKey(1)),
+                          lambda: sgd(0.05))
 
     def test_avg_adapter_matches_server(self):
         """Legacy SFVIAvgServer == compiled Server (sfvi_avg), bit for bit."""

@@ -198,6 +198,28 @@ class TestAsyncEngine:
         assert np.all(np.diff(h["sim_time"]) >= 0)
         assert exp.comm.sim_seconds == pytest.approx(h["sim_time"][-1])
 
+    def test_single_contribution_flush_invariant_to_decay(self):
+        """MeanAggregator denominator regression (the async path): with
+        buffer_size=1 every flush holds exactly one contribution, so the
+        staleness-decayed weighted MEAN must equal that contribution
+        regardless of the decay exponent — the old ``max(Σw, 1.0)``
+        clamp divided a weight-0.25 parameter upload by 1.0, silently
+        shrinking it 4× toward zero."""
+        cfg = dict(buffer_size=1, latency="lognormal", latency_sigma=1.0)
+        runs = []
+        for decay in (0.0, 5.0):
+            exp = build(_spec(Scenario(
+                algorithm="sfvi_avg",
+                async_cfg=AsyncConfig(staleness_decay=decay, **cfg)),
+                rounds=8))
+            h = exp.run()
+            # The schedule really produced stale (weight < 1) arrivals.
+            assert max(h["staleness"]) > 0.0
+            runs.append(exp)
+        for k in ("theta", "eta_G", "eta_L"):
+            _assert_trees_bit_equal(runs[0].server.state[k],
+                                    runs[1].server.state[k])
+
     def test_async_dp_int8_save_resume_bit_exact(self, tmp_path):
         """Async + DP + int8 spec: save -> resume reproduces the
         uninterrupted run bit-exactly, buffer state included

@@ -1,0 +1,301 @@
+"""Property tests for the first-class variational-family API.
+
+Mirrors the two-tier structure of ``test_aggregation_properties.py``:
+hypothesis explores the space adversarially where installed, seeded
+numpy sweeps keep the same invariants covered offline.
+
+Invariants, for EVERY registered family (LowRankGaussian included):
+  * ``unpack(pack(params)) == params`` bit for bit, and the packed
+    vector has exactly ``num_params`` float32 entries;
+  * ``log_prob`` matches an independent scipy multivariate-normal
+    golden evaluation of the family's (mean, covariance);
+  * ``entropy == -E[log q]`` (Monte-Carlo, sampled through ``sample``);
+  * ``from_moments(to_moments(p)) ≈ p`` wherever the moment bridge
+    exists (parameter space where the map is injective, moment space for
+    LowRankGaussian whose factor U is only determined up to rotation);
+  * the registry resolves every name, ``FamilySpec`` builds against it,
+    and capability flags replace the old isinstance/hasattr probes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.families import (
+    BatchedDiagGaussian,
+    CholeskyGaussian,
+    ConditionalGaussian,
+    DiagGaussian,
+    LowRankGaussian,
+)
+from repro.core.family import (
+    FAMILIES,
+    FamilySpec,
+    VariationalFamily,
+    build_family,
+    eps_shape,
+    family_names,
+    get_family,
+    is_conditional,
+    supports_moments,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+try:
+    from scipy import stats as scipy_stats
+
+    HAVE_SCIPY = True
+except ImportError:
+    HAVE_SCIPY = False
+
+
+# One representative instance per registered unconditional family.
+UNCONDITIONAL = [
+    DiagGaussian(4),
+    CholeskyGaussian(4),
+    LowRankGaussian(4, rank=2),
+    BatchedDiagGaussian(batch=3, dim=2),
+]
+ALL_FAMILIES = UNCONDITIONAL + [ConditionalGaussian(3, 2, use_chol=True)]
+
+_IDS = lambda f: type(f).__name__  # noqa: E731
+
+
+def _rand_params(fam, seed, scale=0.6):
+    """A generic, well-conditioned random parameter point for ``fam``."""
+    key = jax.random.PRNGKey(seed)
+    params = fam.init(key, mu_scale=1.0, log_sigma_init=-0.4)
+    out = {}
+    for i, (name, leaf) in enumerate(sorted(params.items())):
+        sub = jax.random.fold_in(key, 101 + i)
+        out[name] = leaf + scale * jax.random.normal(sub, leaf.shape)
+    return out
+
+
+def _dense_cov(fam, params):
+    """(mean, covariance) as dense arrays, family-agnostic."""
+    if isinstance(fam, (CholeskyGaussian, LowRankGaussian)):
+        return params["mu"], fam.covariance(params)
+    mu, sigma = fam.to_moments(params)
+    return mu.reshape(-1), jnp.diag(sigma.reshape(-1) ** 2)
+
+
+class TestPackUnpack:
+    @pytest.mark.parametrize("fam", ALL_FAMILIES, ids=_IDS)
+    def test_seeded_round_trip(self, fam):
+        for seed in range(10):
+            params = _rand_params(fam, seed)
+            vec = fam.pack(params)
+            assert vec.shape == (fam.num_params,)
+            assert vec.dtype == jnp.float32
+            back = fam.unpack(vec)
+            assert set(back) == set(params)
+            for k in params:
+                np.testing.assert_array_equal(
+                    np.asarray(params[k], np.float32), np.asarray(back[k]))
+
+    @pytest.mark.parametrize("fam", ALL_FAMILIES, ids=_IDS)
+    def test_pack_is_jittable(self, fam):
+        params = _rand_params(fam, 0)
+        vec = jax.jit(fam.pack)(params)
+        back = jax.jit(fam.unpack)(vec)
+        for k in params:
+            np.testing.assert_allclose(params[k], back[k], rtol=1e-6)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(0, 2**31 - 1),
+               st.sampled_from(range(len(ALL_FAMILIES))))
+        def test_hypothesis(self, seed, fam_i):
+            fam = ALL_FAMILIES[fam_i]
+            params = _rand_params(fam, seed)
+            back = fam.unpack(fam.pack(params))
+            for k in params:
+                np.testing.assert_array_equal(
+                    np.asarray(params[k], np.float32), np.asarray(back[k]))
+
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy not installed")
+class TestLogProbVsScipy:
+    @pytest.mark.parametrize(
+        "fam", [DiagGaussian(3), CholeskyGaussian(3), LowRankGaussian(3, 2)],
+        ids=_IDS)
+    def test_matches_scipy_mvn(self, fam):
+        for seed in range(5):
+            params = _rand_params(fam, seed)
+            mu, cov = _dense_cov(fam, params)
+            z = np.asarray(
+                fam.sample(params, jax.random.normal(
+                    jax.random.PRNGKey(seed + 77), eps_shape(fam))))
+            ref = scipy_stats.multivariate_normal.logpdf(
+                z, mean=np.asarray(mu), cov=np.asarray(cov))
+            got = float(fam.log_prob(params, jnp.asarray(z)))
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+    def test_batched_matches_scipy_per_row(self):
+        fam = BatchedDiagGaussian(batch=3, dim=2)
+        params = _rand_params(fam, 1)
+        z = fam.sample(params, jax.random.normal(
+            jax.random.PRNGKey(5), eps_shape(fam)))
+        ref = sum(
+            scipy_stats.multivariate_normal.logpdf(
+                np.asarray(z[i]),
+                mean=np.asarray(params["mu"][i]),
+                cov=np.diag(np.exp(2 * np.asarray(params["log_sigma"][i]))))
+            for i in range(3))
+        np.testing.assert_allclose(float(fam.log_prob(params, z)), ref,
+                                   rtol=1e-5)
+
+
+class TestEntropy:
+    @pytest.mark.parametrize("fam", UNCONDITIONAL, ids=_IDS)
+    def test_entropy_is_expected_neg_log_prob(self, fam):
+        """H[q] == −E_q[log q], checked by Monte-Carlo through sample."""
+        params = _rand_params(fam, 3, scale=0.3)
+        eps = jax.random.normal(
+            jax.random.PRNGKey(11), (120_000,) + eps_shape(fam))
+        lps = jax.vmap(
+            lambda e: fam.log_prob(params, fam.sample(params, e)))(eps)
+        mc = -float(jnp.mean(lps))
+        se = float(jnp.std(lps)) / np.sqrt(lps.shape[0])
+        ent = float(fam.entropy(params))
+        assert abs(mc - ent) < max(4.0 * se, 2e-3 * abs(ent)), (mc, ent, se)
+
+    def test_conditional_entropy_matches_mc(self):
+        fam = ConditionalGaussian(3, 2, use_coupling=True, use_chol=True)
+        params = _rand_params(fam, 4, scale=0.3)
+        z_G, mu_G = jnp.array([0.4, -0.2]), jnp.zeros(2)
+        eps = jax.random.normal(jax.random.PRNGKey(12), (120_000, 3))
+        lps = jax.vmap(lambda e: fam.log_prob(
+            params, fam.sample(params, z_G, mu_G, e), z_G, mu_G))(eps)
+        np.testing.assert_allclose(-float(jnp.mean(lps)),
+                                   float(fam.entropy(params)), rtol=1e-2)
+
+
+class TestMomentBridge:
+    @pytest.mark.parametrize(
+        "fam", [DiagGaussian(4), CholeskyGaussian(4),
+                BatchedDiagGaussian(batch=3, dim=2)], ids=_IDS)
+    def test_param_space_round_trip(self, fam):
+        """from_moments(to_moments(p)) ≈ p where the map is injective."""
+        for seed in range(5):
+            params = _rand_params(fam, seed)
+            back = fam.from_moments(*fam.to_moments(params))
+            for k in params:
+                np.testing.assert_allclose(params[k], back[k],
+                                           rtol=1e-4, atol=1e-5)
+
+    def test_lowrank_moment_space_round_trip(self):
+        """U is only identified up to right-rotation, so LowRankGaussian
+        round-trips in MOMENT space: Σ(from_moments(Σ)) ≈ Σ. The
+        alternating projection is linear-rate (from_moments docstring),
+        hence the looser tolerance than the exact diag/cholesky maps."""
+        fam = LowRankGaussian(5, rank=2)
+        for seed in range(5):
+            params = _rand_params(fam, seed)
+            mu, cov = fam.to_moments(params)
+            back = fam.from_moments(mu, cov)
+            mu2, cov2 = fam.to_moments(back)
+            np.testing.assert_allclose(mu, mu2, rtol=1e-6)
+            np.testing.assert_allclose(cov, cov2, rtol=2e-2, atol=5e-3)
+
+    def test_no_moments_raises(self):
+        fam = ConditionalGaussian(2, 2)
+        assert not supports_moments(fam)
+        with pytest.raises(NotImplementedError, match="no Gaussian moments"):
+            fam.to_moments(fam.init(jax.random.PRNGKey(0)))
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=20, deadline=None)
+        @given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+        def test_hypothesis_cholesky_round_trip(self, seed, dim):
+            fam = CholeskyGaussian(dim)
+            params = _rand_params(fam, seed)
+            back = fam.from_moments(*fam.to_moments(params))
+            for k in params:
+                np.testing.assert_allclose(params[k], back[k],
+                                           rtol=1e-3, atol=1e-4)
+
+
+class TestProtocolFlags:
+    def test_capability_flags(self):
+        assert not is_conditional(DiagGaussian(2))
+        assert is_conditional(ConditionalGaussian(2, 2))
+        assert supports_moments(CholeskyGaussian(2))
+        assert supports_moments(LowRankGaussian(3, 1))
+        assert DiagGaussian(2).moment_form == "diag"
+        assert LowRankGaussian(3, 1).moment_form == "full"
+
+    def test_eps_shapes(self):
+        assert eps_shape(DiagGaussian(5)) == (5,)
+        assert eps_shape(BatchedDiagGaussian(batch=3, dim=2)) == (3, 2)
+        assert eps_shape(LowRankGaussian(4, rank=2)) == (6,)  # dim + rank
+
+    def test_eps_shape_legacy_duck_type_fallback(self):
+        class Legacy:
+            batch, dim = 4, 3
+
+        assert eps_shape(Legacy()) == (4, 3)
+        assert not is_conditional(Legacy())
+
+    def test_batch_shape(self):
+        assert DiagGaussian(2).batch_shape == ()
+        assert BatchedDiagGaussian(batch=7, dim=2).batch_shape == (7,)
+
+    def test_sample_consumes_declared_eps_shape(self):
+        for fam in UNCONDITIONAL:
+            params = fam.init(jax.random.PRNGKey(0))
+            z = fam.sample(params, jnp.zeros(eps_shape(fam)))
+            assert z.shape == fam.batch_shape + (fam.dim,)
+
+
+class TestRegistryAndSpec:
+    def test_expected_names_registered(self):
+        names = family_names()
+        for name in ("diag", "cholesky", "lowrank", "conditional",
+                     "batched_diag"):
+            assert name in names, name
+        for name in names:
+            assert issubclass(FAMILIES[name], VariationalFamily)
+
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(KeyError, match="registered families"):
+            get_family("gumbel")
+
+    def test_family_spec_json_round_trip(self):
+        import json
+
+        spec = FamilySpec("lowrank", {"rank": 2})
+        d = json.loads(json.dumps(dataclasses.asdict(spec)))
+        assert FamilySpec.from_dict(d) == spec
+
+    def test_build_family_fills_model_dims(self):
+        fam = build_family(FamilySpec("cholesky"), dim=7)
+        assert isinstance(fam, CholeskyGaussian) and fam.dim == 7
+        lfam = build_family(FamilySpec("conditional"), dim=3, global_dim=5)
+        assert lfam.dim == 3 and lfam.global_dim == 5
+
+    def test_build_family_names_underivable_kwargs(self):
+        with pytest.raises(ValueError, match=r"batch.*FamilySpec.kwargs"):
+            build_family(FamilySpec("batched_diag"), dim=3)
+        fam = build_family(FamilySpec("batched_diag", {"batch": 4}), dim=3)
+        assert (fam.batch, fam.dim) == (4, 3)
+
+    def test_build_family_explicit_kwargs_win(self):
+        fam = build_family(FamilySpec("lowrank", {"rank": 3, "dim": 9}),
+                           dim=4)
+        assert (fam.dim, fam.rank) == (9, 3)
+
+    def test_lowrank_rejects_bad_rank(self):
+        with pytest.raises(ValueError, match="rank"):
+            LowRankGaussian(3, rank=4)

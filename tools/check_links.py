@@ -22,7 +22,14 @@ _EXTERNAL = re.compile(r"^[a-z]+://")
 
 def broken_links(root: pathlib.Path) -> list:
     """All dangling relative links under ``root`` (README + docs/)."""
-    docs = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    docs = [
+        root / "README.md",
+        # rglob so nested doc trees are covered; __pycache__ (and any
+        # other cache dir a stray interpreter run leaves behind) is
+        # never documentation — skip it explicitly.
+        *sorted(p for p in (root / "docs").rglob("*.md")
+                if "__pycache__" not in p.parts),
+    ]
     bad = []
     for md in docs:
         if not md.exists():
