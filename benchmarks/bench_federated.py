@@ -213,12 +213,13 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
 
     scenarios = {}
     yardsticks = []
-    for sc in SMOKE_SCENARIOS:
+
+    def _timed_row(sc, wire="flat"):
         exp = staged_experiment(
             cfg["model"], bundle, scenario=sc, num_silos=cfg["silos"],
             rounds=cfg["rounds"], local_steps=cfg["local_steps"],
             lr=cfg["lr"], seed=cfg["seed"],
-            model_kwargs=cfg["model_kwargs"])
+            model_kwargs=cfg["model_kwargs"], wire=wire)
         # Round 0 pays tracing + XLA compile; report it separately and
         # gate only the steady-state per-round time (compile latency on
         # shared CI runners is far noisier than the 25% gate). Every
@@ -239,7 +240,7 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
             ratios.append(dt / tick)
             yardsticks.append(tick)
         hist = exp.history
-        scenarios[sc.name] = {
+        return exp, {
             "elbo": float(hist["elbo"][-1]),
             "bytes_per_round": float(exp.comm.per_round),
             "s_per_round": statistics.median(per_round),
@@ -250,14 +251,28 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
                         if "epsilon" in hist else None),
         }
 
-    # Flat (J, P) wire vs the per-leaf legacy layout: same config, same
-    # bundle, both layouts timed back to back (median of per-round
-    # ratios against the interleaved yardstick, like the gated rows).
-    # Reported for visibility — not gated, legacy is a debug reference.
+    for sc in SMOKE_SCENARIOS:
+        _, scenarios[sc.name] = _timed_row(sc)
+
+    # The fused Pallas wire rides the same gate as every other row:
+    # identical scenario to the int8 row, wire="fused" — a slowdown in
+    # the kernels' interpret path (or a semantic drift moving the ELBO)
+    # fails CI like any other regression.
+    fused_sc = SMOKE_SCENARIOS[2]
+    _, scenarios[fused_sc.name + " [wire=fused]"] = _timed_row(
+        fused_sc, wire="fused")
+
+    # Wire layouts head to head: the flat (J, P) relayout vs the fused
+    # Pallas kernels vs the per-leaf legacy reference — same config,
+    # same bundle, timed back to back (median of per-round ratios
+    # against the interleaved yardstick, like the gated rows), plus the
+    # roofline terms of each compiled round (HBM bytes moved is what
+    # the fused kernels attack). Reported for visibility — the gated
+    # fused row above is what CI enforces.
     wire_compare = {}
     for sc in (SMOKE_SCENARIOS[1], SMOKE_SCENARIOS[2]):
-        per = {}
-        for layout in ("flat", "legacy"):
+        per, roofline = {}, {}
+        for layout in ("flat", "fused", "legacy"):
             exp = staged_experiment(
                 cfg["model"], bundle, scenario=sc, num_silos=cfg["silos"],
                 rounds=cfg["rounds"], local_steps=cfg["local_steps"],
@@ -272,8 +287,14 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
                 ratios.append((time.perf_counter() - t0) / tick)
                 yardsticks.append(tick)
             per[layout] = statistics.median(ratios)
+            roofline[layout] = exp.server.compiled_roofline(
+                sc.algorithm, cfg["local_steps"])
         wire_compare[sc.name] = {
-            **per, "flat_speedup": per["legacy"] / per["flat"]}
+            **per,
+            "flat_speedup": per["legacy"] / per["flat"],
+            "fused_speedup": per["flat"] / per["fused"],
+            "roofline": roofline,
+        }
 
     result = {
         "benchmark": "bench_federated-smoke",
@@ -292,13 +313,19 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
                "calibrated_round", "compile_s", "sim_seconds", "epsilon"],
     )
     print_table(
-        "wire layout: flat (J, P) vs legacy per-leaf (calibrated s/round)",
+        "wire layout: fused Pallas vs flat (J, P) vs legacy per-leaf "
+        "(calibrated s/round; MB = bytes accessed per compiled round)",
         [{"Scenario": name,
+          "wire=fused": round(r["fused"], 4),
           "wire=flat": round(r["flat"], 4),
           "wire=legacy": round(r["legacy"], 4),
-          "flat speedup": f"x{r['flat_speedup']:.2f}"}
+          "fused speedup": f"x{r['fused_speedup']:.2f}",
+          "flat speedup": f"x{r['flat_speedup']:.2f}",
+          "fused MB": round(r["roofline"]["fused"]["bytes_accessed"] / 1e6, 2),
+          "flat MB": round(r["roofline"]["flat"]["bytes_accessed"] / 1e6, 2)}
          for name, r in wire_compare.items()],
-        ["Scenario", "wire=flat", "wire=legacy", "flat speedup"],
+        ["Scenario", "wire=fused", "wire=flat", "wire=legacy",
+         "fused speedup", "flat speedup", "fused MB", "flat MB"],
     )
     if json_path:
         with open(json_path, "w") as f:

@@ -81,6 +81,7 @@ class TrimmedMeanAggregator:
         fractional weighting), so under the async engine staleness
         affects only WHICH silos enter the trim, not their weight.
         """
+        any_active = jnp.sum((mask > 0.0).astype(mask.dtype)) > 0.0
         n_active = jnp.maximum(jnp.sum((mask > 0.0).astype(mask.dtype)), 1.0)
         k = jnp.floor(self.trim_frac * n_active)
         k = jnp.minimum(k, jnp.floor((n_active - 1.0) / 2.0))
@@ -91,7 +92,10 @@ class TrimmedMeanAggregator:
             rank = jnp.arange(x.shape[0]).reshape(-1, *([1] * (x.ndim - 1)))
             keep = (rank >= k) & (rank < n_active - k)
             total = jnp.sum(jnp.where(keep, order, 0.0), axis=0)
-            return total / jnp.maximum(jnp.sum(keep, axis=0), 1)
+            mean = total / jnp.maximum(jnp.sum(keep, axis=0), 1)
+            # Zero active silos would average the +inf sentinel; return
+            # zeros instead, like MeanAggregator's zero-total guard.
+            return jnp.where(any_active, mean, jnp.zeros_like(mean))
 
         return jax.tree_util.tree_map(leaf, stacked)
 

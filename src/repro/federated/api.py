@@ -239,9 +239,11 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
     optimizers, aggregation, compression and the privacy policy from
     the scenario, and returns a ready-to-run :class:`Experiment`.
 
-    ``wire`` selects the silo→server wire layout (``"flat"`` — the
-    packed (J, P) path — or the per-leaf ``"legacy"`` reference; a
-    benchmark/debug knob, deliberately NOT part of the spec).
+    ``wire`` selects the silo→server wire layout: ``"flat"`` (the
+    packed (J, P) path), ``"fused"`` (the same layout driven by the
+    fused Pallas kernels of :mod:`repro.kernels.wire`), or the
+    per-leaf ``"legacy"`` reference — an execution knob, deliberately
+    NOT part of the spec.
     """
     from repro.federated.runtime import Server
     from repro.models.paper.registry import apply_family_spec, get_model
@@ -489,7 +491,8 @@ class Experiment:
 
     @classmethod
     def resume(cls, directory: str, spec: Optional[ExperimentSpec] = None,
-               step: Optional[int] = None, bundle=None) -> "Experiment":
+               step: Optional[int] = None, bundle=None,
+               wire: Optional[str] = None) -> "Experiment":
         """Rebuild from ``directory`` and restore the saved round state.
 
         Reads ``spec.json`` (unless ``spec`` overrides it), rebuilds the
@@ -499,6 +502,13 @@ class Experiment:
         the RDP ledger and the round index from the latest (or ``step``)
         checkpoint. Continuing with :meth:`run` reproduces the
         uninterrupted run bit-exactly.
+
+        ``wire`` overrides the checkpoint's recorded wire layout —
+        switching between ``"flat"`` and ``"fused"`` mid-run is safe
+        (the fused kernels replay the identical op sequence and DP
+        noise stream, so the continued trajectory is unchanged);
+        switching to/from ``"legacy"`` changes per-leaf DP fold-ins and
+        int8 scale granularity and will diverge under DP/compression.
         """
         if spec is None:
             spec = ExperimentSpec.load(os.path.join(directory, _SPEC_FILE))
@@ -512,7 +522,9 @@ class Experiment:
         # so resuming a wire='legacy' run as 'flat' would diverge).
         with open(cls._meta_path(directory, step)) as f:
             meta = json.load(f)
-        exp = build(spec, bundle=bundle, wire=meta.get("wire", "flat"))
+        exp = build(spec, bundle=bundle,
+                    wire=wire if wire is not None
+                    else meta.get("wire", "flat"))
 
         state = exp.server.state
         like = {k: state[k] for k in _SERVER_KEYS}

@@ -47,8 +47,14 @@ from repro.core.family import eps_shape as family_eps_shape
 from repro.core.family import supports_moments
 from repro.core.flatten import TreeSpec
 from repro.core.sfvi import SFVIProblem
-from repro.federated.aggregation import MeanAggregator, NoCompression
+from repro.federated.aggregation import (
+    Int8Compressor,
+    MeanAggregator,
+    NoCompression,
+    TrimmedMeanAggregator,
+)
 from repro.federated.metering import CommMeter, tree_bytes
+from repro.kernels import wire as wire_kernels
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.scheduler import RoundScheduler
 from repro.launch.mesh import make_silo_mesh
@@ -141,6 +147,58 @@ def _coalesced_all_gather(tree: PyTree, axis_name: str) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# ---------------------------------------------------------------------------
+# Fused-wire plumbing (wire="fused"): the upload pipeline and the server
+# reduction run as the Pallas kernels of repro.kernels.wire, applied to the
+# stacked (J, P) block AFTER the per-silo vmap instead of leaf-by-leaf
+# inside it. Semantics match the flat path exactly (same op sequence, same
+# PRNG stream); only the pass structure changes.
+# ---------------------------------------------------------------------------
+
+
+def _fused_keys(privacy, round_key, t, sids):
+    """(J, 2) per-row DP noise keys: fold_in(upload_key(rk, t, j), 0).
+
+    The trailing fold_in(·, 0) is ``PrivacyPolicy.noise``'s per-leaf
+    fold for the single flat leaf — precomputing it per row makes the
+    in-kernel draw bit-identical to the policy's stream.
+    """
+    if privacy is None or privacy.noise_multiplier <= 0.0:
+        return None
+    return jax.vmap(
+        lambda s: jax.random.fold_in(privacy.upload_key(round_key, t, s), 0)
+    )(sids)
+
+
+def _fused_ship(mat, mask_sh, keys, reference, privacy, comp, int8):
+    """Privatize + mask + encode a stacked (J, P) block in one fused pass."""
+    out = wire_kernels.fused_upload(
+        mat,
+        mask=mask_sh,
+        keys=keys,
+        reference=reference,
+        clip_norm=None if privacy is None else privacy.clip_norm,
+        noise_multiplier=0.0 if privacy is None else privacy.noise_multiplier,
+        quantize=int8,
+    )
+    if int8:
+        q, scales = out
+        return {"q": q, "scale": scales}
+    if type(comp) is NoCompression:
+        return out
+    # Custom codec: fall back to the per-silo encode on the fused output.
+    return jax.vmap(comp.encode)(out)
+
+
+def _fused_decode(enc, comp, int8):
+    """Gathered fused wire -> dequantized (J, P) float32 matrix."""
+    if int8:
+        return enc["q"].astype(jnp.float32) * enc["scale"][:, None]
+    if type(comp) is NoCompression:
+        return enc
+    return jax.vmap(comp.decode)(enc)
+
+
 class Server:
     """Round-based federation driver over a compiled multi-silo graph.
 
@@ -175,8 +233,14 @@ class Server:
         (:class:`~repro.core.flatten.TreeSpec`), so DP clip+noise,
         compression, the cross-silo gather and the aggregator all
         operate on a single (J, P) matrix — fewer HLO ops per round and
-        one int8 scale per silo instead of one per leaf. ``"legacy"``
-        keeps the per-leaf pytree wire (benchmark/debug reference).
+        one int8 scale per silo instead of one per leaf. ``"fused"``
+        keeps the flat layout but runs the upload pipeline (clip + DP
+        noise + mask + int8 quantize) and the server reduction as the
+        fused Pallas kernels of :mod:`repro.kernels.wire` — identical
+        semantics (bit-exact without DP/compression; the DP noise
+        stream is bit-identical by construction), fewer memory passes.
+        ``"legacy"`` keeps the per-leaf pytree wire (benchmark/debug
+        reference).
       privacy: optional :class:`~repro.federated.privacy.PrivacyPolicy`.
         When set, every silo upload is L2-clipped and Gaussian-noised
         *inside* the compiled round — before the compression hook and
@@ -241,8 +305,9 @@ class Server:
                 f"{type(problem.global_family).__name__}"
             )
         self.eta_mode = eta_mode
-        if wire not in ("flat", "legacy"):
-            raise ValueError(f"unknown wire layout {wire!r} (flat/legacy)")
+        if wire not in ("flat", "fused", "legacy"):
+            raise ValueError(
+                f"unknown wire layout {wire!r} (flat/fused/legacy)")
         self.wire = wire
 
         if num_obs is None:
@@ -344,7 +409,7 @@ class Server:
         instead of one per pytree leaf.
         """
         template = self.ship_template(algorithm)
-        if self.wire == "flat":
+        if self.wire in ("flat", "fused"):
             template = np.zeros((self.wire_spec(algorithm).dim,), np.float32)
         return self.compressor.wire_bytes(template)
 
@@ -379,6 +444,50 @@ class Server:
             ones,
         )
         return collective_bytes(fn.lower(*args).compile().as_text())
+
+    def compiled_roofline(
+        self, algorithm: str = "sfvi", local_steps: int = 1
+    ) -> Dict[str, float]:
+        """Roofline terms of the compiled round: FLOPs + bytes moved.
+
+        Lowers the jitted round function and reads XLA's
+        ``cost_analysis`` (per-partition FLOPs and HBM bytes accessed)
+        plus ``launch.roofline.collective_bytes`` on the optimized HLO.
+        The ``bytes_accessed`` term is what the fused wire kernels
+        attack: fewer memory passes over the (J, P) matrix per round.
+        """
+        from repro.launch.roofline import collective_bytes
+
+        fn = self._get_round(algorithm, local_steps)
+        mask_shape = ((local_steps, self.J_pad) if algorithm == "sfvi"
+                      else (self.J_pad,))
+        ones = jnp.ones(mask_shape, jnp.float32)
+        compiled = fn.lower(
+            self.state, self.data, jax.random.PRNGKey(0), ones, ones
+        ).compile()
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # jax < 0.5 wraps it per-program
+            ca = ca[0] if ca else {}
+        return {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "collective_bytes": float(
+                sum(collective_bytes(compiled.as_text()).values())),
+        }
+
+    def _fused_trim(self):
+        """Fused-reduction mode for the configured aggregator.
+
+        ``(None,)`` → fused weighted mean, ``(frac,)`` → fused trimmed
+        mean, ``None`` → aggregator not expressible as a fused kernel
+        (custom subclass): the fused wire falls back to
+        ``aggregator.combine`` on the dequantized matrix.
+        """
+        if type(self.aggregator) is MeanAggregator:
+            return (None,)
+        if type(self.aggregator) is TrimmedMeanAggregator:
+            return (float(self.aggregator.trim_frac),)
+        return None
 
     # -- the compiled round --------------------------------------------------
 
@@ -436,8 +545,13 @@ class Server:
         privacy = self.privacy
         # Flat wire: the whole upload is ONE (P,) f32 vector, so clip,
         # noise, quantization, the gather and the aggregation below all
-        # see a single array per silo ((J, P) once stacked).
-        wire = self.wire_spec("sfvi") if self.wire == "flat" else None
+        # see a single array per silo ((J, P) once stacked). The fused
+        # wire keeps the same layout but runs those stages as the Pallas
+        # kernels of repro.kernels.wire on the stacked block.
+        wire = self.wire_spec("sfvi") if self.wire != "legacy" else None
+        fused = self.wire == "fused"
+        int8 = type(comp) is Int8Compressor
+        trim = self._fused_trim()
 
         def body(theta, eta_G, opt_server, eta_L, opt_L,
                  data_sh, sids, n_j, masks_full, weights_full, round_key):
@@ -470,6 +584,10 @@ class Server:
                     ship = {"g_theta": g_th, "g_eta": g_eta}
                     if wire is not None:
                         ship = wire.pack(ship)
+                    if fused:
+                        # Privatize/mask/quantize run as ONE fused pass
+                        # over the stacked (J, P) block after the vmap.
+                        return eta_Lj, opt_Lj, ship, hatLj * m_j
                     if privacy is not None:
                         # Clip + noise BEFORE compression and the gather:
                         # the wire never carries a raw silo gradient.
@@ -492,11 +610,27 @@ class Server:
                 eta_L, opt_L, enc, hatL = jax.vmap(per_silo)(
                     eta_L, opt_L, data_sh, sids, mask_sh
                 )
+                if fused:
+                    enc = _fused_ship(
+                        enc, mask_sh, _fused_keys(privacy, round_key, t, sids),
+                        None, privacy, comp, int8)
                 enc = _coalesced_all_gather(enc, "silo")
-                shipped = jax.vmap(comp.decode)(enc)  # (J, P) | (J, ...) per leaf
                 hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
 
-                mean_g = agg.combine(shipped, w_full)
+                if fused and int8 and trim is not None:
+                    # Dequantize inside the reduction kernel: the server
+                    # never materializes the dequantized (J, P) matrix.
+                    mean_g = wire_kernels.fused_combine(
+                        enc["q"], w_full, scales=enc["scale"],
+                        trim_frac=trim[0])
+                elif fused:
+                    mat = _fused_decode(enc, comp, int8)
+                    mean_g = (wire_kernels.fused_combine(
+                        mat, w_full, trim_frac=trim[0])
+                        if trim is not None else agg.combine(mat, w_full))
+                else:
+                    shipped = jax.vmap(comp.decode)(enc)  # (J, P) | per leaf
+                    mean_g = agg.combine(shipped, w_full)
                 g_sum = jax.tree_util.tree_map(lambda x: x * float(J), mean_g)
                 if wire is not None:
                     g_sum = wire.unpack(g_sum)
@@ -528,7 +662,10 @@ class Server:
         has_local = self._has_local
         eta_mode = self.eta_mode
         privacy = self.privacy
-        wire = self.wire_spec("sfvi_avg") if self.wire == "flat" else None
+        wire = self.wire_spec("sfvi_avg") if self.wire != "legacy" else None
+        fused = self.wire == "fused"
+        int8 = type(comp) is Int8Compressor
+        trim = self._fused_trim()
         # N = Σ_j N_j over the REAL federation — the padded tail repeats
         # silo 0's count purely to keep the dummy silos' per-silo scale
         # finite (their contribution is masked out regardless).
@@ -588,6 +725,11 @@ class Server:
                 ship = {"theta": th, "eta_G": eg}
                 if wire is not None:
                     ship = wire.pack(ship)
+                if fused:
+                    # Delta-clip/noise vs the broadcast, the broadcast
+                    # fallback for non-participants, and quantization all
+                    # run as ONE fused pass on the stacked block.
+                    return eta_Lj, opt_Lj, ship, elbos * m_j
                 if privacy is not None:
                     # Parameter upload: the private quantity is the delta
                     # from the round's broadcast (θ, η_G), which the server
@@ -611,15 +753,31 @@ class Server:
             eta_L, opt_L, enc, elbos = jax.vmap(per_silo)(
                 eta_L, opt_L, data_sh, sids, mask_sh, n_j
             )
+            if fused:
+                enc = _fused_ship(
+                    enc, mask_sh, _fused_keys(privacy, round_key, 0, sids),
+                    broadcast, privacy, comp, int8)
             enc = _coalesced_all_gather(enc, "silo")
-            shipped = jax.vmap(comp.decode)(enc)  # (J, P) | stacked pytree
             elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
 
-            if wire is not None:
+            if fused:
+                # The barycenter needs every silo's η_G anyway, so the
+                # dequantized matrix is materialized here (unlike SFVI);
+                # the reduction itself still runs as the fused kernel.
+                shipped = _fused_decode(enc, comp, int8)
+                vec = (wire_kernels.fused_combine(
+                    shipped, w_full, trim_frac=trim[0])
+                    if trim is not None else agg.combine(shipped, w_full))
+                merged = wire.unpack(vec)
+                eta_shipped = jax.vmap(lambda v: wire.unpack(v)["eta_G"])(
+                    shipped)
+            elif wire is not None:
+                shipped = jax.vmap(comp.decode)(enc)  # (J, P)
                 merged = wire.unpack(agg.combine(shipped, w_full))
                 eta_shipped = jax.vmap(lambda v: wire.unpack(v)["eta_G"])(
                     shipped)
             else:
+                shipped = jax.vmap(comp.decode)(enc)  # stacked pytree
                 merged = {k: agg.combine(v, w_full)
                           for k, v in shipped.items()}
                 eta_shipped = shipped["eta_G"]
@@ -630,9 +788,15 @@ class Server:
                 # W2 barycenter in moment space, generic over the
                 # family's moment bridge: analytic (aggregator-
                 # robustified) for diag-form families, the in-graph
-                # Newton–Schulz fixed point for full-covariance ones.
+                # Newton–Schulz fixed point for full-covariance ones
+                # (the fused wire plugs in the fused-step kernel — same
+                # iteration, one kernel per step instead of 3 matmuls).
+                sqrtm_kw = (
+                    {"sqrtm": wire_kernels.sqrtm_newton_schulz_fused}
+                    if fused else {})
                 eta_new = family_barycenter(
-                    problem.global_family, eta_shipped, w_full, agg)
+                    problem.global_family, eta_shipped, w_full, agg,
+                    **sqrtm_kw)
             return theta_new, eta_new, opt_server, eta_L, opt_L, elbo_t
 
         return body

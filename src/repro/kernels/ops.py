@@ -3,7 +3,10 @@
 On this CPU container the kernels run in ``interpret=True`` mode (the
 kernel body executes in Python per grid cell — bit-accurate to the TPU
 lowering's semantics); on a TPU runtime ``interpret=False`` compiles to
-Mosaic. ``INTERPRET`` flips the default globally.
+Mosaic. The default is resolved LAZILY per call (``interpret_default``)
+so importing this module never initializes the XLA backend — tests that
+force host device counts (``--xla_force_host_platform_device_count``)
+must be able to import kernels before touching a device.
 """
 from __future__ import annotations
 
@@ -13,12 +16,24 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import wire as _wire
 from repro.kernels.attention import flash_attention_bhsd
 from repro.kernels.gla import gla_bhsd
 from repro.kernels.reparam import reparam_stl as _reparam_stl
 from repro.kernels.rmsnorm import rmsnorm_rows
 
-INTERPRET = jax.default_backend() == "cpu"
+
+def interpret_default() -> bool:
+    """True when the kernels must run in interpret mode (non-TPU host)."""
+    return jax.default_backend() == "cpu"
+
+
+def __getattr__(name: str):
+    # Legacy alias: ``ops.INTERPRET`` used to be computed at import time,
+    # which initialized the backend as a side effect of the import.
+    if name == "INTERPRET":
+        return interpret_default()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "q_offset", "block_q",
@@ -45,7 +60,7 @@ def flash_attention(
     to the (B, H, S, hd) kernel. Reference implementation:
     ``kernels/ref.py::flash_attention_ref``.
     """
-    interpret = INTERPRET if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
     block_q = min(block_q, _round_up(Sq, 8))
@@ -83,7 +98,7 @@ def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
     divides the row count. Reference implementation:
     ``kernels/ref.py::rmsnorm_ref``.
     """
-    interpret = INTERPRET if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
     lead = x.shape[:-1]
     D = x.shape[-1]
     R = 1
@@ -109,7 +124,7 @@ def reparam_stl(mu, log_sigma, eps, block: int = 4096,
     a f32 scalar. Differentiable (fused custom VJP). Reference
     implementation: ``kernels/ref.py::reparam_stl_ref``.
     """
-    interpret = INTERPRET if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
     return _reparam_stl(mu, log_sigma, eps, block=block, interpret=interpret)
 
 
@@ -125,7 +140,7 @@ def gla(q, k, v, log_a, chunk: int = 128, interpret: Optional[bool] = None):
     layout to the (B, H, S, ·) kernel. Reference implementation:
     ``kernels/ref.py::gla_chunk_ref``.
     """
-    interpret = INTERPRET if interpret is None else interpret
+    interpret = interpret_default() if interpret is None else interpret
     B, S, H, dk = q.shape
     chunk = min(chunk, _round_up(S, 8))
     pad = (-S) % chunk
@@ -141,3 +156,73 @@ def gla(q, k, v, log_a, chunk: int = 128, interpret: Optional[bool] = None):
         at = jnp.pad(at, ((0, 0), (0, 0), (0, pad)))
     out = gla_bhsd(qt, kt, vt, at, chunk=chunk, interpret=interpret)
     return jnp.moveaxis(out[:, :, :S], 2, 1)
+
+
+@partial(jax.jit, static_argnames=("clip_norm", "noise_multiplier", "quantize",
+                                   "block_rows", "interpret"))
+def wire_upload(
+    x: jnp.ndarray,  # (J, P) stacked wire matrix
+    mask: jnp.ndarray,  # (J,) participation mask
+    keys: Optional[jnp.ndarray] = None,  # (J, 2) uint32 per-row noise keys
+    reference: Optional[jnp.ndarray] = None,  # (P,) broadcast row
+    clip_norm: Optional[float] = None,
+    noise_multiplier: float = 0.0,
+    quantize: bool = False,
+    block_rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Fused per-silo upload: clip + DP noise + mask + int8 quantize.
+
+    One pass over the (J, P) wire matrix; noise drawn in-kernel from the
+    per-row ``keys`` (pass ``fold_in(policy.upload_key(rk, t, j), 0)``
+    per row for bit-exactness with ``PrivacyPolicy``'s stream). Returns
+    the privatized f32 matrix, or ``(q, scales)`` with one scale per
+    silo row when ``quantize``. Reference implementation:
+    ``kernels/ref.py::wire_upload_ref``.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    return _wire.fused_upload(
+        x, mask=mask, keys=keys, reference=reference, clip_norm=clip_norm,
+        noise_multiplier=noise_multiplier, quantize=quantize,
+        block_rows=block_rows, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("trim_frac", "block_cols", "interpret"))
+def wire_combine(
+    x: jnp.ndarray,  # (J, P) gathered wire matrix (f32, or int8 + scales)
+    weights: jnp.ndarray,  # (J,) 0/1 or fractional async weights
+    scales: Optional[jnp.ndarray] = None,  # (J,) int8 scales (fused dequant)
+    trim_frac: Optional[float] = None,
+    block_cols: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused masked/weighted (trimmed-)mean over the silo axis.
+
+    ``trim_frac=None`` is ``MeanAggregator`` semantics, a float is
+    ``TrimmedMeanAggregator`` semantics; int8 payloads dequantize inside
+    the same pass when ``scales`` is given. Returns the (P,) combined
+    row. Reference implementations:
+    ``kernels/ref.py::masked_weighted_mean_ref`` /
+    ``masked_trimmed_mean_ref``.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    return _wire.fused_combine(
+        x, weights, scales=scales, trim_frac=trim_frac,
+        block_cols=block_cols, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("num_iters", "interpret"))
+def sqrtm_ns(mat: jnp.ndarray, num_iters: int = 25,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """PSD matrix sqrt via the fused Newton–Schulz step kernel.
+
+    Shapes: ``mat`` is (d, d) symmetric PSD; returns (d, d) in
+    ``mat.dtype``. Same normalization/iteration as
+    ``core.barycenter.sqrtm_newton_schulz``. Reference implementation:
+    ``kernels/ref.py::newton_schulz_sqrtm_ref``.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    return _wire.sqrtm_newton_schulz_fused(mat, num_iters=num_iters,
+                                           interpret=interpret)

@@ -59,6 +59,111 @@ def reparam_stl_ref(mu: jnp.ndarray, log_sigma: jnp.ndarray, eps: jnp.ndarray):
     return z, lq
 
 
+def wire_upload_ref(
+    x: jnp.ndarray,  # (J, P) stacked wire matrix
+    *,
+    mask: jnp.ndarray,  # (J,) participation mask
+    keys: Optional[jnp.ndarray] = None,  # (J, 2) per-row noise keys
+    reference: Optional[jnp.ndarray] = None,  # (P,) public broadcast row
+    clip_norm: Optional[float] = None,
+    noise_multiplier: float = 0.0,
+    quantize: bool = False,
+):
+    """Oracle for the fused upload kernel (``kernels/wire.py``).
+
+    Per silo row: (delta from reference →) L2 clip → Gaussian noise from
+    the row's folded key (the exact ``PrivacyPolicy`` stream) → add the
+    reference back → participation-mask select (reference or zeros
+    fallback) → optional symmetric int8 quantization with one scale per
+    row. Written as the plain per-stage pipeline; returns the float
+    matrix, or ``(q, scales)`` when ``quantize``.
+    """
+    x = x.astype(jnp.float32)
+    y = x
+    if clip_norm is not None:
+        d = x - reference[None, :] if reference is not None else x
+        norm = jnp.sqrt(jnp.sum(jnp.square(d), axis=1, keepdims=True))
+        factor = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+        d = d * factor
+        if noise_multiplier > 0.0:
+            std = noise_multiplier * clip_norm
+            noise = jax.vmap(
+                lambda k: jax.random.normal(k, (x.shape[1],), jnp.float32)
+            )(keys)
+            d = d + std * noise
+        y = reference[None, :] + d if reference is not None else d
+    fallback = (reference[None, :] if reference is not None
+                else jnp.zeros_like(y))
+    y = jnp.where(mask[:, None] > 0.5, y, fallback)
+    if not quantize:
+        return y
+    scale = jnp.max(jnp.abs(y), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(y / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def masked_weighted_mean_ref(x: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused combine kernel, mean mode.
+
+    ``MeanAggregator`` semantics on a (J, P) matrix: weighted sum over
+    silos divided by the weight total, guarding ONLY exact zero (so
+    fractional async weights summing below 1 normalize correctly).
+    """
+    w = weights.astype(jnp.float32)
+    total = jnp.sum(w)
+    denom = jnp.where(total > 0.0, total, 1.0)
+    return jnp.sum(w[:, None] * x.astype(jnp.float32), axis=0) / denom
+
+
+def masked_trimmed_mean_ref(
+    x: jnp.ndarray, weights: jnp.ndarray, trim_frac: float
+) -> jnp.ndarray:
+    """Oracle for the fused combine kernel, trimmed-mean mode.
+
+    ``TrimmedMeanAggregator`` semantics: silos with weight > 0 are
+    active; per coordinate, sort actives (inactives as a +inf sentinel),
+    drop the k = min(floor(tf·n), floor((n−1)/2)) smallest and largest
+    ranks, average the survivors. Rank statistics ignore the weight
+    magnitudes (a stale arrival is one vote, not a fractional one); zero
+    active silos return zeros (never the sentinel).
+    """
+    x = x.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    any_active = jnp.sum((w > 0.0).astype(jnp.float32)) > 0.0
+    n_active = jnp.maximum(jnp.sum((w > 0.0).astype(jnp.float32)), 1.0)
+    k = jnp.floor(trim_frac * n_active)
+    k = jnp.minimum(k, jnp.floor((n_active - 1.0) / 2.0))
+    order = jnp.sort(jnp.where(w[:, None] > 0.0, x, jnp.inf), axis=0)
+    rank = jnp.arange(x.shape[0]).reshape(-1, 1)
+    keep = (rank >= k) & (rank < n_active - k)
+    total = jnp.sum(jnp.where(keep, order, 0.0), axis=0)
+    mean = total / jnp.maximum(jnp.sum(keep, axis=0), 1)
+    return jnp.where(any_active, mean, jnp.zeros_like(mean))
+
+
+def int8_rows_dequant_ref(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the in-kernel dequantize: q·scale per row, in f32."""
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+
+
+def newton_schulz_sqrtm_ref(mat: jnp.ndarray, num_iters: int = 25) -> jnp.ndarray:
+    """Oracle for the fused Newton–Schulz sqrt (== core.barycenter's).
+
+    Frobenius-normalize, iterate t = ½(3I − zy); y←yt, z←tz, rescale.
+    Kept here (dependency-free) so kernel tests need no federated/core
+    imports; ``core.barycenter.sqrtm_newton_schulz`` is the live copy.
+    """
+    dim = mat.shape[-1]
+    norm = jnp.sqrt(jnp.sum(mat * mat)) + 1e-12
+    y = mat / norm
+    z = jnp.eye(dim, dtype=mat.dtype)
+    for _ in range(num_iters):
+        t = 0.5 * (3.0 * jnp.eye(dim, dtype=mat.dtype) - z @ y)
+        y = y @ t
+        z = t @ z
+    return y * jnp.sqrt(norm)
+
+
 def gla_chunk_ref(q, k, v, log_a):
     """One gated-linear-attention chunk, exact recurrence (no chunking).
 

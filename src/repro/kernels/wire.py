@@ -1,0 +1,347 @@
+"""Fused Pallas kernels for the federated (J, P) wire hot path.
+
+PR 5's flat wire format turned each round's upload path into a dense
+matrix pipeline over the stacked silo uploads:
+
+    L2-norm -> clip -> Gaussian noise -> int8 quantize   (per silo row)
+    gather  -> dequantize -> (trimmed-)mean              (per column)
+
+plus, for full-covariance barycenter merges, a Newton–Schulz matrix
+square root (the most FLOP-dense per-round loop). Each stage is a
+separate XLA op on the ``wire="flat"`` path; the kernels here fuse them
+so ``Server(wire="fused")`` reads each operand from memory once:
+
+  * :func:`fused_upload` — one pass per silo row over the ``(J, P)``
+    wire matrix: delta-from-broadcast (SFVI-Avg), L2 clip, Gaussian
+    noise (drawn in-kernel from per-row folded keys, bit-identical to
+    ``federated.privacy.PrivacyPolicy``'s stream), participation-mask
+    select, and symmetric int8 quantization with ONE scale per row.
+  * :func:`fused_combine` — masked/weighted (trimmed-)mean reduction
+    over the gathered ``(J, P)`` matrix, accepting the async engine's
+    fractional staleness weights, with optional in-kernel int8
+    dequantize so the server never materializes the dequantized matrix.
+  * :func:`newton_schulz_step` / :func:`sqrtm_newton_schulz_fused` —
+    one fused Newton–Schulz iteration (three chained matmuls per step)
+    for the full-covariance barycenter fixed point.
+
+Every kernel has a pure-jnp oracle in :mod:`repro.kernels.ref`
+(``wire_upload_ref`` / ``masked_weighted_mean_ref`` /
+``masked_trimmed_mean_ref`` / ``newton_schulz_sqrtm_ref``) and the fused
+pipeline is property-tested against both the oracles and the live
+``PrivacyPolicy`` / aggregation objects (``tests/test_wire_kernels.py``),
+so the fusion can never silently change what is transmitted: the DP
+accountant's soundness contract (Mironov et al., 2019) is a statement
+about the bytes on the wire, and those must be bit-identical across
+``wire="flat"`` and ``wire="fused"``.
+
+Portability: on this CPU container the kernels run in ``interpret=True``
+mode (grid cells execute as traced JAX ops — semantically identical to
+the Mosaic lowering's grid/BlockSpec behaviour). The in-kernel noise
+draw uses the threefry PRNG (``jax.random.normal`` on the per-row folded
+key) so it is bit-exact with the host policy's stream; a Mosaic TPU
+lowering would swap it for ``pltpu.prng_random_bits`` (a *different*
+stream) and is deliberately out of scope — ``wire="fused"`` therefore
+requires interpret mode off-TPU and documents the stream contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    """Resolve the interpret flag LAZILY (never at import time).
+
+    Querying ``jax.default_backend()`` at import initializes the XLA
+    backend, which locks the device count before test subprocesses can
+    set ``--xla_force_host_platform_device_count``; resolving per call
+    keeps `import repro.kernels.wire` side-effect free.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() == "cpu"
+
+
+def _divisor_block(n: int, block: Optional[int]) -> int:
+    """Largest power-of-two-ish block <= ``block`` that divides ``n``."""
+    b = n if block is None else min(block, max(n, 1))
+    while n % b:
+        b //= 2
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: per-row clip + noise + mask-select + int8 quantize (the upload)
+# ---------------------------------------------------------------------------
+
+
+def _upload_kernel(x_ref, mask_ref, key_ref, ref_ref, *out_refs,
+                   clip_norm, noise_std, quantize, has_ref):
+    """One pass over a (R, P) row block of the wire matrix.
+
+    Stages (each optional, all fused):
+      1. delta from the broadcast reference row (SFVI-Avg parameter
+         uploads — the private quantity is the update, not the value);
+      2. L2 clip of each row to ``clip_norm`` (the DP sensitivity bound);
+      3. additive Gaussian noise, std ``noise_std``, drawn from the
+         row's folded threefry key — the SAME primitive chain as
+         ``PrivacyPolicy.noise``, so the stream is bit-identical;
+      4. add the reference back (wire stays a parameter row);
+      5. participation mask: inactive rows ship the data-independent
+         fallback (the reference, or zeros) — the subsampling-
+         amplification contract on the wire;
+      6. symmetric int8 quantization, ONE scale per row (what
+         ``Int8Compressor`` pays per leaf, and the flat wire per silo).
+    """
+    x = x_ref[...].astype(jnp.float32)        # (R, P)
+    m = mask_ref[...]                          # (R,)
+    ref = ref_ref[...].astype(jnp.float32) if has_ref else None  # (1, P)
+    y = x
+    if clip_norm is not None:
+        d = x - ref if has_ref else x
+        # Exactly PrivacyPolicy.clip: norm -> min(1, C/max(norm, eps)).
+        norm = jnp.sqrt(jnp.sum(jnp.square(d), axis=1, keepdims=True))
+        factor = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+        d = d * factor
+        if noise_std > 0.0:
+            keys = key_ref[...]                # (R, 2) raw threefry words
+            noise = jax.vmap(
+                lambda k: jax.random.normal(k, (d.shape[1],), jnp.float32)
+            )(keys)
+            d = d + noise_std * noise
+        y = ref + d if has_ref else d
+    fallback = ref if has_ref else jnp.zeros_like(y)
+    y = jnp.where(m[:, None] > 0.5, y, fallback)
+    if quantize:
+        scale = jnp.max(jnp.abs(y), axis=1) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(y / scale[:, None]), -127, 127)
+        out_refs[0][...] = q.astype(jnp.int8)
+        out_refs[1][...] = scale.astype(jnp.float32)
+    else:
+        out_refs[0][...] = y
+
+
+def fused_upload(
+    x: jnp.ndarray,  # (J, P) stacked wire matrix, one row per silo
+    *,
+    mask: jnp.ndarray,  # (J,) participation mask (0/1)
+    keys: Optional[jnp.ndarray] = None,  # (J, 2) uint32 per-row noise keys
+    reference: Optional[jnp.ndarray] = None,  # (P,) broadcast row (SFVI-Avg)
+    clip_norm: Optional[float] = None,
+    noise_multiplier: float = 0.0,
+    quantize: bool = False,
+    block_rows: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Fused clip + noise + mask + int8 quantize over the wire matrix.
+
+    Shapes: ``x`` is the stacked (J, P) float32 wire matrix; ``mask``
+    is (J,); ``keys`` (required when ``noise_multiplier > 0``) is the
+    (J, 2) uint32 matrix of per-row noise keys — for bit-exactness with
+    the policy stream pass ``fold_in(policy.upload_key(rk, t, j), 0)``
+    per row (the single-leaf fold of ``PrivacyPolicy.noise``);
+    ``reference`` is the (P,) public broadcast row for parameter
+    uploads. Returns the privatized (J, P) float32 matrix, or a
+    ``(q, scales)`` pair ((J, P) int8 + (J,) float32 — one scale per
+    row) when ``quantize``. Reference implementation:
+    ``kernels/ref.py::wire_upload_ref``.
+    """
+    interpret = _interpret_default(interpret)
+    J, P = x.shape
+    if noise_multiplier > 0.0 and clip_norm is None:
+        raise ValueError("noise_multiplier > 0 requires clip_norm")
+    if noise_multiplier > 0.0 and keys is None:
+        raise ValueError("noise_multiplier > 0 requires per-row keys")
+    br = _divisor_block(J, block_rows)
+    if keys is None:
+        keys = jnp.zeros((J, 2), jnp.uint32)
+    has_ref = reference is not None
+    ref2 = (reference.reshape(1, P) if has_ref
+            else jnp.zeros((1, 1), jnp.float32))
+    noise_std = (float(noise_multiplier) * float(clip_norm)
+                 if clip_norm is not None else 0.0)
+    kernel = functools.partial(
+        _upload_kernel,
+        clip_norm=None if clip_norm is None else float(clip_norm),
+        noise_std=noise_std, quantize=quantize, has_ref=has_ref,
+    )
+    out_specs = [pl.BlockSpec((br, P), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((J, P),
+                                      jnp.int8 if quantize else jnp.float32)]
+    if quantize:
+        out_specs.append(pl.BlockSpec((br,), lambda i: (i,)))
+        out_shape.append(jax.ShapeDtypeStruct((J,), jnp.float32))
+    out = pl.pallas_call(
+        kernel,
+        grid=(J // br,),
+        in_specs=[
+            pl.BlockSpec((br, P), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, 2), lambda i: (i, 0)),
+            pl.BlockSpec(ref2.shape, lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, mask.astype(jnp.float32), keys, ref2)
+    return (out[0], out[1]) if quantize else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: masked/weighted (trimmed-)mean reduction over (J, P)
+# ---------------------------------------------------------------------------
+
+
+def _combine_kernel(x_ref, w_ref, s_ref, o_ref, *, trim_frac, dequant):
+    """Weighted mean / trimmed mean over the silo axis of a column block.
+
+    Mirrors ``MeanAggregator.combine`` / ``TrimmedMeanAggregator.combine``
+    exactly (including the only-exact-zero denominator guard that keeps
+    fractional async weights summing below 1 from shrinking parameter
+    aggregates, and the +inf-sentinel rank masking of the trim), with
+    the int8 dequantize fused in so the server never materializes the
+    dequantized (J, P) float matrix.
+    """
+    x = x_ref[...]                             # (J, bp)
+    if dequant:
+        x = x.astype(jnp.float32) * s_ref[...][:, None]
+    w = w_ref[...]                             # (J,)
+    if trim_frac is None:
+        total = jnp.sum(w)
+        denom = jnp.where(total > 0.0, total, 1.0)
+        o_ref[...] = jnp.sum(w[:, None] * x, axis=0) / denom
+        return
+    any_active = jnp.sum((w > 0.0).astype(w.dtype)) > 0.0
+    n_active = jnp.maximum(jnp.sum((w > 0.0).astype(w.dtype)), 1.0)
+    k = jnp.floor(trim_frac * n_active)
+    k = jnp.minimum(k, jnp.floor((n_active - 1.0) / 2.0))
+    m = w[:, None] > 0.0
+    order = jnp.sort(jnp.where(m, x, jnp.inf), axis=0)
+    rank = jnp.arange(x.shape[0]).reshape(-1, 1)
+    keep = (rank >= k) & (rank < n_active - k)
+    total = jnp.sum(jnp.where(keep, order, 0.0), axis=0)
+    mean = total / jnp.maximum(jnp.sum(keep, axis=0), 1)
+    # Zero active silos would average the +inf sentinel; return zeros,
+    # exactly like TrimmedMeanAggregator's guard.
+    o_ref[...] = jnp.where(any_active, mean, jnp.zeros_like(mean))
+
+
+def fused_combine(
+    x: jnp.ndarray,  # (J, P) gathered wire matrix (f32, or int8 with scales)
+    weights: jnp.ndarray,  # (J,) aggregation weights (0/1 or fractional)
+    *,
+    scales: Optional[jnp.ndarray] = None,  # (J,) int8 scales -> fused dequant
+    trim_frac: Optional[float] = None,
+    block_cols: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused masked/weighted (trimmed-)mean over the silo axis.
+
+    Shapes: ``x`` is the gathered (J, P) matrix — float32, or int8 with
+    the (J,) per-row ``scales`` to fuse the dequantize into the same
+    pass; ``weights`` is (J,) and may be fractional (the async engine's
+    staleness decay). ``trim_frac=None`` computes the weighted mean
+    (``MeanAggregator`` semantics); a float computes the coordinate-wise
+    trimmed mean over silos with weight > 0 (``TrimmedMeanAggregator``
+    semantics — rank statistics ignore the weight magnitudes). Returns
+    the (P,) combined row. Reference implementations:
+    ``kernels/ref.py::masked_weighted_mean_ref`` /
+    ``masked_trimmed_mean_ref``.
+    """
+    interpret = _interpret_default(interpret)
+    J, P = x.shape
+    dequant = scales is not None
+    if dequant and x.dtype != jnp.int8:
+        raise ValueError(f"scales given but payload dtype is {x.dtype}")
+    bp = _divisor_block(P, block_cols)
+    kernel = functools.partial(
+        _combine_kernel,
+        trim_frac=None if trim_frac is None else float(trim_frac),
+        dequant=dequant,
+    )
+    if scales is None:
+        scales = jnp.zeros((J,), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(P // bp,),
+        in_specs=[
+            pl.BlockSpec((J, bp), lambda i: (0, i)),
+            pl.BlockSpec((J,), lambda i: (0,)),
+            pl.BlockSpec((J,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
+        interpret=interpret,
+    )(x, weights.astype(jnp.float32), scales.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused Newton–Schulz iteration step (barycenter matrix sqrt)
+# ---------------------------------------------------------------------------
+
+
+def _ns_step_kernel(y_ref, z_ref, yo_ref, zo_ref):
+    """One Newton–Schulz step: t = ½(3I − zy); y←yt, z←tz — fused.
+
+    Three chained (d, d) matmuls per step; fusing them keeps t resident
+    instead of round-tripping it to memory between the matmuls.
+    """
+    y = y_ref[...]
+    z = z_ref[...]
+    eye3 = 3.0 * jnp.eye(y.shape[-1], dtype=y.dtype)
+    t = 0.5 * (eye3 - z @ y)
+    yo_ref[...] = y @ t
+    zo_ref[...] = t @ z
+
+
+def newton_schulz_step(
+    y: jnp.ndarray, z: jnp.ndarray, interpret: Optional[bool] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused single Newton–Schulz iteration on (d, d) operands.
+
+    Returns ``(y @ t, t @ z)`` with ``t = 0.5 * (3I - z @ y)`` computed
+    once in-kernel. Semantics identical to the loop body of
+    ``core.barycenter.sqrtm_newton_schulz`` (the pure-jnp oracle is
+    ``kernels/ref.py::newton_schulz_sqrtm_ref``).
+    """
+    interpret = _interpret_default(interpret)
+    d = y.shape[-1]
+    spec = pl.BlockSpec((d, d), lambda: (0, 0))
+    yo, zo = pl.pallas_call(
+        _ns_step_kernel,
+        grid=(),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((d, d), y.dtype),
+                   jax.ShapeDtypeStruct((d, d), z.dtype)],
+        interpret=interpret,
+    )(y, z)
+    return yo, zo
+
+
+def sqrtm_newton_schulz_fused(
+    mat: jnp.ndarray, num_iters: int = 25, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    """PSD matrix square root via the fused Newton–Schulz step kernel.
+
+    Drop-in for ``core.barycenter.sqrtm_newton_schulz`` (same
+    normalization, same iteration, same ``num_iters`` knob — the
+    ``family_barycenter`` signature probe forwards ``sqrtm_iters`` to
+    it); each iteration is one fused kernel instead of three separate
+    matmul ops. Matches the jnp backend bit-for-bit in interpret mode.
+    """
+    interpret = _interpret_default(interpret)
+    dim = mat.shape[-1]
+    norm = jnp.sqrt(jnp.sum(mat * mat)) + 1e-12
+    y = mat / norm
+    z = jnp.eye(dim, dtype=mat.dtype)
+
+    def body(_, carry):
+        return newton_schulz_step(*carry, interpret=interpret)
+
+    y, _ = jax.lax.fori_loop(0, num_iters, body, (y, z))
+    return y * jnp.sqrt(norm)

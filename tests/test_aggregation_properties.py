@@ -172,6 +172,96 @@ class TestFractionalWeights:
         np.testing.assert_allclose(np.asarray(out["g"]), 0.0)
 
 
+class TestTrimmedBreakdown:
+    """Degenerate trimmed-mean inputs, identical across all three
+    implementations: the live ``TrimmedMeanAggregator``, the pure-jnp
+    oracle (``kernels/ref.py``) and the fused Pallas combine kernel.
+
+    The breakdown cases the trim formula must survive: J=1 and J=2
+    (floor((n−1)/2) forces k=0 — nothing to trim without losing every
+    vote), all silos masked out, and fractional async weights summing
+    below 1 (rank statistics count votes, not weight mass).
+    """
+
+    @staticmethod
+    def _all_three(x, w, trim_frac):
+        from repro.kernels import ops, ref
+
+        agg = TrimmedMeanAggregator(trim_frac)
+        live = jnp.asarray(agg.combine(x, w))
+        oracle = ref.masked_trimmed_mean_ref(x, w, trim_frac)
+        fused = ops.wire_combine(x, w, trim_frac=trim_frac)
+        np.testing.assert_allclose(np.asarray(live), np.asarray(oracle),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(live), np.asarray(fused),
+                                   rtol=1e-6, atol=1e-6)
+        return np.asarray(live)
+
+    @pytest.mark.parametrize("trim_frac", [0.1, 0.25, 0.49])
+    def test_single_silo_is_identity(self, trim_frac):
+        x = jnp.asarray([[3.0, -1.5, 0.25]])
+        out = self._all_three(x, jnp.ones((1,)), trim_frac)
+        np.testing.assert_allclose(out, np.asarray(x[0]), rtol=1e-6)
+
+    @pytest.mark.parametrize("trim_frac", [0.1, 0.25, 0.49])
+    def test_two_silos_trim_nothing(self, trim_frac):
+        """n=2 -> k = min(floor(2·tf), floor(1/2)) = 0: plain mean of
+        both votes, never a degenerate single-survivor pick."""
+        x = jnp.asarray([[10.0, -4.0], [2.0, 8.0]])
+        out = self._all_three(x, jnp.ones((2,)), trim_frac)
+        np.testing.assert_allclose(out, np.asarray(x).mean(axis=0),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("trim_frac", [0.1, 0.3])
+    def test_all_masked_returns_zeros(self, trim_frac):
+        """Zero active silos: without a guard the +inf sentinel fills
+        every rank and the 'mean' is inf — all three implementations
+        must return zeros instead (MeanAggregator's zero-total rule)."""
+        x = jnp.asarray(np.random.default_rng(5).normal(
+            0, 10, (4, 3)).astype(np.float32))
+        out = self._all_three(x, jnp.zeros((4,)), trim_frac)
+        np.testing.assert_array_equal(out, np.zeros((3,), np.float32))
+
+    def test_subunit_fractional_weights_count_as_full_votes(self):
+        """Stale async arrivals carry fractional weight, but the rank
+        statistics treat every w > 0 silo as one vote: scaling all
+        weights below 1 must not change the trimmed mean."""
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(0, 5, (6, 4)).astype(np.float32))
+        w_full = jnp.asarray((rng.random(6) < 0.8).astype(np.float32))
+        w_frac = w_full * jnp.asarray(
+            rng.uniform(0.01, 0.15, 6).astype(np.float32))
+        assert float(jnp.sum(w_frac)) < 1.0
+        a = self._all_three(x, w_full, 0.25)
+        b = self._all_three(x, w_frac, 0.25)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_seeded_degenerate_sweep(self):
+        rng = np.random.default_rng(9)
+        for _ in range(20):
+            J = int(rng.integers(1, 5))
+            d = int(rng.integers(1, 5))
+            x = jnp.asarray(rng.normal(0, 10, (J, d)).astype(np.float32))
+            w = jnp.asarray((rng.random(J) < 0.5).astype(np.float32)
+                            * rng.uniform(0.05, 1.0, J).astype(np.float32))
+            for tf in (0.1, 0.25, 0.49):
+                out = self._all_three(x, w, tf)
+                assert np.all(np.isfinite(out))
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=50, deadline=None)
+        @given(st.integers(0, 2**32 - 1), st.integers(1, 6),
+               st.sampled_from([0.1, 0.25, 0.49]))
+        def test_hypothesis(self, seed, J, trim_frac):
+            rng = np.random.default_rng(seed)
+            x = jnp.asarray(rng.normal(0, 10, (J, 3)).astype(np.float32))
+            w = jnp.asarray((rng.random(J) < 0.6).astype(np.float32)
+                            * rng.uniform(0.01, 1.0, J).astype(np.float32))
+            out = self._all_three(x, w, trim_frac)
+            assert np.all(np.isfinite(out))
+
+
 class TestMeanIsMaskedMean:
     def test_seeded_sweep(self):
         rng = np.random.default_rng(2)

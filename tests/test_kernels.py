@@ -1,14 +1,22 @@
 """Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py.
 
 Kernels execute in interpret mode on CPU (the kernel body runs in Python,
-semantically identical to the Mosaic lowering's grid/BlockSpec behaviour).
+semantically identical to the Mosaic lowering's grid/BlockSpec behaviour),
+so the whole suite runs on CPU-only CI. hypothesis is optional: without
+it the property tests degrade to a fixed seeded sweep over the same
+domain (never skip the module — missing optional deps lose example
+diversity, not coverage).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="hypothesis not installed; pip install -e .[test]")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels.rmsnorm import rmsnorm_rows
@@ -107,10 +115,8 @@ def test_rmsnorm_leading_dims():
 # fused reparam + STL
 # ---------------------------------------------------------------------------
 
-@given(n=st.integers(1, 20000))
-@settings(max_examples=20, deadline=None)
-def test_reparam_stl_property(n):
-    """Property: kernel == oracle for any latent dimension (incl. pad path)."""
+def _check_reparam_stl(n):
+    """Kernel == oracle for any latent dimension (incl. pad path)."""
     ks = jax.random.split(jax.random.fold_in(KEY, n), 3)
     mu = jax.random.normal(ks[0], (n,))
     ls = -1.0 + 0.3 * jax.random.normal(ks[1], (n,))
@@ -120,6 +126,22 @@ def test_reparam_stl_property(n):
     np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), atol=1e-5,
                                rtol=1e-5)
     assert abs(float(lq) - float(lq_ref.sum())) < 1e-2 + 1e-6 * n
+
+
+if HAVE_HYPOTHESIS:
+    @given(n=st.integers(1, 20000))
+    @settings(max_examples=20, deadline=None)
+    def test_reparam_stl_property(n):
+        _check_reparam_stl(n)
+else:
+    # Seeded fallback: boundary dims (block edges at 4096) + a fixed
+    # pseudo-random sample of the same domain hypothesis would draw from.
+    _FALLBACK_NS = sorted({1, 2, 3, 4095, 4096, 4097, 20000}.union(
+        int(n) for n in np.random.default_rng(20240601).integers(1, 20000, 13)))
+
+    @pytest.mark.parametrize("n", _FALLBACK_NS)
+    def test_reparam_stl_property(n):
+        _check_reparam_stl(n)
 
 
 def test_reparam_stl_grad_is_stl():

@@ -5,12 +5,19 @@ Covers:
     dtypes, jit-safety, empty-subtree edge cases);
   * flat vs legacy wire equivalence: without DP/compression the packed
     path is a pure relayout, so trajectories must agree BIT FOR BIT;
+  * fused vs flat wire equivalence end to end: the fused Pallas kernels
+    replay the SAME op sequence and the SAME DP noise stream inside the
+    compiled round, so trajectories agree bit for bit without
+    compression and under DP — and stay tolerance-close when int8
+    requantization + async fractional weights reorder the arithmetic;
+  * save -> resume ACROSS a wire-mode change (flat <-> fused);
   * wire accounting: one int8 scale per SILO (not per leaf) on the flat
     path;
   * the compiled-graph invariance (subprocess, 4 forced host devices):
     a DP + int8 round lowers to exactly ONE all_gather per wire dtype
     (s8 payload + f32 scale), and an uncompressed round to exactly one
-    f32 gather — the §3.2 exchange structure on the flat wire.
+    f32 gather — the §3.2 exchange structure, on BOTH the flat and the
+    fused wire.
 """
 import os
 import subprocess
@@ -29,7 +36,20 @@ from repro.core import (
     StructuredModel,
 )
 from repro.core.flatten import TreeSpec
-from repro.federated import Int8Compressor, NoCompression, Server
+from repro.federated import (
+    AsyncConfig,
+    Experiment,
+    ExperimentSpec,
+    FamilySpec,
+    Int8Compressor,
+    ModelSpec,
+    NoCompression,
+    OptimizerSpec,
+    PrivacyPolicy,
+    Scenario,
+    Server,
+    build,
+)
 from repro.optim.sgd import sgd
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -106,7 +126,7 @@ def _hier_problem(dG=3, dL=2):
     )
 
 
-def _server(wire, compressor=None, seed=11):
+def _server(wire, compressor=None, privacy=None, seed=11):
     prob = _hier_problem()
     datas = [{"y": jax.random.normal(
         jax.random.fold_in(jax.random.PRNGKey(9), j), (4, 2))}
@@ -115,13 +135,14 @@ def _server(wire, compressor=None, seed=11):
         prob, datas, {"m": jnp.asarray(0.2)},
         prob.global_family.init(jax.random.PRNGKey(1)),
         server_opt=sgd(3e-2), local_opt=sgd(3e-2),
-        compressor=compressor, wire=wire, seed=seed,
+        compressor=compressor, privacy=privacy, wire=wire, seed=seed,
     )
 
 
 def _flat(tree):
-    return np.concatenate([np.ravel(np.asarray(x))
-                           for x in jax.tree_util.tree_leaves(tree)])
+    leaves = [np.ravel(np.asarray(x))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return np.concatenate(leaves) if leaves else np.zeros((0,), np.float32)
 
 
 class TestFlatVsLegacy:
@@ -149,6 +170,106 @@ class TestFlatVsLegacy:
     def test_rejects_unknown_wire(self):
         with pytest.raises(ValueError, match="wire layout"):
             _server("pigeon")
+
+
+def _toy_spec(scenario, *, gfam=None, rounds=4):
+    return ExperimentSpec(
+        model=ModelSpec("toy", {"num_obs": 6}, global_family=gfam),
+        scenario=scenario, num_silos=4, rounds=rounds, local_steps=2,
+        server_opt=OptimizerSpec("adam", 2e-2), seed=3,
+    )
+
+
+class TestFusedVsFlat:
+    """The fused Pallas wire against the flat reference, end to end.
+
+    The equivalence contract (docs/federated.md): bit-exact whenever no
+    requantization reorders arithmetic — including under DP, because the
+    kernel draws the SAME per-silo noise stream in-kernel — and
+    tolerance-equal once int8 + async fractional weights are live.
+    """
+
+    @pytest.mark.parametrize("algorithm", ["sfvi", "sfvi_avg"])
+    def test_bit_exact_without_dp_or_compression(self, algorithm):
+        a, b = _server("flat"), _server("fused")
+        a.run(3, algorithm=algorithm, local_steps=2)
+        b.run(3, algorithm=algorithm, local_steps=2)
+        for k in ("theta", "eta_G", "eta_L"):
+            np.testing.assert_array_equal(_flat(a.state[k]), _flat(b.state[k]))
+
+    @pytest.mark.parametrize("algorithm", ["sfvi", "sfvi_avg"])
+    def test_bit_exact_under_dp(self, algorithm):
+        """In-kernel noise is the same stream PrivacyPolicy draws (same
+        round key -> same folded per-silo keys -> same normals), and the
+        clip/add pipeline is the same op sequence — so even DP
+        trajectories agree bit for bit."""
+        pol = PrivacyPolicy(clip_norm=0.8, noise_multiplier=0.7)
+        a = _server("flat", privacy=pol)
+        b = _server("fused", privacy=pol)
+        a.run(3, algorithm=algorithm, local_steps=2)
+        b.run(3, algorithm=algorithm, local_steps=2)
+        for k in ("theta", "eta_G", "eta_L"):
+            np.testing.assert_array_equal(_flat(a.state[k]), _flat(b.state[k]))
+
+    def test_dp_int8_async_fractional_weights_close(self):
+        """int8 requantization happens at a different point in the fused
+        pipeline (one fused pass vs encode-then-decode), so under the
+        full stack — DP + int8 + buffered-async fractional weights +
+        trimmed aggregation — the contract relaxes to tolerance."""
+        sc = Scenario(algorithm="sfvi_avg", compression="int8",
+                      dp_noise=0.4, dp_clip=0.9,
+                      aggregator="trimmed", trim_frac=0.2,
+                      async_cfg=AsyncConfig(buffer_size=2,
+                                            latency="lognormal"))
+        spec = _toy_spec(sc, rounds=5)
+        a, b = build(spec, wire="flat"), build(spec, wire="fused")
+        a.run()
+        b.run()
+        np.testing.assert_allclose(_flat(a.eta_G), _flat(b.eta_G),
+                                   rtol=0.05, atol=0.05)
+        np.testing.assert_allclose(np.asarray(a.history["elbo"]),
+                                   np.asarray(b.history["elbo"]),
+                                   rtol=0.05, atol=0.5)
+
+    def test_full_covariance_barycenter_bit_exact(self):
+        """sfvi_avg with a CholeskyGaussian global family routes the
+        barycenter's matrix sqrt through the fused Newton-Schulz kernel
+        — same normalization, same iteration, bit-identical states."""
+        spec = _toy_spec(Scenario(algorithm="sfvi_avg"),
+                         gfam=FamilySpec("cholesky"), rounds=3)
+        a, b = build(spec, wire="flat"), build(spec, wire="fused")
+        a.run()
+        b.run()
+        for k in ("theta", "eta_G", "eta_L"):
+            np.testing.assert_array_equal(_flat(a.server.state[k]),
+                                          _flat(b.server.state[k]))
+
+    @pytest.mark.parametrize("wires", [("flat", "fused"), ("fused", "flat")])
+    def test_resume_across_wire_mode_change(self, tmp_path, wires):
+        """A checkpoint taken on one wire continues on the other with no
+        trajectory change (no DP/compression -> both wires are the same
+        bit-exact program), via Experiment.resume(..., wire=...)."""
+        first, second = wires
+        spec = _toy_spec(Scenario(algorithm="sfvi_avg"), rounds=4)
+        full = build(spec, wire=first)
+        full.run()
+
+        part = build(spec, wire=first)
+        part.run(2)
+        part.save(str(tmp_path))
+        resumed = Experiment.resume(str(tmp_path), wire=second)
+        assert resumed.server.wire == second
+        resumed.run()
+        for k in ("theta", "eta_G", "eta_L"):
+            np.testing.assert_array_equal(
+                _flat(full.server.state[k]), _flat(resumed.server.state[k]))
+
+    def test_resume_defaults_to_recorded_wire(self, tmp_path):
+        spec = _toy_spec(Scenario(algorithm="sfvi_avg"), rounds=3)
+        part = build(spec, wire="fused")
+        part.run(1)
+        part.save(str(tmp_path))
+        assert Experiment.resume(str(tmp_path)).server.wire == "fused"
 
 
 class TestWireAccounting:
@@ -207,32 +328,36 @@ _HLO_SCRIPT = textwrap.dedent("""
             out[m.group(1)] = out.get(m.group(1), 0) + 1
         return out
 
-    for comp, expect in ((Int8Compressor(), {"s8": 1, "f32": 1}),
-                         (None, {"f32": 1})):
-        for algo, K in (("sfvi", 2), ("sfvi_avg", 3)):
-            srv = Server(prob, datas, {"m": jnp.asarray(0.1)},
-                         prob.global_family.init(jax.random.PRNGKey(1)),
-                         server_opt=adam(1e-2), local_opt=adam(1e-2),
-                         compressor=comp, privacy=pol, seed=0)
-            assert srv.wire == "flat"
-            fn = srv._get_round(algo, K)
-            mask_shape = (K, 4) if algo == "sfvi" else (4,)
-            ones = jnp.ones(mask_shape, jnp.float32)
-            args = (srv.state, srv.data, jax.random.PRNGKey(0), ones, ones)
-            hlo = fn.lower(*args).compile().as_text()
-            got = gathers_by_dtype(hlo)
-            assert got == expect, (algo, K, type(comp).__name__, got, expect)
-            print(algo, K, type(comp).__name__, "OK", got)
+    for wire in ("flat", "fused"):
+        for comp, expect in ((Int8Compressor(), {"s8": 1, "f32": 1}),
+                             (None, {"f32": 1})):
+            for algo, K in (("sfvi", 2), ("sfvi_avg", 3)):
+                srv = Server(prob, datas, {"m": jnp.asarray(0.1)},
+                             prob.global_family.init(jax.random.PRNGKey(1)),
+                             server_opt=adam(1e-2), local_opt=adam(1e-2),
+                             compressor=comp, privacy=pol, wire=wire, seed=0)
+                assert srv.wire == wire
+                fn = srv._get_round(algo, K)
+                mask_shape = (K, 4) if algo == "sfvi" else (4,)
+                ones = jnp.ones(mask_shape, jnp.float32)
+                args = (srv.state, srv.data, jax.random.PRNGKey(0), ones, ones)
+                hlo = fn.lower(*args).compile().as_text()
+                got = gathers_by_dtype(hlo)
+                assert got == expect, (wire, algo, K, type(comp).__name__,
+                                       got, expect)
+                print(wire, algo, K, type(comp).__name__, "OK", got)
 """)
 
 
 @pytest.mark.slow
 def test_flat_round_compiles_to_one_gather_per_wire_dtype():
-    """The flat (J, P) wire preserves the §3.2 exchange structure in the
+    """Flat AND fused wires preserve the §3.2 exchange structure in the
     optimized HLO: a DP + int8 round is exactly one s8 all_gather (the
     payload matrix) plus one f32 all_gather (the per-silo scales), an
     uncompressed DP round exactly one f32 all_gather — independent of
-    algorithm and local_steps, on a real 4-device mesh."""
+    algorithm and local_steps, on a real 4-device mesh. (The fused
+    kernels change what happens per shard, not what crosses the wire.)
+    """
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
@@ -240,4 +365,4 @@ def test_flat_round_compiles_to_one_gather_per_wire_dtype():
         capture_output=True, text=True, env=env, cwd=REPO, timeout=1200,
     )
     assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
-    assert out.stdout.count("OK") == 4, out.stdout
+    assert out.stdout.count("OK") == 8, out.stdout
