@@ -35,6 +35,11 @@ from repro.models.paper.registry import get_model
 SCENARIOS = [
     Scenario(algorithm="sfvi"),
     Scenario(algorithm="sfvi_avg"),
+    # Natural-parameter strategies from the registry: same round cadence
+    # and wire as SFVI-Avg, but silos ship damped natural-parameter site
+    # deltas instead of posterior averages.
+    Scenario(algorithm="pvi"),
+    Scenario(algorithm="fed_ep"),
     Scenario(algorithm="sfvi_avg", compression="int8"),
     Scenario(algorithm="sfvi", aggregator="trimmed", trim_frac=0.1,
              participation=0.5, dropout=0.1),
@@ -296,12 +301,41 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
             "roofline": roofline,
         }
 
+    # Server strategies head to head: the registry's round-cadence
+    # entries on the identical config and wire. PVI/FedEP ship
+    # natural-parameter site deltas over the same flat (J, P) gather, so
+    # bytes/round must match SFVI-Avg exactly; ELBO and calibrated time
+    # are reported for visibility (not gated — the strategies optimize
+    # different local objectives, so their trajectories diverge by
+    # design; check_perf.py only gates the ``scenarios`` block).
+    strategy_compare = {}
+    for strat in ("sfvi_avg", "pvi", "fed_ep"):
+        exp = staged_experiment(
+            cfg["model"], bundle, scenario=Scenario(algorithm=strat),
+            num_silos=cfg["silos"], rounds=9,
+            local_steps=cfg["local_steps"], lr=cfg["lr"], seed=cfg["seed"],
+            model_kwargs=cfg["model_kwargs"], wire="flat")
+        exp.run(1)  # compile
+        ratios = []
+        while exp.remaining_rounds:
+            tick = _yardstick()
+            t0 = time.perf_counter()
+            exp.run(1)
+            ratios.append((time.perf_counter() - t0) / tick)
+            yardsticks.append(tick)
+        strategy_compare[strat] = {
+            "elbo": float(exp.history["elbo"][-1]),
+            "bytes_per_round": float(exp.comm.per_round),
+            "calibrated_round": statistics.median(ratios),
+        }
+
     result = {
         "benchmark": "bench_federated-smoke",
         "config": cfg,
         "calibration_s": statistics.median(yardsticks),
         "scenarios": scenarios,
         "wire_compare": wire_compare,
+        "strategy_compare": strategy_compare,
     }
     rows = [{"Scenario": name, **{k: (round(v, 4) if isinstance(v, float)
                                       else v) for k, v in r.items()}}
@@ -326,6 +360,16 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
          for name, r in wire_compare.items()],
         ["Scenario", "wire=fused", "wire=flat", "wire=legacy",
          "fused speedup", "flat speedup", "fused MB", "flat MB"],
+    )
+    print_table(
+        "server strategies head to head (round cadence, wire=flat; "
+        "identical bytes/round by construction)",
+        [{"Strategy": name,
+          "elbo": round(r["elbo"], 2),
+          "bytes/round": round(r["bytes_per_round"], 0),
+          "calibrated s/round": round(r["calibrated_round"], 4)}
+         for name, r in strategy_compare.items()],
+        ["Strategy", "elbo", "bytes/round", "calibrated s/round"],
     )
     if json_path:
         with open(json_path, "w") as f:

@@ -60,8 +60,10 @@ def run(quick: bool = True) -> dict:
         jax.block_until_ready(tok)
         t_dec = time.perf_counter() - t0
         sync_tree = {"theta": state.theta, "eta_G": state.eta_G}
-        raw_b = NoCompression().wire_bytes(sync_tree)
-        int8_b = Int8Compressor().wire_bytes(sync_tree)
+        # The federated sync ships over the flat (J, P) wire: one int8
+        # payload + ONE f32 scale per silo, not one scale per leaf.
+        raw_b = NoCompression().wire_bytes(sync_tree, wire="flat")
+        int8_b = Int8Compressor().wire_bytes(sync_tree, wire="flat")
         rows.append({
             "arch": cfg.name,
             "prefill tok/s": f"{B * P / t_pre:.0f}",

@@ -47,14 +47,21 @@ from repro.federated.aggregation import (
     TrimmedMeanAggregator,
 )
 from repro.federated.driver import run_rounds
+from repro.federated.metering import CommMeter, tree_bytes
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.runtime import (
-    CommMeter,
     Server,
     global_eps,
     silo_eps,
     stack_silos,
-    tree_bytes,
+)
+from repro.federated.strategy import (
+    ServerStrategy,
+    StrategySpec,
+    get_strategy,
+    register_strategy,
+    resolve_strategy,
+    strategy_names,
 )
 from repro.federated.async_engine import BufferState, run_buffered
 from repro.federated.scheduler import (
@@ -96,7 +103,13 @@ __all__ = [
     "RoundScheduler",
     "Scenario",
     "Server",
+    "ServerStrategy",
+    "StrategySpec",
     "TrimmedMeanAggregator",
+    "get_strategy",
+    "register_strategy",
+    "resolve_strategy",
+    "strategy_names",
     "global_eps",
     "run_rounds",
     "scenario_matrix",

@@ -22,7 +22,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.federated.metering import tree_bytes
+
 PyTree = Any
+
+
+def _check_wire(wire: str) -> None:
+    if wire not in ("flat", "fused", "legacy"):
+        raise ValueError(f"unknown wire layout {wire!r} (flat/fused/legacy)")
+
+
+def _tree_elements(tree: PyTree) -> int:
+    return sum(
+        int(np.prod(x.shape))
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "shape")
+    )
 
 
 def _bcast_mask(mask: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -117,13 +132,20 @@ class NoCompression:
         """Identity inverse of :meth:`encode`."""
         return enc
 
-    def wire_bytes(self, tree: PyTree) -> int:
-        """Raw pytree size: Σ leaf elements × dtype itemsize."""
-        return sum(
-            int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
-            for x in jax.tree_util.tree_leaves(tree)
-            if hasattr(x, "shape")
-        )
+    def wire_bytes(self, tree: PyTree, wire: str = "legacy") -> int:
+        """Wire size of the raw upload for the given wire layout.
+
+        ``legacy`` ships the pytree leaf-by-leaf at native dtypes —
+        delegates to :func:`repro.federated.metering.tree_bytes`, the
+        repo's single byte-accounting primitive. ``flat``/``fused``
+        pack the whole tree into ONE contiguous float32 vector
+        (:class:`~repro.core.flatten.TreeSpec`), so the wire carries
+        4 bytes per element regardless of leaf dtypes.
+        """
+        _check_wire(wire)
+        if wire in ("flat", "fused"):
+            return 4 * _tree_elements(tree)
+        return tree_bytes(tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,13 +176,25 @@ class Int8Compressor:
         leaves = [d["q"].astype(jnp.float32) * d["scale"] for d in enc["leaves"]]
         return jax.tree_util.tree_unflatten(enc["treedef"].value, leaves)
 
-    def wire_bytes(self, tree: PyTree) -> int:
-        """Wire size of the quantized form: 1 B/element + 4 B/leaf scale."""
-        total = 0
-        for x in jax.tree_util.tree_leaves(tree):
-            if hasattr(x, "shape"):
-                total += int(np.prod(x.shape)) + 4  # int8 payload + f32 scale
-        return total
+    def wire_bytes(self, tree: PyTree, wire: str = "legacy") -> int:
+        """Wire size of the quantized upload for the given wire layout.
+
+        ``legacy`` quantizes leaf-by-leaf: 1 B/element + one 4-byte f32
+        scale PER LEAF. ``flat``/``fused`` pack the whole upload into a
+        single (P,) vector first, so the silo ships one int8 row and
+        exactly ONE scale: P + 4 bytes. Billing the per-leaf scales on
+        the flat wire over-billed multi-leaf models relative to what
+        the compiled collective actually gathers (one s8 payload + one
+        f32 scale per silo — see ``launch.roofline.collective_bytes``).
+        """
+        _check_wire(wire)
+        n = _tree_elements(tree)
+        if wire in ("flat", "fused"):
+            return n + 4  # one int8 payload row + ONE f32 scale per silo
+        n_leaves = sum(
+            1 for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "shape")
+        )
+        return n + 4 * n_leaves
 
 
 @dataclasses.dataclass(frozen=True)

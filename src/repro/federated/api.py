@@ -45,6 +45,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core.family import FamilySpec
 from repro.federated.scheduler import RoundScheduler, Scenario
+from repro.federated.strategy import StrategySpec
 
 PyTree = Any
 
@@ -132,15 +133,22 @@ class ExperimentSpec:
 
     Attributes:
       model: registry reference + kwargs (:class:`ModelSpec`).
-      scenario: the runtime scenario — algorithm (``sfvi``/``sfvi_avg``),
-        participation, stragglers, wire compression, aggregation rule and
-        the differential-privacy policy (dp_noise/dp_clip/dp_delta) — as
+      scenario: the runtime scenario — algorithm (any registered
+        :class:`~repro.federated.strategy.ServerStrategy` name:
+        ``sfvi``/``sfvi_avg``/``pvi``/``fed_ep``), participation,
+        stragglers, wire compression, aggregation rule and the
+        differential-privacy policy (dp_noise/dp_clip/dp_delta) — as
         one :class:`~repro.federated.scheduler.Scenario`.
+      strategy: optional
+        :class:`~repro.federated.strategy.StrategySpec` carrying the
+        strategy's hyperparameters (e.g. PVI's ``damping``). ``None``
+        builds the scenario's algorithm with registry defaults; when
+        set, its name must match ``scenario.algorithm``.
       num_silos: J, the federation width.
       rounds: total rounds the experiment runs (``Experiment.run()`` with
         no argument runs whatever remains of this budget).
-      local_steps: K optimizer steps per round (SFVI syncs after each,
-        SFVI-Avg once per round).
+      local_steps: K optimizer steps per round (step-cadence strategies
+        sync after each, round-cadence ones once per round).
       server_opt: optimizer for (θ, η_G).
       local_opt: optimizer for each η_{L_j}; None mirrors ``server_opt``
         when the model has local latents.
@@ -159,6 +167,7 @@ class ExperimentSpec:
 
     model: ModelSpec
     scenario: Scenario = Scenario()
+    strategy: Optional[StrategySpec] = None
     num_silos: int = 4
     rounds: int = 10
     local_steps: int = 1
@@ -191,6 +200,8 @@ class ExperimentSpec:
         return cls(
             model=ModelSpec.from_dict(d["model"]),
             scenario=Scenario.from_dict(d.get("scenario", {})),
+            strategy=(StrategySpec.from_dict(d["strategy"])
+                      if d.get("strategy") is not None else None),
             num_silos=d.get("num_silos", 4),
             rounds=d.get("rounds", 10),
             local_steps=d.get("local_steps", 1),
@@ -249,6 +260,15 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
     from repro.models.paper.registry import apply_family_spec, get_model
 
     spec.scenario.validate(spec.num_silos)
+    strat_spec = (spec.strategy if spec.strategy is not None
+                  else StrategySpec(spec.scenario.algorithm))
+    if strat_spec.name != spec.scenario.algorithm:
+        raise ValueError(
+            f"spec.strategy names {strat_spec.name!r} but "
+            f"scenario.algorithm is {spec.scenario.algorithm!r}; they must "
+            f"agree (the scenario label drives scheduling/validation, the "
+            f"StrategySpec only adds hyperparameters)")
+    strategy = strat_spec.build()
     if bundle is None:
         entry = get_model(spec.model.name)
         data_seed = spec.data_seed if spec.data_seed is not None else spec.seed
@@ -277,6 +297,7 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
         wire=wire,
         privacy=spec.scenario.privacy(),
         seed=spec.seed,
+        strategy=strategy,
     )
     scheduler = spec.scenario.scheduler(spec.num_silos, seed=spec.seed)
     return Experiment(spec, bundle, server, scheduler)
@@ -394,9 +415,12 @@ class Experiment:
                 callback=cb,
             )
         else:
+            # algorithm=None: the Server already carries the built
+            # strategy INSTANCE (spec.strategy hyperparameters included);
+            # passing spec.algorithm's NAME would rebuild it with
+            # registry defaults.
             chunk = self.server.run(
                 n,
-                algorithm=spec.algorithm,
                 local_steps=spec.local_steps,
                 scheduler=self.scheduler,
                 callback=cb,
@@ -443,6 +467,21 @@ class Experiment:
     def _meta_path(directory: str, step: int) -> str:
         return os.path.join(directory, f"step_{step:08d}.meta.json")
 
+    @staticmethod
+    def _silo_state_tree(state: Dict[str, Any]) -> Dict[str, Any]:
+        """The per-silo shard contents: every stacked-(J, ...) state group
+        with any leaves. η_{L_j}/opt_local exist when the model has local
+        latents; ``strategy`` when the strategy keeps per-silo state
+        (e.g. PVI/FedEP site parameters λ_j) — a stateful strategy on a
+        global-only model still gets its shards."""
+        silo_state: Dict[str, Any] = {}
+        if jax.tree_util.tree_leaves(state["eta_L"]):
+            silo_state["eta_L"] = state["eta_L"]
+            silo_state["opt_local"] = state["opt_local"]
+        if jax.tree_util.tree_leaves(state.get("strategy", {})):
+            silo_state["strategy"] = state["strategy"]
+        return silo_state
+
     def save(self, directory: str, keep: int = 3) -> str:
         """Persist the full round state under ``directory``.
 
@@ -453,9 +492,10 @@ class Experiment:
           * ``step_NNNNNNNN.msgpack`` — server state (θ, η_G, server
             optimizer);
           * ``step_NNNNNNNN.silo_JJJJ.msgpack`` — silo J's private state
-            (η_{L_J} + its optimizer moments), one file per silo so the
-            server checkpoint never contains local variational
-            parameters (the paper's privacy boundary, see
+            (η_{L_J} + its optimizer moments, plus per-silo strategy
+            state such as PVI/FedEP site parameters λ_J), one file per
+            silo so the server checkpoint never contains local
+            variational parameters (the paper's privacy boundary, see
             ``repro.checkpoint.io``);
           * ``step_NNNNNNNN.meta.json`` — round index, communication
             counters, RDP ledger (JSON so the float64 ledger round-trips
@@ -468,8 +508,8 @@ class Experiment:
         mgr = CheckpointManager(directory, keep=keep)
         state = self.server.state
         mgr.save(self.round, {k: state[k] for k in _SERVER_KEYS})
-        if jax.tree_util.tree_leaves(state["eta_L"]):
-            silo_state = {"eta_L": state["eta_L"], "opt_local": state["opt_local"]}
+        silo_state = self._silo_state_tree(state)
+        if silo_state:
             for j in range(self.server.J):
                 mgr.save(
                     self.round,
@@ -531,8 +571,8 @@ class Experiment:
         restored = mgr.restore(step, like)
         for k in _SERVER_KEYS:
             state[k] = restored[k]
-        if jax.tree_util.tree_leaves(state["eta_L"]):
-            silo_like = {"eta_L": state["eta_L"], "opt_local": state["opt_local"]}
+        silo_like = cls._silo_state_tree(state)
+        if silo_like:
             slices = [
                 mgr.restore(
                     step,
@@ -546,8 +586,8 @@ class Experiment:
             # Checkpoints hold the J REAL silos; re-pad the stacked axis
             # to this mesh's J_pad (a resume may land on a different
             # device count — padded rows are masked and never read).
-            state["eta_L"] = exp.server.pad_silo_axis(stacked["eta_L"])
-            state["opt_local"] = exp.server.pad_silo_axis(stacked["opt_local"])
+            for k in silo_like:
+                state[k] = exp.server.pad_silo_axis(stacked[k])
 
         exp.round = int(meta["round"])
         exp.comm.load_state(meta["comm"])

@@ -23,7 +23,8 @@ structured-VI update family:
 The implementation keeps everything compiled: the arrival process is
 simulated on the host (microseconds — it is a tiny event loop), yielding
 per-flush participation **counts** and **staleness** vectors, and each
-flush executes the *existing* ``shard_map`` SFVI-Avg round graph with
+flush executes the *existing* ``shard_map`` round graph of any
+round-cadence strategy (SFVI-Avg, PVI, FedEP) with
 those static tensors — the participation mask gates local-state updates
 and the staleness-decayed weights drive the aggregation. DP clip/noise,
 int8 wire compression and the single coalesced ``all_gather`` therefore
@@ -246,6 +247,7 @@ def run_buffered(
     num_flushes: int,
     cfg: AsyncConfig,
     *,
+    algorithm=None,
     local_steps: int = 1,
     start_flush: int = 0,
     state: Optional[BufferState] = None,
@@ -254,10 +256,14 @@ def run_buffered(
     """Drive a :class:`~repro.federated.runtime.Server` asynchronously.
 
     The async counterpart of ``Server.run``: each flush executes the
-    compiled SFVI-Avg round graph with the flush's participation mask
-    (which silos ran local steps and may update their η_{L_j}) and its
-    staleness-decayed aggregation weights. ``start_flush`` is the
-    absolute flush index — the round-key stream is the same
+    compiled round graph of a round-cadence
+    :class:`~repro.federated.strategy.ServerStrategy` (``algorithm``;
+    the server's own strategy when None) with the flush's participation
+    mask (which silos ran local steps and may update their η_{L_j}) and
+    its staleness-decayed aggregation weights. Step-cadence strategies
+    synchronize inside their local loop and have no single round-granular
+    contribution to buffer, so they are rejected here. ``start_flush``
+    is the absolute flush index — the round-key stream is the same
     ``fold_in(seed, absolute index)`` stream the synchronous path uses,
     so checkpoint/resume replays bit-exactly given the saved
     :class:`BufferState`.
@@ -282,10 +288,15 @@ def run_buffered(
     if not 1 <= cfg.buffer_size <= J:
         raise ValueError(
             f"buffer_size must be in [1, J={J}], got {cfg.buffer_size}")
-    fn = server._get_round("sfvi_avg", local_steps)
+    strat = server._resolve(algorithm)
+    if strat.cadence != "round":
+        raise ValueError(
+            f"buffered-async execution needs a round-cadence strategy; "
+            f"{strat.name!r} synchronizes every local step")
+    fn = server._get_round(strat, local_steps)
     if state is None:
         state = BufferState.init(J, cfg, server.seed)
-    up1 = server.bytes_up_per_silo("sfvi_avg")
+    up1 = server.bytes_up_per_silo(strat)
     down1 = server.bytes_down_per_silo()
     history: Dict[str, list] = {
         "elbo": [], "elbo_trace": [], "bytes_up": [], "bytes_down": [],

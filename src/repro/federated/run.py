@@ -19,6 +19,12 @@ Variational families are spec-overridable (``repro.core.family``):
     ... --global-family cholesky           # full unitriangular η_G factor
     ... --global-family lowrank --global-family-kwargs '{"rank": 2}'
 
+Server strategies are pluggable (``repro.federated.strategy``): ``--algo``
+picks a registered name (or ``both`` for the SFVI/SFVI-Avg pair), and
+``--strategy``/``--strategy-kwargs`` select one with hyperparameters:
+
+    ... --strategy pvi --strategy-kwargs '{"damping": 0.2}'
+
 Scenario knobs cover partial participation, straggler dropout, robust
 aggregation, int8 wire compression and differential privacy:
 
@@ -76,7 +82,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="total rounds (default 5; with --resume, extends "
                          "the checkpointed spec's budget)")
     ap.add_argument("--local-steps", type=int, default=4)
-    ap.add_argument("--algo", default="both", choices=["both", "sfvi", "sfvi_avg"])
+    ap.add_argument("--algo", default="both",
+                    choices=["both", "sfvi", "sfvi_avg", "pvi", "fed_ep"])
+    ap.add_argument("--strategy", default=None, metavar="NAME",
+                    help="registered ServerStrategy name (sfvi, sfvi_avg, "
+                         "pvi, fed_ep, or any plugin registered through "
+                         "repro.federated.strategy); overrides --algo. "
+                         "Validated against the registry at build time so "
+                         "plugin strategies need no CLI change")
+    ap.add_argument("--strategy-kwargs", default="", metavar="JSON",
+                    help="JSON dict of strategy hyperparameters, e.g. "
+                         '\'{"damping": 0.2}\' for --strategy pvi')
     ap.add_argument("--lr", type=float, default=2e-2)
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--dropout", type=float, default=0.0)
@@ -87,7 +103,8 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["barycenter", "param"])
     ap.add_argument("--async", dest="async_mode", action="store_true",
                     help="buffered-asynchronous execution (FedBuff-style "
-                         "flushes; sfvi_avg only — see docs/federated.md)")
+                         "flushes; round-cadence strategies only: sfvi_avg, "
+                         "pvi, fed_ep — see docs/federated.md)")
     ap.add_argument("--buffer-size", type=int, default=2,
                     help="with --async: contributions per server flush")
     ap.add_argument("--staleness-decay", type=float, default=0.5,
@@ -164,7 +181,9 @@ def _spec_from_args(args, algorithm: str):
     """The thin spec-builder: CLI flags -> declarative ExperimentSpec."""
     from repro.federated.api import ExperimentSpec, ModelSpec, OptimizerSpec
     from repro.federated.scheduler import Scenario
+    from repro.federated.strategy import StrategySpec
 
+    strat_kwargs = json.loads(args.strategy_kwargs or "{}")
     async_cfg = _async_cfg_from_args(args)
     scenario = Scenario(
         algorithm=algorithm,
@@ -188,6 +207,8 @@ def _spec_from_args(args, algorithm: str):
                 args.local_family, args.local_family_kwargs),
         ),
         scenario=scenario,
+        strategy=(StrategySpec(algorithm, strat_kwargs)
+                  if strat_kwargs else None),
         num_silos=args.silos,
         rounds=args.rounds if args.rounds is not None else 5,
         local_steps=args.local_steps,
@@ -237,7 +258,8 @@ def _run_one(spec, bundle, hlo_bytes: bool = False, ckpt_dir=None,
     from repro.federated.api import build
 
     exp = build(spec, bundle=bundle)
-    name = {"sfvi": "SFVI", "sfvi_avg": "SFVI-Avg"}[spec.algorithm]
+    from repro.federated.scheduler import algorithm_label
+    name = algorithm_label(spec.algorithm)
     sc = spec.scenario
     print(f"\n== {name}: {spec.model.name}, J={spec.num_silos}, "
           f"{spec.rounds} rounds x {spec.local_steps} local steps"
@@ -361,9 +383,12 @@ def main(argv=None) -> int:
     if args.spec:
         specs = [ExperimentSpec.load(args.spec)]
     else:
-        if args.async_mode:
-            # Buffered-async execution is defined for SFVI-Avg only
-            # (SFVI has no round-granular contribution to buffer).
+        if args.strategy:
+            algos = [args.strategy]
+        elif args.async_mode:
+            # Buffered-async execution needs a round-cadence strategy
+            # (step-cadence SFVI has no round-granular contribution to
+            # buffer); default to SFVI-Avg, or --strategy pvi/fed_ep.
             algos = ["sfvi_avg"]
         elif args.algo == "both":
             algos = ["sfvi", "sfvi_avg"]
@@ -372,8 +397,8 @@ def main(argv=None) -> int:
         specs = [_spec_from_args(args, a) for a in algos]
     if args.dump_spec:
         if len(specs) != 1:
-            print("--dump-spec needs a single algorithm; pass --algo "
-                  "sfvi or --algo sfvi_avg", file=sys.stderr)
+            print("--dump-spec needs a single algorithm; pass --algo or "
+                  "--strategy with one registered name", file=sys.stderr)
             return 2
         print(specs[0].to_json())
         return 0

@@ -31,6 +31,20 @@ from repro.federated.aggregation import (
     TrimmedMeanAggregator,
 )
 from repro.federated.privacy import PrivacyPolicy
+from repro.federated.strategy import get_strategy, strategy_names
+
+# Human-readable labels for registry strategies (fallback: upper-cased name).
+_ALGO_LABELS = {
+    "sfvi": "SFVI",
+    "sfvi_avg": "SFVI-Avg",
+    "pvi": "PVI",
+    "fed_ep": "FedEP",
+}
+
+
+def algorithm_label(algorithm: str) -> str:
+    """Human-readable label for a registry strategy name."""
+    return _ALGO_LABELS.get(algorithm, algorithm.upper())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +80,12 @@ class RoundScheduler:
         J = self.num_silos
         mask = np.ones((J,), np.float32)
         if self.participation < 1.0:
-            n_inv = max(1, int(round(self.participation * J)))
+            # Half-up, not Python's round(): banker's rounding resolves
+            # the .5 tie to the nearest EVEN count, so participation=0.5
+            # with J=5 invited round(2.5) = 2 silos instead of the
+            # documented "fraction of silos" (3). Even-J schedules are
+            # unchanged (their products never tie on .5 at x.0 inputs).
+            n_inv = max(1, int(self.participation * J + 0.5))
             chosen = np.asarray(
                 jax.random.choice(k_inv, J, shape=(n_inv,), replace=False)
             )
@@ -166,7 +185,10 @@ class Scenario:
     enumerate and trivially serializable for logs.
 
     Attributes:
-      algorithm: ``"sfvi"`` (sync every local step) or ``"sfvi_avg"``.
+      algorithm: any registered server-strategy name
+        (:func:`repro.federated.strategy.strategy_names`): ``"sfvi"``
+        (sync every local step), ``"sfvi_avg"``, ``"pvi"``,
+        ``"fed_ep"``, ...
       participation: fraction of silos invited per round.
       dropout: per-round straggler probability for invited silos.
       compression: ``"none"`` or ``"int8"`` wire codec.
@@ -180,9 +202,9 @@ class Scenario:
       trim_frac: trim fraction for the ``"trimmed"`` aggregator.
       async_cfg: buffered-asynchronous execution block
         (:class:`AsyncConfig`), or None for synchronous rounds. Async
-        scenarios require ``algorithm="sfvi_avg"`` with full
-        participation and no dropout — the latency model owns the
-        arrival dynamics (:meth:`validate`).
+        scenarios require a round-cadence algorithm (SFVI-Avg, PVI,
+        FedEP) with full participation and no dropout — the latency
+        model owns the arrival dynamics (:meth:`validate`).
     """
 
     algorithm: str = "sfvi_avg"
@@ -200,7 +222,7 @@ class Scenario:
     @property
     def name(self) -> str:
         """Compact human-readable label for tables and logs."""
-        bits = ["SFVI" if self.algorithm == "sfvi" else "SFVI-Avg"]
+        bits = [_ALGO_LABELS.get(self.algorithm, self.algorithm.upper())]
         if self.async_cfg is not None:
             bits.append(self.async_cfg.name)
         if self.participation < 1.0:
@@ -222,15 +244,23 @@ class Scenario:
 
         Async mode composes with compression, aggregation and DP, but
         not with the synchronous scheduler's participation/straggler
-        knobs (the latency model subsumes them) and only under SFVI-Avg
-        (SFVI synchronizes every local step — there is no round-granular
-        contribution to buffer).
+        knobs (the latency model subsumes them) and only under a
+        round-cadence strategy (step-cadence strategies synchronize
+        every local step — there is no round-granular contribution to
+        buffer).
         """
+        try:
+            strategy_cls = get_strategy(self.algorithm)
+        except KeyError:
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; registered "
+                f"strategies: {list(strategy_names())}") from None
         if self.async_cfg is None:
             return self
-        if self.algorithm != "sfvi_avg":
+        if strategy_cls.cadence != "round":
             raise ValueError(
-                "async execution requires algorithm='sfvi_avg'; SFVI "
+                f"async execution requires a round-cadence strategy "
+                f"(sfvi_avg, pvi, fed_ep, ...); {self.algorithm!r} "
                 "synchronizes every local step and has no round-granular "
                 "contribution to buffer")
         if self.participation < 1.0 or self.dropout > 0.0:
@@ -252,11 +282,18 @@ class Scenario:
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
-        """Inverse of ``dataclasses.asdict`` (rebuilds the async block)."""
+        """Inverse of ``dataclasses.asdict`` (rebuilds the async block).
+
+        Validates on deserialization: a hand-edited spec JSON combining
+        contradictory knobs (e.g. ``async_cfg`` with a step-cadence
+        algorithm) fails HERE, not rounds into a silently-wrong run.
+        The federation width is not known yet, so the J-dependent
+        checks re-run in ``api.build``.
+        """
         d = dict(d)
         if d.get("async_cfg") is not None:
             d["async_cfg"] = AsyncConfig(**d["async_cfg"])
-        return cls(**d)
+        return cls(**d).validate()
 
     def scheduler(self, num_silos: int, seed: int = 0) -> RoundScheduler:
         """The participation/straggler schedule for this scenario."""
@@ -308,16 +345,18 @@ def scenario_matrix(
     The full cartesian product, minus physically-meaningless rows:
     dropout without partial participation is kept (stragglers exist
     under full invitation too), but async rows are emitted only for
-    SFVI-Avg under full participation (see :meth:`Scenario.validate`).
-    One invocation of ``python -m repro.federated.run --sweep`` walks
-    the returned list.
+    round-cadence algorithms under full participation (see
+    :meth:`Scenario.validate`). ``algorithms`` accepts any registered
+    strategy name — e.g. ``("sfvi", "sfvi_avg", "pvi", "fed_ep")``
+    sweeps the whole zoo. One invocation of
+    ``python -m repro.federated.run --sweep`` walks the returned list.
     """
     grid = []
     for algo, part, drop, comp, z, acfg in itertools.product(
         algorithms, participation, dropout, compression, dp_noise, async_cfgs
     ):
         if acfg is not None and (
-            algo != "sfvi_avg" or part < 1.0 or drop > 0.0
+            get_strategy(algo).cadence != "round" or part < 1.0 or drop > 0.0
         ):
             continue
         grid.append(Scenario(

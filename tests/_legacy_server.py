@@ -1,46 +1,23 @@
-"""Compiled federated orchestration: one sharded graph per round.
+"""FROZEN pre-refactor Server snapshot — the bit-exactness oracle.
 
-The host-level runtime (``repro.core.runtime``) exchanges explicit Python
-message dicts — faithful to the protocol, but it executes silos serially
-and re-enters Python every round. This module is the scale path: all J
-silos advance together inside a single ``shard_map`` over the dedicated
-``silo`` mesh axis (``launch.mesh.make_silo_mesh``), with the server
-virtualized into collectives:
+This file is a verbatim copy of ``repro/federated/runtime.py`` as of the
+commit BEFORE the server-side update was factored into the pluggable
+``ServerStrategy`` protocol (PR 7). The strategy-equivalence suite
+(``tests/test_strategies.py``) runs the SAME configs through this legacy
+``Server`` and the refactored registry-built one and asserts the
+trajectories are bit-identical — including under DP + int8 + async and
+across save/resume — on whatever machine the tests run, so the oracle
+never suffers cross-platform float drift the way stored fixtures would.
 
-  * silo state (η_{L_j}, its optimizer, its data shard, and any per-silo
-    strategy state such as PVI's site approximations λ_j) is stacked
-    along a leading axis of size J and sharded over ``silo`` — privacy
-    by placement, exactly as in ``launch/steps.py``;
-  * the silo→server ship — whatever pytree the active
-    :class:`~repro.federated.strategy.ServerStrategy` emits (gradients,
-    locally-updated parameters, natural-parameter deltas) — is packed
-    into ONE contiguous float32 vector per silo (the flat wire format,
-    :class:`~repro.core.flatten.TreeSpec`), so DP clip+noise, the
-    pluggable :mod:`~repro.federated.aggregation` compressor (applied
-    *before* the collective — quantization reduces real bytes-on-wire,
-    with a single int8 scale per silo), the ``all_gather`` over ``silo``
-    and the server-side aggregation all operate on a single (J, P)
-    matrix instead of per-leaf tree_maps;
-  * the server reduction is a pluggable aggregator (mean, trimmed mean)
-    evaluated redundantly on every device (standard SPMD replication).
-
-WHAT each silo computes and HOW the server folds the aggregate back into
-(θ, η_G) is not this module's business: both live behind the
-:class:`~repro.federated.strategy.ServerStrategy` registry. The runtime
-only distinguishes the two *cadences* — step-cadence strategies gather
-after every local optimizer step (``local_steps`` gathers per round);
-round-cadence strategies run ``local_steps`` local VI steps and gather
-once — which makes the paper's §3.2 communication claim directly
-measurable and extends it unchanged to PVI / federated EP.
-
-Randomness: the server broadcasts only a per-round PRNG key. ε_G at local
-step t is derived from (round_key, t) and therefore *shared* by all silos
-(common-random-numbers — replaces the ε_G broadcast of Algorithm 1 with
-zero wire bytes); ε_{L_j} additionally folds in the silo id.
+Do not edit the algorithmic bodies here; the whole point is that they
+stay what shipped. It only imports stable primitives (privacy policy,
+aggregation, wire kernels, families, optimizers), none of which the
+refactor touches semantically.
 """
+
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Sequence, Union
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +25,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.barycenter import family_barycenter
+from repro.core.family import eps_shape as family_eps_shape
 from repro.core.family import supports_moments
 from repro.core.flatten import TreeSpec
 from repro.core.sfvi import SFVIProblem
@@ -57,27 +36,35 @@ from repro.federated.aggregation import (
     NoCompression,
     TrimmedMeanAggregator,
 )
-from repro.federated.metering import CommMeter
-from repro.federated.strategy import (
-    DEFAULT_STRATEGY,
-    ServerStrategy,
-    StrategyContext,
-    _select,
-    global_eps,
-    resolve_strategy,
-    silo_eps,
-)
+from repro.federated.metering import CommMeter, tree_bytes
 from repro.kernels import wire as wire_kernels
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.scheduler import RoundScheduler
 from repro.launch.mesh import make_silo_mesh
-from repro.optim.base import GradientTransformation
-
-__all__ = [
-    "Server", "global_eps", "silo_eps", "stack_silos",
-]
+from repro.optim.base import GradientTransformation, apply_updates
 
 PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shared-randomness helpers (exported: tests replay the exact draws)
+# ---------------------------------------------------------------------------
+
+
+def global_eps(problem: SFVIProblem, round_key: jnp.ndarray, t) -> jnp.ndarray:
+    """ε_G for local step ``t`` of a round — identical on every silo."""
+    return jax.random.normal(
+        jax.random.fold_in(round_key, t),
+        family_eps_shape(problem.global_family),
+    )
+
+
+def silo_eps(problem: SFVIProblem, round_key: jnp.ndarray, t, silo_id):
+    """ε_{L_j} for local step ``t`` on silo ``silo_id`` (None if Z_L = ∅)."""
+    if not problem.model.has_local:
+        return None
+    key = jax.random.fold_in(jax.random.fold_in(round_key, 100_003 + t), silo_id)
+    return jax.random.normal(key, family_eps_shape(problem.local_family))
 
 
 def stack_silos(datas: Sequence[PyTree]) -> PyTree:
@@ -88,6 +75,19 @@ def stack_silos(datas: Sequence[PyTree]) -> PyTree:
     pad to the max and mask inside ``log_local``.
     """
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *datas)
+
+
+def _neg(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: -x, tree)
+
+
+def _add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def _select(keep, new: PyTree, old: PyTree) -> PyTree:
+    """Per-leaf ``where`` that preserves dtypes (masked silo-state update)."""
+    return jax.tree_util.tree_map(lambda n, o: jnp.where(keep, n, o), new, old)
 
 
 def _coalesced_all_gather(tree: PyTree, axis_name: str) -> PyTree:
@@ -182,17 +182,17 @@ def _fused_decode(enc, comp, int8):
     return jax.vmap(comp.decode)(enc)
 
 
-class Server:
+class LegacyServer:
     """Round-based federation driver over a compiled multi-silo graph.
 
     Owns the replicated server state (θ, η_G, server optimizer) and the
-    silo-sharded state (stacked η_{L_j}, local optimizer states, and any
-    per-silo strategy state), and advances them one *round* at a time
-    through a jitted ``shard_map`` graph. The update rule is a
-    :class:`~repro.federated.strategy.ServerStrategy` resolved from the
-    registry by name: step-cadence strategies (SFVI) synchronize every
-    local step; round-cadence strategies (SFVI-Avg, PVI, federated EP)
-    run ``local_steps`` local VI steps and aggregate once per round.
+    silo-sharded state (stacked η_{L_j} and local optimizer states), and
+    advances them one *round* at a time through a jitted ``shard_map``
+    graph. ``run(algorithm="sfvi")`` synchronizes every local step;
+    ``run(algorithm="sfvi_avg")`` runs ``local_steps`` local VI steps on
+    the N/N_j-rescaled objective and aggregates parameters once per round
+    (FedAvg for θ, Wasserstein barycenter — or parameter-space mean —
+    for η_G).
 
     Args:
       problem: the :class:`~repro.core.sfvi.SFVIProblem` to optimize.
@@ -201,8 +201,8 @@ class Server:
       eta_G: initial global variational parameters η_G.
       num_obs: per-silo observation counts N_j (default: leading dim of
         each silo's first data leaf) — drives SFVI-Avg's N/N_j rescale.
-      server_opt: optimizer for (θ, η_G). Descent convention; the
-        strategies flip signs to ascend the ELBO.
+      server_opt: optimizer for (θ, η_G). Descent convention; the runtime
+        flips signs to ascend the ELBO.
       local_opt: optimizer for each η_{L_j} (state is stacked per silo).
       aggregator: cross-silo combine rule (mean / trimmed mean / custom).
       compressor: silo→server wire codec (identity / int8 quantization).
@@ -228,19 +228,12 @@ class Server:
         When set, every silo upload is L2-clipped and Gaussian-noised
         *inside* the compiled round — before the compression hook and
         the ``all_gather``, so the wire carries already-privatized bytes
-        (the clipped quantity is the strategy's upload measured against
-        its wire reference: raw gradients / deltas for zero-reference
-        strategies, the parameter delta from the round's public
-        broadcast for broadcast-reference ones). The Server then owns an
+        (SFVI privatizes the gradient tree; SFVI-Avg the parameter delta
+        from the round's public broadcast). The Server then owns an
         :class:`~repro.federated.privacy.RdpAccountant` composing every
         exchange; ``run`` reports cumulative ε per round.
       mesh: optional silo mesh (default ``make_silo_mesh(J)``).
       seed: base seed for the round key stream.
-      strategy: default update rule for :meth:`run` — a registry name,
-        a :class:`~repro.federated.strategy.StrategySpec`, or a
-        :class:`~repro.federated.strategy.ServerStrategy` instance.
-        Per-silo strategy state (if any) is initialized here so it
-        checkpoints alongside ``eta_L``.
     """
 
     def __init__(
@@ -260,7 +253,6 @@ class Server:
         privacy: Optional[PrivacyPolicy] = None,
         mesh=None,
         seed: int = 0,
-        strategy: Union[str, ServerStrategy, None] = None,
     ):
         self.problem = problem
         self.J = len(datas)
@@ -322,19 +314,13 @@ class Server:
             opt_L = jax.vmap(local_opt.init)(eta_L)
         else:
             eta_L, opt_L = {}, {}
-        self._strategy = resolve_strategy(
-            strategy if strategy is not None else DEFAULT_STRATEGY
-        )
-        self._strategy.validate(self)  # fail fast, not at first run()
         self.state: Dict[str, PyTree] = {
             "theta": theta,
             "eta_G": eta_G,
             "eta_L": eta_L,
             "opt_server": server_opt.init({"theta": theta, "eta_G": eta_G}),
             "opt_local": opt_L,
-            "strategy": {},
         }
-        self.state["strategy"] = self._strategy.init_silo_state(self)
         self.comm = CommMeter()
         self._round_fns: Dict[tuple, Callable] = {}
 
@@ -359,33 +345,6 @@ class Server:
         the real federation.
         """
         return self.state["eta_L"]
-
-    @property
-    def strategy(self) -> ServerStrategy:
-        """The server's default update rule (overridable per ``run``)."""
-        return self._strategy
-
-    # -- strategy resolution -------------------------------------------------
-
-    def _resolve(self, algorithm) -> ServerStrategy:
-        """None / name / spec / instance → a ServerStrategy instance."""
-        if algorithm is None:
-            return self._strategy
-        return resolve_strategy(algorithm)
-
-    def _ensure_strategy_state(self, strat: ServerStrategy) -> None:
-        """Lazily create per-silo strategy state when first needed.
-
-        Restored checkpoints (and the constructor's default strategy)
-        arrive with state already populated; this only fills the gap
-        when ``run`` is pointed at a stateful strategy the Server was
-        not built with.
-        """
-        if strat.has_silo_state and not jax.tree_util.tree_leaves(
-            self.state.get("strategy", {})
-        ):
-            self.state["strategy"] = strat.init_silo_state(self)
-        self.state.setdefault("strategy", {})
 
     # -- silo-axis padding ---------------------------------------------------
 
@@ -415,25 +374,27 @@ class Server:
 
     # -- wire accounting -----------------------------------------------------
 
-    def ship_template(self, algorithm=None) -> PyTree:
+    def ship_template(self, algorithm: str) -> PyTree:
         """Shape-only pytree of one silo's upload (pre-compression)."""
-        return self._resolve(algorithm).ship_template(self)
+        if algorithm == "sfvi":
+            return {"g_theta": self.state["theta"], "g_eta": self.state["eta_G"]}
+        return {"theta": self.state["theta"], "eta_G": self.state["eta_G"]}
 
-    def wire_spec(self, algorithm=None) -> TreeSpec:
+    def wire_spec(self, algorithm: str) -> TreeSpec:
         """The flat wire bijection of one upload (static; P = its dim)."""
         return TreeSpec.of(self.ship_template(algorithm))
 
-    def bytes_up_per_silo(self, algorithm=None) -> int:
+    def bytes_up_per_silo(self, algorithm: str) -> int:
         """Post-compression upload bytes for one silo, one gather.
 
         On the flat wire the compressor sees ONE (P,) float32 vector —
         an int8 codec therefore pays a single 4-byte scale per silo
-        instead of one per pytree leaf. The compressor's ``wire_bytes``
-        is told the wire layout so the host meter matches what the
-        compiled collective actually gathers.
+        instead of one per pytree leaf.
         """
         template = self.ship_template(algorithm)
-        return self.compressor.wire_bytes(template, wire=self.wire)
+        if self.wire in ("flat", "fused"):
+            template = np.zeros((self.wire_spec(algorithm).dim,), np.float32)
+        return self.compressor.wire_bytes(template)
 
     def bytes_down_per_silo(self) -> int:
         """Broadcast bytes: (θ, η_G) raw; the round key is ~0 and elided."""
@@ -442,7 +403,7 @@ class Server:
         )
 
     def compiled_collective_bytes(
-        self, algorithm=None, local_steps: int = 1
+        self, algorithm: str = "sfvi", local_steps: int = 1
     ) -> Dict[str, float]:
         """Ring-traffic bytes per collective kind in the compiled round.
 
@@ -454,11 +415,21 @@ class Server:
         """
         from repro.launch.roofline import collective_bytes
 
-        compiled = self._lower(algorithm, local_steps).compile()
-        return collective_bytes(compiled.as_text())
+        fn = self._get_round(algorithm, local_steps)
+        mask_shape = ((local_steps, self.J_pad) if algorithm == "sfvi"
+                      else (self.J_pad,))
+        ones = jnp.ones(mask_shape, jnp.float32)
+        args = (
+            self.state,
+            self.data,
+            jax.random.PRNGKey(0),
+            ones,
+            ones,
+        )
+        return collective_bytes(fn.lower(*args).compile().as_text())
 
     def compiled_roofline(
-        self, algorithm=None, local_steps: int = 1
+        self, algorithm: str = "sfvi", local_steps: int = 1
     ) -> Dict[str, float]:
         """Roofline terms of the compiled round: FLOPs + bytes moved.
 
@@ -470,7 +441,13 @@ class Server:
         """
         from repro.launch.roofline import collective_bytes
 
-        compiled = self._lower(algorithm, local_steps).compile()
+        fn = self._get_round(algorithm, local_steps)
+        mask_shape = ((local_steps, self.J_pad) if algorithm == "sfvi"
+                      else (self.J_pad,))
+        ones = jnp.ones(mask_shape, jnp.float32)
+        compiled = fn.lower(
+            self.state, self.data, jax.random.PRNGKey(0), ones, ones
+        ).compile()
         ca = compiled.cost_analysis() or {}
         if isinstance(ca, (list, tuple)):  # jax < 0.5 wraps it per-program
             ca = ca[0] if ca else {}
@@ -480,17 +457,6 @@ class Server:
             "collective_bytes": float(
                 sum(collective_bytes(compiled.as_text()).values())),
         }
-
-    def _lower(self, algorithm, local_steps: int):
-        """Lower one compiled round with all-ones masks (for inspection)."""
-        strat = self._resolve(algorithm)
-        fn = self._get_round(strat, local_steps)
-        mask_shape = ((local_steps, self.J_pad) if strat.cadence == "step"
-                      else (self.J_pad,))
-        ones = jnp.ones(mask_shape, jnp.float32)
-        return fn.lower(
-            self.state, self.data, jax.random.PRNGKey(0), ones, ones
-        )
 
     def _fused_trim(self):
         """Fused-reduction mode for the configured aggregator.
@@ -508,28 +474,21 @@ class Server:
 
     # -- the compiled round --------------------------------------------------
 
-    def _get_round(self, algorithm, local_steps: int) -> Callable:
-        strat = self._resolve(algorithm)
-        strat.validate(self)
-        self._ensure_strategy_state(strat)
-        key = (strat.cache_key(), local_steps)
+    def _get_round(self, algorithm: str, local_steps: int) -> Callable:
+        key = (algorithm, local_steps)
         if key not in self._round_fns:
-            if strat.cadence == "step":
-                body = self._step_body(strat, local_steps)
-            elif strat.cadence == "round":
-                body = self._round_body(strat, local_steps)
+            if algorithm == "sfvi":
+                body = self._sfvi_body(local_steps)
+            elif algorithm == "sfvi_avg":
+                body = self._avg_body(local_steps)
             else:
-                raise ValueError(
-                    f"strategy {strat.name!r} has unknown cadence "
-                    f"{strat.cadence!r} (step/round)"
-                )
+                raise ValueError(f"unknown algorithm {algorithm!r}")
             sharded = shard_map(
                 body,
                 mesh=self.mesh,
                 in_specs=(
                     P(), P(), P(),  # theta, eta_G, opt_server (replicated)
                     P("silo"), P("silo"),  # eta_L, opt_local
-                    P("silo"),  # per-silo strategy state (λ_j, ...)
                     P("silo"), P("silo"), P("silo"),  # data, sids, n_j
                     # Participation mask rides ONCE, replicated; each block
                     # slices its silos' entries via sids. Passing it a
@@ -539,139 +498,105 @@ class Server:
                     # the sync path; staleness-decayed on the async path).
                     P(), P(), P(),  # full mask, full weights, round key
                 ),
-                out_specs=(
-                    P(), P(), P(), P("silo"), P("silo"), P("silo"), P()
-                ),
+                out_specs=(P(), P(), P(), P("silo"), P("silo"), P()),
                 check_rep=False,
             )
 
             def round_fn(state, data, round_key, mask, weights):
                 sids = jnp.arange(self.J_pad, dtype=jnp.int32)
                 n_j = jnp.asarray(self.num_obs)
-                (theta, eta_G, opt_server, eta_L, opt_L, strat_state,
-                 elbos) = sharded(
+                theta, eta_G, opt_server, eta_L, opt_L, elbos = sharded(
                     state["theta"], state["eta_G"], state["opt_server"],
                     state["eta_L"], state["opt_local"],
-                    state.get("strategy", {}),
                     data, sids, n_j, mask, weights, round_key,
                 )
                 new_state = {
                     "theta": theta, "eta_G": eta_G, "eta_L": eta_L,
                     "opt_server": opt_server, "opt_local": opt_L,
-                    "strategy": strat_state,
                 }
                 return new_state, {"elbo": elbos}
 
             self._round_fns[key] = jax.jit(round_fn)
         return self._round_fns[key]
 
-    def _ctx(self, K: int, wire) -> StrategyContext:
-        """Static per-body facts handed to every strategy hook."""
-        return StrategyContext(
-            problem=self.problem,
-            J=self.J,
-            K=K,
-            server_opt=self._server_opt,
-            local_opt=self._local_opt,
-            has_local=self._has_local,
-            eta_mode=self.eta_mode,
-            aggregator=self.aggregator,
-            wire=wire,
-            fused=self.wire == "fused",
-            # N = Σ_j N_j over the REAL federation — the padded tail
-            # repeats silo 0's count purely to keep the dummy silos'
-            # per-silo scale finite (their contribution is masked out).
-            total_obs=float(np.sum(self.num_obs[: self.J])),
-        )
-
-    def _ship_upload(self, ship, m_j, key, ref, wire, fused):
-        """The strategy-independent upload pipeline for one silo.
-
-        pack → (fused: defer to the stacked fused pass) → DP privatize
-        against the strategy's wire reference → data-independent filler
-        for non-participants (the reference itself, or zeros) → encode.
-        Non-participating silos never put data-dependent bytes on the
-        wire — they "don't upload"; aggregation masks them anyway — so
-        the accountant's subsampling amplification holds on what is
-        actually transmitted.
-        """
-        if wire is not None:
-            ship = wire.pack(ship)
-        if fused:
-            # Privatize/mask/quantize run as ONE fused pass over the
-            # stacked (J, P) block after the per-silo vmap.
-            return ship
-        if self.privacy is not None:
-            # Clip + noise BEFORE compression and the gather: the wire
-            # never carries a raw silo quantity.
-            ship = self.privacy.privatize(ship, key, reference=ref)
-        idle = (ref if ref is not None
-                else jax.tree_util.tree_map(jnp.zeros_like, ship))
-        ship = _select(m_j > 0.5, ship, idle)
-        return self.compressor.encode(ship)
-
-    def _packed_reference(self, strat, ctx, wire, theta, eta_G):
-        """The strategy's wire reference, packed to wire form (or None)."""
-        ref = strat.reference_tree(ctx, theta, eta_G)
-        if ref is not None and wire is not None:
-            ref = wire.pack(ref)
-        return ref
-
-    def _step_body(self, strat: ServerStrategy, K: int) -> Callable:
+    def _sfvi_body(self, K: int) -> Callable:
         """Round = K synchronized steps: gather + server update every step."""
-        problem = self.problem
+        problem, J = self.problem, self.J
         agg, comp = self.aggregator, self.compressor
+        server_opt, local_opt = self._server_opt, self._local_opt
+        has_local = self._has_local
         privacy = self.privacy
         # Flat wire: the whole upload is ONE (P,) f32 vector, so clip,
         # noise, quantization, the gather and the aggregation below all
         # see a single array per silo ((J, P) once stacked). The fused
         # wire keeps the same layout but runs those stages as the Pallas
         # kernels of repro.kernels.wire on the stacked block.
-        wire = self.wire_spec(strat) if self.wire != "legacy" else None
+        wire = self.wire_spec("sfvi") if self.wire != "legacy" else None
         fused = self.wire == "fused"
         int8 = type(comp) is Int8Compressor
         trim = self._fused_trim()
-        ctx = self._ctx(K, wire)
 
-        def body(theta, eta_G, opt_server, eta_L, opt_L, strat_state,
+        def body(theta, eta_G, opt_server, eta_L, opt_L,
                  data_sh, sids, n_j, masks_full, weights_full, round_key):
-            # masks_full: (K, J) — step-cadence strategies sample
-            # participation PER EXCHANGE (each gather is its own
+            # masks_full: (K, J) — SFVI samples participation PER EXCHANGE
+            # (it synchronizes every step, so each gather is its own
             # subsampling event; this is what makes the accountant's
             # per-exchange amplification sound — one shared mask across
             # the K gathers would expose K correlated outputs per draw).
             # weights_full: (K, J) aggregation weights — identical to
             # masks_full on the sync path.
+            del n_j  # SFVI needs no N/N_j rescale (likelihood_scale = 1)
 
             def sync_step(carry, step_xs):
                 t, mask_full, w_full = step_xs
                 mask_sh = mask_full[sids]  # this block's silos
                 n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
-                (theta, eta_G, opt_server, eta_L, opt_L,
-                 strat_state) = carry
+                theta, eta_G, opt_server, eta_L, opt_L = carry
                 eps_G = global_eps(problem, round_key, t)
-                ref = self._packed_reference(strat, ctx, wire, theta, eta_G)
 
-                def per_silo(eta_Lj, opt_Lj, st_j, data_j, sid, m_j,
-                             n_obs_j):
-                    eta_Lj, opt_Lj, st_j, ship, hatLj = strat.silo_step(
-                        ctx, theta, eta_G, eta_Lj, opt_Lj, st_j,
-                        data_j, sid, m_j, n_obs_j, round_key, t, eps_G,
+                def per_silo(eta_Lj, opt_Lj, data_j, sid, m_j):
+                    el = eta_Lj if has_local else None
+                    eps_L = silo_eps(problem, round_key, t, sid)
+                    g_th, g_eta, g_loc, hatLj = problem.silo_grads(
+                        theta, eta_G, el, eps_G, eps_L, data_j
                     )
-                    key = (None if privacy is None
-                           else privacy.upload_key(round_key, t, sid))
-                    ship = self._ship_upload(ship, m_j, key, ref, wire,
-                                             fused)
-                    return eta_Lj, opt_Lj, st_j, ship, hatLj * m_j
+                    if has_local:
+                        upd, new_opt = local_opt.update(_neg(g_loc), opt_Lj, el)
+                        eta_Lj = _select(m_j > 0.5, apply_updates(el, upd), el)
+                        opt_Lj = _select(m_j > 0.5, new_opt, opt_Lj)
+                    ship = {"g_theta": g_th, "g_eta": g_eta}
+                    if wire is not None:
+                        ship = wire.pack(ship)
+                    if fused:
+                        # Privatize/mask/quantize run as ONE fused pass
+                        # over the stacked (J, P) block after the vmap.
+                        return eta_Lj, opt_Lj, ship, hatLj * m_j
+                    if privacy is not None:
+                        # Clip + noise BEFORE compression and the gather:
+                        # the wire never carries a raw silo gradient.
+                        ship = privacy.privatize(
+                            ship, privacy.upload_key(round_key, t, sid)
+                        )
+                    # Non-participating silos upload a data-independent
+                    # zero tree (they "don't upload"; aggregation masks
+                    # them anyway). This is what makes the accountant's
+                    # subsampling amplification valid: an unsampled
+                    # silo's data is absent from the wire, not merely
+                    # down-weighted at the server.
+                    ship = _select(
+                        m_j > 0.5, ship,
+                        jax.tree_util.tree_map(jnp.zeros_like, ship),
+                    )
+                    ship = comp.encode(ship)
+                    return eta_Lj, opt_Lj, ship, hatLj * m_j
 
-                eta_L, opt_L, strat_state, enc, hatL = jax.vmap(per_silo)(
-                    eta_L, opt_L, strat_state, data_sh, sids, mask_sh, n_j
+                eta_L, opt_L, enc, hatL = jax.vmap(per_silo)(
+                    eta_L, opt_L, data_sh, sids, mask_sh
                 )
                 if fused:
                     enc = _fused_ship(
-                        enc, mask_sh,
-                        _fused_keys(privacy, round_key, t, sids),
-                        ref, privacy, comp, int8)
+                        enc, mask_sh, _fused_keys(privacy, round_key, t, sids),
+                        None, privacy, comp, int8)
                 enc = _coalesced_all_gather(enc, "silo")
                 hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
 
@@ -689,17 +614,22 @@ class Server:
                 else:
                     shipped = jax.vmap(comp.decode)(enc)  # (J, P) | per leaf
                     mean_g = agg.combine(shipped, w_full)
+                g_sum = jax.tree_util.tree_map(lambda x: x * float(J), mean_g)
                 if wire is not None:
-                    mean_g = wire.unpack(mean_g)
-                theta, eta_G, opt_server, elbo = strat.server_step(
-                    ctx, theta, eta_G, opt_server, mean_g, hatL_sum,
-                    n_active, eps_G,
-                )
-                carry = (theta, eta_G, opt_server, eta_L, opt_L,
-                         strat_state)
+                    g_sum = wire.unpack(g_sum)
+                g_th0, g_eta0, hatL0 = problem.server_grads(theta, eta_G, eps_G)
+                g = {
+                    "theta": _add(g_sum["g_theta"], g_th0),
+                    "eta_G": _add(g_sum["g_eta"], g_eta0),
+                }
+                params = {"theta": theta, "eta_G": eta_G}
+                updates, opt_server = server_opt.update(_neg(g), opt_server, params)
+                merged = apply_updates(params, updates)
+                elbo = hatL0 + (float(J) / n_active) * hatL_sum
+                carry = (merged["theta"], merged["eta_G"], opt_server, eta_L, opt_L)
                 return carry, elbo
 
-            carry = (theta, eta_G, opt_server, eta_L, opt_L, strat_state)
+            carry = (theta, eta_G, opt_server, eta_L, opt_L)
             carry, elbos = jax.lax.scan(
                 sync_step, carry, (jnp.arange(K), masks_full, weights_full)
             )
@@ -707,69 +637,150 @@ class Server:
 
         return body
 
-    def _round_body(self, strat: ServerStrategy, K: int) -> Callable:
-        """Round = K local steps per silo, ONE gather + one server merge."""
+    def _avg_body(self, K: int) -> Callable:
+        """Round = K local VI steps per silo, ONE gather + parameter merge."""
+        problem, J = self.problem, self.J
         agg, comp = self.aggregator, self.compressor
+        server_opt, local_opt = self._server_opt, self._local_opt
+        has_local = self._has_local
+        eta_mode = self.eta_mode
         privacy = self.privacy
-        wire = self.wire_spec(strat) if self.wire != "legacy" else None
+        wire = self.wire_spec("sfvi_avg") if self.wire != "legacy" else None
         fused = self.wire == "fused"
         int8 = type(comp) is Int8Compressor
         trim = self._fused_trim()
-        ctx = self._ctx(K, wire)
+        # N = Σ_j N_j over the REAL federation — the padded tail repeats
+        # silo 0's count purely to keep the dummy silos' per-silo scale
+        # finite (their contribution is masked out regardless).
+        total_obs = float(np.sum(self.num_obs[: self.J]))
 
-        def body(theta, eta_G, opt_server, eta_L, opt_L, strat_state,
+        def body(theta, eta_G, opt_server, eta_L, opt_L,
                  data_sh, sids, n_j, mask_full, w_full, round_key):
             mask_sh = mask_full[sids]  # this block's silos
             n_active = jnp.maximum(jnp.sum(mask_full), 1.0)
-            # The strategy's wire reference — for broadcast-reference
-            # strategies this is the round's public (θ, η_G) in wire
-            # form: the DP delta reference AND the data-independent
-            # upload of silos that did not participate.
-            ref = self._packed_reference(strat, ctx, wire, theta, eta_G)
+            # The round's public broadcast in wire form: the DP delta
+            # reference AND the data-independent upload of silos that
+            # did not participate.
+            broadcast = {"theta": theta, "eta_G": eta_G}
+            if wire is not None:
+                broadcast = wire.pack(broadcast)
 
-            def per_silo(eta_Lj, opt_Lj, st_j, data_j, sid, m_j, n_obs_j):
-                eta_Lj, opt_Lj, st_j, ship, elbos = strat.local_run(
-                    ctx, theta, eta_G, eta_Lj, opt_Lj, st_j,
-                    data_j, sid, m_j, n_obs_j, round_key,
+            def per_silo(eta_Lj, opt_Lj, data_j, sid, m_j, n_obs_j):
+                scale = total_obs / n_obs_j  # §3.2 point 2: N / N_j
+                el0 = eta_Lj if has_local else None
+                s_state = server_opt.init({"theta": theta, "eta_G": eta_G})
+
+                def local_step(carry, t):
+                    th, eg, el, s_st, l_st = carry
+                    eps_G = global_eps(problem, round_key, t)
+                    eps_L = silo_eps(problem, round_key, t, sid)
+
+                    def objective(th_, eg_, el_):
+                        val = problem.hat_L0(th_, eg_, eps_G)
+                        return val + problem.hat_Lj(
+                            th_, eg_, el_, eps_G, eps_L, data_j, scale
+                        )
+
+                    if has_local:
+                        val, (g_th, g_eg, g_el) = jax.value_and_grad(
+                            objective, argnums=(0, 1, 2)
+                        )(th, eg, el)
+                        upd_l, l_st = local_opt.update(_neg(g_el), l_st, el)
+                        el = apply_updates(el, upd_l)
+                    else:
+                        val, (g_th, g_eg) = jax.value_and_grad(
+                            lambda a, b: objective(a, b, None), argnums=(0, 1)
+                        )(th, eg)
+                    params = {"theta": th, "eta_G": eg}
+                    upd_s, s_st = server_opt.update(
+                        _neg({"theta": g_th, "eta_G": g_eg}), s_st, params
+                    )
+                    merged = apply_updates(params, upd_s)
+                    return (merged["theta"], merged["eta_G"], el, s_st, l_st), val
+
+                carry = (theta, eta_G, el0, s_state, opt_Lj)
+                (th, eg, el, _, l_st), elbos = jax.lax.scan(
+                    local_step, carry, jnp.arange(K)
                 )
-                key = (None if privacy is None
-                       else privacy.upload_key(round_key, 0, sid))
-                ship = self._ship_upload(ship, m_j, key, ref, wire, fused)
-                return eta_Lj, opt_Lj, st_j, ship, elbos * m_j
+                if has_local:
+                    eta_Lj = _select(m_j > 0.5, el, el0)
+                    opt_Lj = _select(m_j > 0.5, l_st, opt_Lj)
+                ship = {"theta": th, "eta_G": eg}
+                if wire is not None:
+                    ship = wire.pack(ship)
+                if fused:
+                    # Delta-clip/noise vs the broadcast, the broadcast
+                    # fallback for non-participants, and quantization all
+                    # run as ONE fused pass on the stacked block.
+                    return eta_Lj, opt_Lj, ship, elbos * m_j
+                if privacy is not None:
+                    # Parameter upload: the private quantity is the delta
+                    # from the round's broadcast (θ, η_G), which the server
+                    # already knows. Clip + noise the delta, add it back —
+                    # the wire format (flat vector or parameter pytree) is
+                    # unchanged, and it is privatized before compression
+                    # and the gather.
+                    ship = privacy.privatize(
+                        ship,
+                        privacy.upload_key(round_key, 0, sid),
+                        reference=broadcast,
+                    )
+                # Non-participating silos upload the round's public
+                # broadcast — data-independent, so the subsampling
+                # amplification in the accountant actually holds on the
+                # wire (aggregation masks these rows regardless).
+                ship = _select(m_j > 0.5, ship, broadcast)
+                ship = comp.encode(ship)
+                return eta_Lj, opt_Lj, ship, elbos * m_j
 
-            eta_L, opt_L, strat_state, enc, elbos = jax.vmap(per_silo)(
-                eta_L, opt_L, strat_state, data_sh, sids, mask_sh, n_j
+            eta_L, opt_L, enc, elbos = jax.vmap(per_silo)(
+                eta_L, opt_L, data_sh, sids, mask_sh, n_j
             )
             if fused:
                 enc = _fused_ship(
                     enc, mask_sh, _fused_keys(privacy, round_key, 0, sids),
-                    ref, privacy, comp, int8)
+                    broadcast, privacy, comp, int8)
             enc = _coalesced_all_gather(enc, "silo")
             elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
 
             if fused:
-                # Round-cadence merges may need every silo's upload (the
-                # barycenter), so the dequantized matrix is materialized
-                # here (unlike the step cadence); the reduction itself
-                # still runs as the fused kernel.
+                # The barycenter needs every silo's η_G anyway, so the
+                # dequantized matrix is materialized here (unlike SFVI);
+                # the reduction itself still runs as the fused kernel.
                 shipped = _fused_decode(enc, comp, int8)
                 vec = (wire_kernels.fused_combine(
                     shipped, w_full, trim_frac=trim[0])
                     if trim is not None else agg.combine(shipped, w_full))
-                combined = wire.unpack(vec)
+                merged = wire.unpack(vec)
+                eta_shipped = jax.vmap(lambda v: wire.unpack(v)["eta_G"])(
+                    shipped)
             elif wire is not None:
                 shipped = jax.vmap(comp.decode)(enc)  # (J, P)
-                combined = wire.unpack(agg.combine(shipped, w_full))
+                merged = wire.unpack(agg.combine(shipped, w_full))
+                eta_shipped = jax.vmap(lambda v: wire.unpack(v)["eta_G"])(
+                    shipped)
             else:
                 shipped = jax.vmap(comp.decode)(enc)  # stacked pytree
-                combined = {k: agg.combine(v, w_full)
-                            for k, v in shipped.items()}
-            theta_new, eta_new, opt_server = strat.server_update(
-                ctx, theta, eta_G, opt_server, combined, shipped,
-                w_full, n_active,
-            )
-            return (theta_new, eta_new, opt_server, eta_L, opt_L,
-                    strat_state, elbo_t)
+                merged = {k: agg.combine(v, w_full)
+                          for k, v in shipped.items()}
+                eta_shipped = shipped["eta_G"]
+            theta_new = merged["theta"]
+            if eta_mode == "param":
+                eta_new = merged["eta_G"]
+            else:
+                # W2 barycenter in moment space, generic over the
+                # family's moment bridge: analytic (aggregator-
+                # robustified) for diag-form families, the in-graph
+                # Newton–Schulz fixed point for full-covariance ones
+                # (the fused wire plugs in the fused-step kernel — same
+                # iteration, one kernel per step instead of 3 matmuls).
+                sqrtm_kw = (
+                    {"sqrtm": wire_kernels.sqrtm_newton_schulz_fused}
+                    if fused else {})
+                eta_new = family_barycenter(
+                    problem.global_family, eta_shipped, w_full, agg,
+                    **sqrtm_kw)
+            return theta_new, eta_new, opt_server, eta_L, opt_L, elbo_t
 
         return body
 
@@ -779,18 +790,13 @@ class Server:
         self,
         num_rounds: int,
         *,
-        algorithm=None,
+        algorithm: str = "sfvi",
         local_steps: int = 1,
         scheduler: Optional[RoundScheduler] = None,
         callback: Optional[Callable[[int, dict], None]] = None,
         start_round: int = 0,
     ) -> Dict[str, list]:
         """Advance the federation ``num_rounds`` rounds; returns history.
-
-        ``algorithm`` selects the update rule — a registry name (any of
-        :func:`repro.federated.strategy.strategy_names`), a
-        ``StrategySpec``, or a ``ServerStrategy`` instance; None uses
-        the Server's default strategy.
 
         ``start_round`` is the absolute index of the first round: the
         round PRNG key, the scheduler's participation draws and the
@@ -800,35 +806,31 @@ class Server:
         ``federated.api.Experiment`` builds its bit-exact save/resume
         guarantee on.
 
-        One round is ``local_steps`` optimizer steps: a step-cadence
-        strategy pays one up+down exchange per step, a round-cadence
-        strategy one per round — the meter (``self.comm``) records
-        exactly that asymmetry. ``scheduler`` injects partial
-        participation / straggler masks: uninvited silos cost nothing;
-        invited stragglers (dropout) receive the broadcast (download is
-        billed) but never upload, and the aggregation is rescaled by
-        the realized active count (unbiased, §3 Remark).
+        One round is ``local_steps`` optimizer steps: SFVI pays one
+        up+down exchange per step, SFVI-Avg one per round — the meter
+        (``self.comm``) records exactly that asymmetry. ``scheduler``
+        injects partial participation / straggler masks: uninvited silos
+        cost nothing; invited stragglers (dropout) receive the broadcast
+        (download is billed) but never upload, and the aggregation is
+        rescaled by the realized active count (unbiased, §3 Remark).
 
         With ``privacy`` set, each of the round's ``exchanges`` gathers
         is one (subsampled) Gaussian-mechanism invocation: the owned
         accountant composes them (q = the scheduler's invitation rate)
         and ``history["epsilon"]`` traces the cumulative ε at the
-        policy's δ after each round. A step-cadence strategy draws a
-        FRESH participation mask for every local step (schedule index =
-        exchange index ``r * local_steps + t``), so each gather is an
-        independent subsampling event and the per-exchange amplification
-        is sound; a round-cadence strategy draws one mask per round
-        (index ``r``).
+        policy's δ after each round. SFVI draws a FRESH participation
+        mask for every local step (schedule index = exchange index
+        ``r * local_steps + t``), so each gather is an independent
+        subsampling event and the per-exchange amplification is sound;
+        SFVI-Avg draws one mask per round (index ``r``).
         """
         if local_steps < 1:
             raise ValueError(f"local_steps must be >= 1, got {local_steps}")
-        strat = self._resolve(algorithm)
-        fn = self._get_round(strat, local_steps)
+        fn = self._get_round(algorithm, local_steps)
         sched = scheduler or RoundScheduler(self.J, seed=self.seed)
-        up1 = self.bytes_up_per_silo(strat)
+        up1 = self.bytes_up_per_silo(algorithm)
         down1 = self.bytes_down_per_silo()
-        step_cadence = strat.cadence == "step"
-        exchanges = local_steps if step_cadence else 1
+        exchanges = local_steps if algorithm == "sfvi" else 1
         history: Dict[str, list] = {
             "elbo": [], "elbo_trace": [], "bytes_up": [], "bytes_down": [],
             "n_active": [],
@@ -841,14 +843,13 @@ class Server:
             q = float(getattr(sched, "participation", 1.0))
         base_key = jax.random.PRNGKey(self.seed)
         for r in range(start_round, start_round + num_rounds):
-            # A step-cadence strategy synchronizes every local step, so
-            # each of the round's `exchanges` gathers is its OWN
-            # participation draw (schedule index = exchange index) —
-            # required for the accountant's per-exchange subsampling
-            # amplification to be sound. Round cadence gathers once:
-            # one draw per round.
+            # SFVI synchronizes every local step, so each of the round's
+            # `exchanges` gathers is its OWN participation draw (schedule
+            # index = exchange index) — required for the accountant's
+            # per-exchange subsampling amplification to be sound.
+            # SFVI-Avg gathers once: one draw per round.
             ex_idx = ([r * local_steps + t for t in range(local_steps)]
-                      if step_cadence else [r])
+                      if algorithm == "sfvi" else [r])
             ex_masks = [sched.mask(i) for i in ex_idx]
             active = [int(np.sum(np.asarray(m))) for m in ex_masks]
             # Stragglers received the broadcast before dropping: bill their
@@ -860,7 +861,8 @@ class Server:
                 for k, i in enumerate(ex_idx)
             ]
             ex_masks = [self._pad_mask(m) for m in ex_masks]
-            mask = (jnp.stack(ex_masks) if step_cadence else ex_masks[0])
+            mask = (jnp.stack(ex_masks) if algorithm == "sfvi"
+                    else ex_masks[0])
             round_key = jax.random.fold_in(base_key, r)
             # Sync rounds aggregate with the participation mask itself;
             # the async engine passes staleness-decayed weights instead.
