@@ -64,8 +64,10 @@ NARRATIVE = {
 
 
 def main():
-    perf = json.load(open(PERF))
-    base = {(r["arch"], r["shape"]): r for r in json.load(open(BASE))}
+    with open(PERF) as f:
+        perf = json.load(f)
+    with open(BASE) as f:
+        base = {(r["arch"], r["shape"]): r for r in json.load(f)}
     # newest record per (arch, levers) wins
     dedup = {}
     for r in perf:

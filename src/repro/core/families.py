@@ -63,9 +63,12 @@ class DiagGaussian(VariationalFamily):
         return {"mu": (self.dim,), "log_sigma": (self.dim,)}
 
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
+        # Explicit dtype: a weak-typed leaf here strengthens after one
+        # server update, changing the carry aval and retracing the
+        # compiled round (caught by repro.debug's recompile watchdog).
         return {
             "mu": mu_scale * jax.random.normal(key, (self.dim,)),
-            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init, dtype=jnp.float32),
         }
 
     def sample(self, params: Params, eps: jnp.ndarray) -> jnp.ndarray:
@@ -111,7 +114,7 @@ class CholeskyGaussian(VariationalFamily):
         n_off = self.dim * (self.dim - 1) // 2
         return {
             "mu": mu_scale * jax.random.normal(key, (self.dim,)),
-            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init, dtype=jnp.float32),
             "L_packed": jnp.zeros((n_off,)),
         }
 
@@ -193,7 +196,7 @@ class LowRankGaussian(VariationalFamily):
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
         return {
             "mu": mu_scale * jax.random.normal(key, (self.dim,)),
-            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init, dtype=jnp.float32),
             "U": jnp.zeros((self.dim, self.rank)),
         }
 
@@ -304,7 +307,7 @@ class ConditionalGaussian(VariationalFamily):
         k1, _ = jax.random.split(key)
         params = {
             "mu_bar": mu_scale * jax.random.normal(k1, (self.dim,)),
-            "log_sigma": jnp.full((self.dim,), log_sigma_init),
+            "log_sigma": jnp.full((self.dim,), log_sigma_init, dtype=jnp.float32),
         }
         if self.use_coupling:
             params["C"] = jnp.zeros((self.dim, self.global_dim))
@@ -365,7 +368,7 @@ class BatchedDiagGaussian(VariationalFamily):
     def init(self, key, mu_scale: float = 0.01, log_sigma_init: float = -2.0) -> Params:
         return {
             "mu": mu_scale * jax.random.normal(key, (self.batch, self.dim)),
-            "log_sigma": jnp.full((self.batch, self.dim), log_sigma_init),
+            "log_sigma": jnp.full((self.batch, self.dim), log_sigma_init, dtype=jnp.float32),
         }
 
     def sample(self, params: Params, eps: jnp.ndarray) -> jnp.ndarray:

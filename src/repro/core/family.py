@@ -251,7 +251,7 @@ class FamilySpec:
     kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "FamilySpec":
+    def from_dict(cls, d: Dict[str, Any]) -> FamilySpec:
         return cls(name=d["name"], kwargs=dict(d.get("kwargs", {})))
 
 

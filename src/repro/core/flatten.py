@@ -29,7 +29,7 @@ class VectorSpec:
     shapes: Tuple[Tuple[str, Tuple[int, ...]], ...]
 
     @staticmethod
-    def create(shapes: Dict[str, Tuple[int, ...]]) -> "VectorSpec":
+    def create(shapes: Dict[str, Tuple[int, ...]]) -> VectorSpec:
         return VectorSpec(tuple((k, tuple(v)) for k, v in shapes.items()))
 
     @property
@@ -64,7 +64,7 @@ class TreeSpec:
     dtypes: Tuple[str, ...]
 
     @classmethod
-    def of(cls, tree: Any) -> "TreeSpec":
+    def of(cls, tree: Any) -> TreeSpec:
         """Descriptor for ``tree``'s structure (values are ignored)."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         return cls(
@@ -90,7 +90,7 @@ class TreeSpec:
     def unpack(self, vec: jnp.ndarray) -> Any:
         """Inverse of :meth:`pack`: restore shapes, dtypes, structure."""
         leaves, off = [], 0
-        for shape, dtype in zip(self.shapes, self.dtypes):
+        for shape, dtype in zip(self.shapes, self.dtypes, strict=True):
             size = int(np.prod(shape, dtype=np.int64))
             leaves.append(vec[off : off + size].reshape(shape).astype(dtype))
             off += size

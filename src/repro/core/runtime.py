@@ -116,6 +116,7 @@ class Silo:
         self.data = data
         self.eta_L = eta_L
         self.num_obs = num_obs
+        # repro-lint: allow[R1] — deprecated eager adapter: per-silo stream rooted at a pure function of (seed, silo_id)
         self._key = jax.random.PRNGKey(seed * 7919 + silo_id)
         self._local_opt = local_optimizer
         self._local_opt_state = (

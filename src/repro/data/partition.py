@@ -85,7 +85,7 @@ def pad_ragged_silos(datas: List[dict], weight_key: str = "w") -> List[dict]:
     sizes = [len(next(iter(d.values()))) for d in datas]
     n_max = max(sizes)
     out = []
-    for d, n in zip(datas, sizes):
+    for d, n in zip(datas, sizes, strict=True):
         if weight_key in d:
             raise ValueError(f"silo data already has a {weight_key!r} key")
         pad = n_max - n

@@ -1,0 +1,183 @@
+"""Runtime sanitizers for the compiled federated round.
+
+`repro-lint` (tools/repro_lint) enforces the *static* invariants; this
+module is the dynamic half — :func:`sanitize` wires three checks around
+a round loop:
+
+* a host-direction ``jax.transfer_guard`` ("disallow") — any *implicit*
+  device↔host transfer inside the loop raises (device-to-device stays
+  free: a multi-device mesh legitimately spreads replicated state on
+  first touch).  The runtime's sanctioned pulls are
+  explicit ``jax.device_get``/``device_put`` (which the guard permits),
+  so a guard trip localizes exactly the stray host sync that would
+  stall the round pipeline in production.
+* ``jax_debug_nans`` — re-runs the op that produced a NaN un-jitted and
+  raises with a usable traceback instead of letting the NaN wash
+  through the ELBO history.
+* a **recompile watchdog** — the compiled round calls
+  :func:`trace_event` from inside its traced body, which executes once
+  per (re)trace and never at run time.  The watchdog budgets one trace
+  per ``(strategy, local_steps, wire)`` config; a second trace (shape
+  drift in the carry, a non-hashable static, a rebuilt ``Server``
+  bypassing the process-level graph cache of
+  ``repro.federated.graph_cache``) raises :class:`RecompileError` at
+  the moment it happens, not as a mystery slowdown.  ``save→resume``
+  on the same device count shares compiled rounds through the graph
+  cache, so the budget holds across resume too (regression-tested in
+  tests/test_sanitize.py).
+
+Entry points: ``Experiment.run(sanitize=True)``, the CLI's
+``--sanitize`` flag, or the context manager directly::
+
+    with repro.debug.sanitize() as watchdog:
+        exp.run(rounds)
+    assert watchdog.total == 1
+
+Not thread-safe: the active watchdog is process-global, matching jax's
+own config flags.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from collections import Counter
+from typing import Any, Iterator, Optional
+
+import jax
+
+__all__ = [
+    "RecompileError", "TraceWatchdog", "host_bridge", "sanitize",
+    "suspended_tracing", "trace_event", "watch_recompiles",
+]
+
+
+class RecompileError(RuntimeError):
+    """The compiled round retraced beyond its budget."""
+
+
+class TraceWatchdog:
+    """Counts traces per tag; raises when a tag exceeds ``limit``."""
+
+    def __init__(self, limit: int = 1):
+        self.limit = int(limit)
+        self.counts: Counter = Counter()
+        self._suspend = 0
+
+    def record(self, tag: Any) -> None:
+        if self._suspend:
+            return
+        self.counts[tag] += 1
+        if self.counts[tag] > self.limit:
+            raise RecompileError(
+                f"round graph {tag!r} traced {self.counts[tag]} times "
+                f"(budget {self.limit}) — the jit cache missed. Usual "
+                "causes: shape/dtype/weak-type drift in the carried state, "
+                "an unhashable static argument, or a rebuilt Server outside "
+                "the process-level graph cache (bundle-overridden builds "
+                "opt out — see repro.federated.graph_cache).")
+
+    @property
+    def total(self) -> int:
+        """Traces observed across all configs since the watch began."""
+        return sum(self.counts.values())
+
+    @contextlib.contextmanager
+    def suspended(self) -> Iterator[None]:
+        self._suspend += 1
+        try:
+            yield
+        finally:
+            self._suspend -= 1
+
+
+_ACTIVE: Optional[TraceWatchdog] = None
+
+
+def trace_event(tag: Any) -> None:
+    """Trace-count hook: call from *inside* a jitted function body.
+
+    The Python body of a jitted function executes only while jax traces
+    it, so this records compilations, never steady-state rounds.  No-op
+    (one global read) when no watchdog is active.
+    """
+    if _ACTIVE is not None:
+        _ACTIVE.record(tag)
+
+
+@contextlib.contextmanager
+def host_bridge() -> Iterator[None]:
+    """Sanctioned control-plane window inside a guarded round loop.
+
+    The loop's host side legitimately builds tiny device values each
+    round — the PRNG root, ``fold_in`` of a Python round index, the
+    scheduler's participation mask — whose constructors transfer
+    scalars implicitly, which ``jax.transfer_guard("disallow")`` would
+    reject.  Wrapping exactly those construction sites keeps the guard
+    meaningful everywhere else: a stray ``np.asarray(metrics)`` or an
+    implicit device pull in a callback still raises.
+    """
+    with jax.transfer_guard("allow"):
+        yield
+
+
+@contextlib.contextmanager
+def suspended_tracing() -> Iterator[None]:
+    """Window where deliberate traces (``.lower()`` inspection) are free."""
+    if _ACTIVE is None:
+        yield
+    else:
+        with _ACTIVE.suspended():
+            yield
+
+
+@contextlib.contextmanager
+def watch_recompiles(limit: int = 1) -> Iterator[TraceWatchdog]:
+    """Install a fresh watchdog as the process-global trace listener."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = wd = TraceWatchdog(limit)
+    try:
+        yield wd
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def _config_flag(name: str, value: Any) -> Iterator[None]:
+    old = getattr(jax.config, name)
+    jax.config.update(name, value)
+    try:
+        yield
+    finally:
+        jax.config.update(name, old)
+
+
+@contextlib.contextmanager
+def sanitize(
+    *,
+    transfer_guard: Optional[str] = "disallow",
+    debug_nans: bool = True,
+    watchdog: bool = True,
+    trace_limit: int = 1,
+) -> Iterator[Optional[TraceWatchdog]]:
+    """All three sanitizers around a round loop; yields the watchdog.
+
+    ``transfer_guard`` takes jax's levels ("allow"/"log"/"disallow"/
+    "log_explicit"/"disallow_explicit") or None to leave transfers
+    unguarded; ``trace_limit`` is the per-config trace budget.
+    """
+    with contextlib.ExitStack() as stack:
+        wd = (stack.enter_context(watch_recompiles(trace_limit))
+              if watchdog else None)
+        if transfer_guard is not None:
+            # Host directions only: device-to-device movement is how a
+            # multi-device mesh spreads replicated state on first touch
+            # (legitimate, one-time), while implicit host transfers are
+            # exactly the stray syncs this sanitizer exists to catch.
+            stack.enter_context(
+                jax.transfer_guard_host_to_device(transfer_guard))
+            stack.enter_context(
+                jax.transfer_guard_device_to_host(transfer_guard))
+        if debug_nans:
+            stack.enter_context(_config_flag("jax_debug_nans", True))
+        yield wd

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.federated.metering import tree_bytes
+from repro.federated.metering import is_array, tree_bytes
 
 PyTree = Any
 
@@ -36,7 +36,7 @@ def _tree_elements(tree: PyTree) -> int:
     return sum(
         int(np.prod(x.shape))
         for x in jax.tree_util.tree_leaves(tree)
-        if hasattr(x, "shape")
+        if is_array(x)
     )
 
 
@@ -62,7 +62,16 @@ class MeanAggregator:
     below 1 — e.g. a single stale async arrival with weight 0.25 was
     divided by 1.0 instead of 0.25, scaling the (parameter!) upload by
     4× toward zero.
+
+    ``fused_reduction`` is the Aggregator protocol's *capability
+    attribute*: the name of the fused Pallas reduction that computes
+    this rule on the fused wire ("mean"/"trimmed"), or ``None``
+    (the default the runtime assumes via ``getattr``) to fall back to
+    :meth:`combine` on the dequantized (J, P) matrix.  Custom
+    aggregators omit it; the runtime never type-probes.
     """
+
+    fused_reduction = "mean"
 
     def combine(self, stacked: PyTree, mask: jnp.ndarray) -> PyTree:
         """Weighted mean over the leading silo axis of every leaf."""
@@ -85,6 +94,8 @@ class TrimmedMeanAggregator:
     are excluded by sorting them to the top (+inf sentinel) and masking
     by rank. Degenerates to :class:`MeanAggregator` at ``trim_frac=0``.
     """
+
+    fused_reduction = "trimmed"
 
     trim_frac: float = 0.1
 
@@ -122,7 +133,15 @@ class TrimmedMeanAggregator:
 
 @dataclasses.dataclass(frozen=True)
 class NoCompression:
-    """Identity codec: ships raw float leaves (4 bytes/element for f32)."""
+    """Identity codec: ships raw float leaves (4 bytes/element for f32).
+
+    ``wire_codec`` is the Compressor protocol's capability attribute:
+    the fused wire inlines the codecs it has Pallas kernels for
+    ("identity" and "int8") and calls ``encode``/``decode`` per silo
+    for anything else (``getattr`` default "custom").
+    """
+
+    wire_codec = "identity"
 
     def encode(self, tree: PyTree) -> PyTree:
         """Identity — the shipped tree is the wire format."""
@@ -161,6 +180,8 @@ class Int8Compressor:
     the host-side meter.
     """
 
+    wire_codec = "int8"
+
     def encode(self, tree: PyTree) -> PyTree:
         """Quantize every leaf to (int8 payload, f32 scale) wire format."""
         def leaf(x):
@@ -192,7 +213,7 @@ class Int8Compressor:
         if wire in ("flat", "fused"):
             return n + 4  # one int8 payload row + ONE f32 scale per silo
         n_leaves = sum(
-            1 for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "shape")
+            1 for x in jax.tree_util.tree_leaves(tree) if is_array(x)
         )
         return n + 4 * n_leaves
 

@@ -34,10 +34,11 @@ are deprecated adapters over the same compiled runtime. See
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import numpy as np
@@ -87,7 +88,7 @@ class OptimizerSpec:
         raise ValueError(f"unknown optimizer {self.name!r} (adam/adamw/sgd)")
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "OptimizerSpec":
+    def from_dict(cls, d: Dict[str, Any]) -> OptimizerSpec:
         return cls(name=d.get("name", "adam"),
                    learning_rate=d.get("learning_rate", 1e-2),
                    kwargs=dict(d.get("kwargs", {})))
@@ -116,7 +117,7 @@ class ModelSpec:
     local_family: Optional[FamilySpec] = None
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "ModelSpec":
+    def from_dict(cls, d: Dict[str, Any]) -> ModelSpec:
         return cls(
             name=d["name"],
             kwargs=dict(d.get("kwargs", {})),
@@ -195,7 +196,7 @@ class ExperimentSpec:
         return dataclasses.asdict(self)
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+    def from_dict(cls, d: Dict[str, Any]) -> ExperimentSpec:
         """Inverse of :meth:`to_dict`: ``from_dict(to_dict(s)) == s``."""
         return cls(
             model=ModelSpec.from_dict(d["model"]),
@@ -219,7 +220,7 @@ class ExperimentSpec:
         return json.dumps(self.to_dict(), indent=indent)
 
     @classmethod
-    def from_json(cls, text: str) -> "ExperimentSpec":
+    def from_json(cls, text: str) -> ExperimentSpec:
         return cls.from_dict(json.loads(text))
 
     def save(self, path: str) -> None:
@@ -230,7 +231,7 @@ class ExperimentSpec:
         os.replace(tmp, path)
 
     @classmethod
-    def load(cls, path: str) -> "ExperimentSpec":
+    def load(cls, path: str) -> ExperimentSpec:
         with open(path) as f:
             return cls.from_json(f.read())
 
@@ -240,7 +241,7 @@ class ExperimentSpec:
 # ---------------------------------------------------------------------------
 
 
-def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experiment":
+def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> Experiment:
     """Assemble the compiled runtime for ``spec``.
 
     Resolves the model through the registry (unless a pre-staged
@@ -256,6 +257,7 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
     per-leaf ``"legacy"`` reference — an execution knob, deliberately
     NOT part of the spec.
     """
+    from repro.federated import graph_cache
     from repro.federated.runtime import Server
     from repro.models.paper.registry import apply_family_spec, get_model
 
@@ -269,10 +271,17 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
             f"agree (the scenario label drives scheduling/validation, the "
             f"StrategySpec only adds hyperparameters)")
     strategy = strat_spec.build()
+    token = None
     if bundle is None:
         entry = get_model(spec.model.name)
         data_seed = spec.data_seed if spec.data_seed is not None else spec.seed
         bundle = entry.build(data_seed, spec.num_silos, **spec.model.kwargs)
+        # Registry-staged builds are pure functions of the spec, so
+        # structurally-equal Servers may share compiled round graphs —
+        # resume then re-traces nothing. A caller-supplied bundle is
+        # opaque to the token and opts out.
+        token = graph_cache.build_token(
+            spec.to_json(indent=0), wire, spec.num_silos)
     if len(bundle.datas) != spec.num_silos:
         raise ValueError(
             f"bundle stages {len(bundle.datas)} silos, spec.num_silos is "
@@ -287,6 +296,7 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
         problem,
         bundle.datas,
         bundle.theta0,
+        # repro-lint: allow[R1] — η_G init root: a pure function of spec.seed, re-derived bit-exactly by resume
         problem.global_family.init(jax.random.PRNGKey(spec.seed)),
         num_obs=bundle.num_obs,
         server_opt=spec.server_opt.build(),
@@ -298,6 +308,7 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> "Experime
         privacy=spec.scenario.privacy(),
         seed=spec.seed,
         strategy=strategy,
+        graph_cache_token=token,
     )
     scheduler = spec.scenario.scheduler(spec.num_silos, seed=spec.seed)
     return Experiment(spec, bundle, server, scheduler)
@@ -355,7 +366,7 @@ class Experiment:
         return max(self.spec.rounds - self.round, 0)
 
     def warm_start(self, theta: Optional[PyTree] = None,
-                   eta_G: Optional[PyTree] = None) -> "Experiment":
+                   eta_G: Optional[PyTree] = None) -> Experiment:
         """Override the initial (θ, η_G) — e.g. from a previous fit
         (the paper's Figure S2 warm-starting protocol). Optimizer
         moments are left at their fresh init."""
@@ -368,7 +379,8 @@ class Experiment:
     # -- running ------------------------------------------------------------
 
     def run(self, rounds: Optional[int] = None,
-            callback: Optional[Callable[[int, dict], None]] = None) -> Dict[str, list]:
+            callback: Optional[Callable[[int, dict], None]] = None,
+            sanitize: Union[bool, Dict[str, Any]] = False) -> Dict[str, list]:
         """Advance ``rounds`` rounds (default: the spec's remaining budget).
 
         Returns the accumulated history. ``callback(r, metrics)`` fires
@@ -376,6 +388,11 @@ class Experiment:
         ``eval_every``, the registry's eval metrics are merged into the
         round's metrics (and recorded under ``history["eval"]``) at that
         cadence.
+
+        ``sanitize=True`` wraps the loop in :func:`repro.debug.sanitize`
+        — transfer guard, NaN debugging and the recompile watchdog (a
+        dict passes keyword options through, e.g.
+        ``sanitize={"debug_nans": False}``). See docs/dev.md.
 
         When the scenario carries an async block, "rounds" are buffered
         flushes driven by :func:`repro.federated.async_engine.run_buffered`
@@ -404,28 +421,36 @@ class Experiment:
             if callback is not None:
                 callback(r, metrics)
 
-        if spec.scenario.async_cfg is not None:
-            from repro.federated.async_engine import run_buffered
+        if sanitize:
+            from repro import debug as _debug
 
-            chunk, self.async_state = run_buffered(
-                self.server, n, spec.scenario.async_cfg,
-                local_steps=spec.local_steps,
-                start_flush=start,
-                state=self.async_state,
-                callback=cb,
-            )
+            guard = _debug.sanitize(
+                **(sanitize if isinstance(sanitize, dict) else {}))
         else:
-            # algorithm=None: the Server already carries the built
-            # strategy INSTANCE (spec.strategy hyperparameters included);
-            # passing spec.algorithm's NAME would rebuild it with
-            # registry defaults.
-            chunk = self.server.run(
-                n,
-                local_steps=spec.local_steps,
-                scheduler=self.scheduler,
-                callback=cb,
-                start_round=start,
-            )
+            guard = contextlib.nullcontext()
+        with guard:
+            if spec.scenario.async_cfg is not None:
+                from repro.federated.async_engine import run_buffered
+
+                chunk, self.async_state = run_buffered(
+                    self.server, n, spec.scenario.async_cfg,
+                    local_steps=spec.local_steps,
+                    start_flush=start,
+                    state=self.async_state,
+                    callback=cb,
+                )
+            else:
+                # algorithm=None: the Server already carries the built
+                # strategy INSTANCE (spec.strategy hyperparameters
+                # included); passing spec.algorithm's NAME would rebuild
+                # it with registry defaults.
+                chunk = self.server.run(
+                    n,
+                    local_steps=spec.local_steps,
+                    scheduler=self.scheduler,
+                    callback=cb,
+                    start_round=start,
+                )
         for k, v in chunk.items():
             self.history.setdefault(k, []).extend(v)
         self.round = start + n
@@ -532,7 +557,7 @@ class Experiment:
     @classmethod
     def resume(cls, directory: str, spec: Optional[ExperimentSpec] = None,
                step: Optional[int] = None, bundle=None,
-               wire: Optional[str] = None) -> "Experiment":
+               wire: Optional[str] = None) -> Experiment:
         """Rebuild from ``directory`` and restore the saved round state.
 
         Reads ``spec.json`` (unless ``spec`` overrides it), rebuilds the
@@ -604,7 +629,7 @@ class Experiment:
 
 
 def run_spec(spec: ExperimentSpec,
-             callback: Optional[Callable[[int, dict], None]] = None) -> "Experiment":
+             callback: Optional[Callable[[int, dict], None]] = None) -> Experiment:
     """One-shot convenience: ``build(spec)`` then run the full budget."""
     exp = build(spec)
     exp.run(callback=callback)

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import debug
 from repro.federated.scheduler import AsyncConfig
 
 PyTree = Any
@@ -123,7 +124,7 @@ class BufferState:
     buffer: List[Tuple[int, int]]
 
     @classmethod
-    def init(cls, num_silos: int, cfg: AsyncConfig, seed: int) -> "BufferState":
+    def init(cls, num_silos: int, cfg: AsyncConfig, seed: int) -> BufferState:
         """All silos pull version 0 at t=0 and start their first task."""
         return cls(
             version=0,
@@ -152,7 +153,7 @@ class BufferState:
         }
 
     @classmethod
-    def from_state(cls, state: Dict[str, Any]) -> "BufferState":
+    def from_state(cls, state: Dict[str, Any]) -> BufferState:
         """Inverse of :meth:`state_dict`."""
         return cls(
             version=int(state["version"]),
@@ -293,11 +294,15 @@ def run_buffered(
         raise ValueError(
             f"buffered-async execution needs a round-cadence strategy; "
             f"{strat.name!r} synchronizes every local step")
-    fn = server._get_round(strat, local_steps)
-    if state is None:
-        state = BufferState.init(J, cfg, server.seed)
-    up1 = server.bytes_up_per_silo(strat)
-    down1 = server.bytes_down_per_silo()
+    # One-time setup — graph construction, byte metering, and the PRNG
+    # root all move tiny host scalars to device; sanctioned under the
+    # transfer guard (repro.debug.host_bridge).
+    with debug.host_bridge():
+        fn = server._get_round(strat, local_steps)
+        if state is None:
+            state = BufferState.init(J, cfg, server.seed)
+        up1 = server.bytes_up_per_silo(strat)
+        down1 = server.bytes_down_per_silo()
     history: Dict[str, list] = {
         "elbo": [], "elbo_trace": [], "bytes_up": [], "bytes_down": [],
         "n_active": [], "staleness": [], "sim_time": [],
@@ -305,20 +310,25 @@ def run_buffered(
     if server.accountant is not None:
         history["epsilon"] = []
         q = cfg.buffer_size / J
-    base_key = jax.random.PRNGKey(server.seed)
+    with debug.host_bridge():
+        base_key = jax.random.PRNGKey(server.seed)
     for f in range(start_flush, start_flush + num_flushes):
         counts, staleness, t_flush = simulate_flush(state, cfg, server.seed, J)
         mask = (counts > 0.0).astype(np.float32)
         weights = flush_weights(counts, staleness, cfg.staleness_decay)
-        round_key = jax.random.fold_in(base_key, f)
+        with debug.host_bridge():
+            round_key = jax.random.fold_in(base_key, f)
+        # Explicit H2D/D2H transfers (device_put/device_get) keep the
+        # flush loop legal under jax.transfer_guard("disallow") — see
+        # repro.debug.sanitize. The latency model itself stays on host.
         server.state, metrics = fn(
             server.state,
             server.data,
             round_key,
-            server._pad_mask(jnp.asarray(mask)),
-            server._pad_mask(jnp.asarray(weights)),
+            server._pad_mask(jax.device_put(mask)),
+            server._pad_mask(jax.device_put(weights)),
         )
-        elbos = np.asarray(metrics["elbo"])
+        elbos = jax.device_get(metrics["elbo"])
         n_contrib = int(counts.sum())
         n_active = int((counts > 0).sum())
         up, down = n_contrib * up1, n_contrib * down1

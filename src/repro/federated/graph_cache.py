@@ -1,0 +1,73 @@
+"""Process-level cache of compiled round functions across Server rebuilds.
+
+``Server`` keeps its jitted round functions in a per-instance dict, so
+every rebuild — most importantly ``Experiment.resume`` — used to pay a
+full retrace+compile of a graph the process had already compiled.  This
+module shares that dict between Servers that are *structurally
+identical*: same spec JSON, same wire layout, same silo count, same
+device signature.
+
+Soundness leans on exactly the contract bit-exact resume already
+relies on: a registry-staged build is a pure function of its spec, so
+two Servers built from equal specs close over equal configuration
+(aggregator, compressor, privacy, mesh, num_obs) and their round
+bodies trace to identical graphs; everything that varies per round
+(state, data, key, masks) flows through the jit boundary as arguments.
+Builds with a caller-supplied bundle carry arbitrary Python objects the
+token cannot see, so they opt out (``token=None``) and keep a private
+dict.
+
+The cache also closes the recompile-watchdog loop
+(:mod:`repro.debug`): with it, ``save→resume`` on the same device
+count re-traces nothing, and the watchdog can assert one trace per
+config across a resume boundary.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+import jax
+
+__all__ = ["build_token", "round_fns", "clear"]
+
+# A handful of configs covers any realistic process (one experiment plus
+# its resume, a sweep over a few strategies); LRU keeps sweeps over many
+# specs from pinning every compiled graph in memory forever.
+_LIMIT = 8
+_CACHE: OrderedDict[str, Dict[tuple, Callable]] = OrderedDict()
+
+
+def build_token(spec_json: str, wire: str, num_silos: int) -> str:
+    """Structural identity of a registry-staged build.
+
+    Covers everything the round graph closes over: the full spec (model,
+    strategy, optimizers, privacy, compression — via its canonical
+    JSON), the wire layout, J, and the device signature (the mesh is a
+    pure function of J and the device list).
+    """
+    devices = tuple((d.platform, d.id) for d in jax.devices())
+    payload = json.dumps(
+        [spec_json, wire, num_silos, devices], sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def round_fns(token: Optional[str]) -> Dict[tuple, Callable]:
+    """The shared round-fn dict for ``token``; a private one for None."""
+    if token is None:
+        return {}
+    if token in _CACHE:
+        _CACHE.move_to_end(token)
+    else:
+        _CACHE[token] = {}
+        while len(_CACHE) > _LIMIT:
+            _CACHE.popitem(last=False)
+    return _CACHE[token]
+
+
+def clear() -> None:
+    """Drop every shared entry (tests; frees compiled executables)."""
+    _CACHE.clear()

@@ -18,12 +18,21 @@ import numpy as np
 PyTree = Any
 
 
+def is_array(x: Any) -> bool:
+    """True for the leaves that occupy wire bytes (device or host arrays).
+
+    Scalars and static leaves (treedefs, python numbers) ride along in
+    message pytrees but never cross the wire as payload.
+    """
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
 def tree_bytes(tree: PyTree) -> int:
     """Metered size of a message pytree in bytes (Σ elements × itemsize)."""
     return sum(
         int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
         for x in jax.tree_util.tree_leaves(tree)
-        if hasattr(x, "shape")
+        if is_array(x)
     )
 
 

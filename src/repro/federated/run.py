@@ -135,6 +135,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="force N XLA host devices (0 = real devices)")
     ap.add_argument("--hlo-bytes", action="store_true",
                     help="also report compiled-HLO collective bytes")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run under repro.debug.sanitize(): transfer guard, "
+                         "NaN checks, and a one-trace-per-config recompile "
+                         "watchdog")
     ap.add_argument("--list-models", action="store_true",
                     help="print registered model names + descriptions, exit 0")
     ap.add_argument("--spec", default=None, metavar="FILE",
@@ -253,7 +257,7 @@ def _report(exp, hlo_bytes: bool) -> None:
 
 
 def _run_one(spec, bundle, hlo_bytes: bool = False, ckpt_dir=None,
-             ckpt_every: int = 0):
+             ckpt_every: int = 0, sanitize: bool = False):
     """Build + run one spec against a pre-staged bundle; print a report."""
     from repro.federated.api import build
 
@@ -277,7 +281,7 @@ def _run_one(spec, bundle, hlo_bytes: bool = False, ckpt_dir=None,
                 and (r + 1) < spec.rounds:
             exp.save(ckpt_dir)
 
-    exp.run(callback=cb)
+    exp.run(callback=cb, sanitize=sanitize)
     print(f"  wall time: {time.time() - t0:.1f}s")
     if ckpt_dir:
         print(f"  checkpoint: {exp.save(ckpt_dir)}")
@@ -356,7 +360,7 @@ def _resume(args) -> int:
                     and (r + 1) < spec.rounds:
                 exp.save(out)
 
-        exp.run(callback=cb)
+        exp.run(callback=cb, sanitize=args.sanitize)
         exp.save(out)
     _report(exp, args.hlo_bytes)
     return 0
@@ -424,7 +428,8 @@ def main(argv=None) -> int:
 
     exps = {s.algorithm: _run_one(s, bundle, args.hlo_bytes,
                                   ckpt_dir=ckpt_dir_for(s),
-                                  ckpt_every=args.ckpt_every)
+                                  ckpt_every=args.ckpt_every,
+                                  sanitize=args.sanitize)
             for s in specs}
     if len(exps) == 2:
         sfvi_pr = exps["sfvi"].comm.per_round

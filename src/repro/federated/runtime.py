@@ -48,15 +48,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import debug
 from repro.core.family import supports_moments
 from repro.core.flatten import TreeSpec
 from repro.core.sfvi import SFVIProblem
-from repro.federated.aggregation import (
-    Int8Compressor,
-    MeanAggregator,
-    NoCompression,
-    TrimmedMeanAggregator,
-)
+from repro.federated import graph_cache
+from repro.federated.aggregation import MeanAggregator, NoCompression
 from repro.federated.metering import CommMeter
 from repro.federated.strategy import (
     DEFAULT_STRATEGY,
@@ -167,7 +164,7 @@ def _fused_ship(mat, mask_sh, keys, reference, privacy, comp, int8):
     if int8:
         q, scales = out
         return {"q": q, "scale": scales}
-    if type(comp) is NoCompression:
+    if _wire_codec(comp) == "identity":
         return out
     # Custom codec: fall back to the per-silo encode on the fused output.
     return jax.vmap(comp.encode)(out)
@@ -177,9 +174,19 @@ def _fused_decode(enc, comp, int8):
     """Gathered fused wire -> dequantized (J, P) float32 matrix."""
     if int8:
         return enc["q"].astype(jnp.float32) * enc["scale"][:, None]
-    if type(comp) is NoCompression:
+    if _wire_codec(comp) == "identity":
         return enc
     return jax.vmap(comp.decode)(enc)
+
+
+def _wire_codec(comp) -> str:
+    """The compressor's fused-wire capability (Compressor protocol).
+
+    "identity"/"int8" run as the fused Pallas kernels; "custom" (the
+    default for compressors that don't declare the attribute) falls
+    back to per-silo ``encode``/``decode`` around the same gather.
+    """
+    return getattr(comp, "wire_codec", "custom")
 
 
 class Server:
@@ -245,7 +252,7 @@ class Server:
 
     def __init__(
         self,
-        problem: SFVIProblem,
+        problem: SFVIProblem,  # repro-lint: allow[R5] — the seed's problem protocol (local ELBO interface), not a strategy branch
         datas: Sequence[PyTree],
         theta: PyTree,
         eta_G: PyTree,
@@ -261,6 +268,7 @@ class Server:
         mesh=None,
         seed: int = 0,
         strategy: Union[str, ServerStrategy, None] = None,
+        graph_cache_token: Optional[str] = None,
     ):
         self.problem = problem
         self.J = len(datas)
@@ -307,6 +315,7 @@ class Server:
                 for d in datas[: self.J]
             ]
         num_obs = list(num_obs) + [num_obs[0]] * (self.J_pad - self.J)
+        # repro-lint: allow[R4] — host staging of a Python list at init, not a device pull
         self.num_obs = np.asarray(num_obs, np.float32)
 
         if self._has_local:
@@ -316,6 +325,7 @@ class Server:
             # split width is J, not J_pad) so trajectories agree across
             # device counts; the padded rows reuse silo 0's init and are
             # frozen by their permanent zero mask.
+            # repro-lint: allow[R1] — init-time root of the η_L stream: a pure function of the spec seed, so resume re-derives it bit-exactly
             keys = jax.random.split(jax.random.PRNGKey(seed + 1), self.J)
             eta_L = jax.vmap(problem.local_family.init)(keys)
             eta_L = self.pad_silo_axis(eta_L)
@@ -336,7 +346,10 @@ class Server:
         }
         self.state["strategy"] = self._strategy.init_silo_state(self)
         self.comm = CommMeter()
-        self._round_fns: Dict[tuple, Callable] = {}
+        # Shared across structurally-identical Servers (resume!) when the
+        # builder hands in a token; private otherwise. See graph_cache.
+        self._round_fns: Dict[tuple, Callable] = graph_cache.round_fns(
+            graph_cache_token)
 
     # -- convenience accessors (mirror the host runtime's attributes) -------
 
@@ -488,9 +501,11 @@ class Server:
         mask_shape = ((local_steps, self.J_pad) if strat.cadence == "step"
                       else (self.J_pad,))
         ones = jnp.ones(mask_shape, jnp.float32)
-        return fn.lower(
-            self.state, self.data, jax.random.PRNGKey(0), ones, ones
-        )
+        with debug.suspended_tracing():  # inspection traces are free
+            return fn.lower(
+                # repro-lint: allow[R1] — dummy key for shape-only lowering; never executed
+                self.state, self.data, jax.random.PRNGKey(0), ones, ones
+            )
 
     def _fused_trim(self):
         """Fused-reduction mode for the configured aggregator.
@@ -500,9 +515,10 @@ class Server:
         (custom subclass): the fused wire falls back to
         ``aggregator.combine`` on the dequantized matrix.
         """
-        if type(self.aggregator) is MeanAggregator:
+        fused = getattr(self.aggregator, "fused_reduction", None)
+        if fused == "mean":
             return (None,)
-        if type(self.aggregator) is TrimmedMeanAggregator:
+        if fused == "trimmed":
             return (float(self.aggregator.trim_frac),)
         return None
 
@@ -545,7 +561,12 @@ class Server:
                 check_rep=False,
             )
 
+            trace_tag = ("round", strat.cache_key(), local_steps, self.wire)
+
             def round_fn(state, data, round_key, mask, weights):
+                # Trace-time only: the recompile watchdog's counter
+                # (no-op unless repro.debug.sanitize is active).
+                debug.trace_event(trace_tag)
                 sids = jnp.arange(self.J_pad, dtype=jnp.int32)
                 n_j = jnp.asarray(self.num_obs)
                 (theta, eta_G, opt_server, eta_L, opt_L, strat_state,
@@ -629,7 +650,7 @@ class Server:
         # kernels of repro.kernels.wire on the stacked block.
         wire = self.wire_spec(strat) if self.wire != "legacy" else None
         fused = self.wire == "fused"
-        int8 = type(comp) is Int8Compressor
+        int8 = _wire_codec(comp) == "int8"
         trim = self._fused_trim()
         ctx = self._ctx(K, wire)
 
@@ -713,7 +734,7 @@ class Server:
         privacy = self.privacy
         wire = self.wire_spec(strat) if self.wire != "legacy" else None
         fused = self.wire == "fused"
-        int8 = type(comp) is Int8Compressor
+        int8 = _wire_codec(comp) == "int8"
         trim = self._fused_trim()
         ctx = self._ctx(K, wire)
 
@@ -823,10 +844,14 @@ class Server:
         if local_steps < 1:
             raise ValueError(f"local_steps must be >= 1, got {local_steps}")
         strat = self._resolve(algorithm)
-        fn = self._get_round(strat, local_steps)
+        # One-time setup — graph construction and byte metering both
+        # evaluate wire templates eagerly on host, which is sanctioned
+        # under the transfer guard (repro.debug.host_bridge).
+        with debug.host_bridge():
+            fn = self._get_round(strat, local_steps)
+            up1 = self.bytes_up_per_silo(strat)
+            down1 = self.bytes_down_per_silo()
         sched = scheduler or RoundScheduler(self.J, seed=self.seed)
-        up1 = self.bytes_up_per_silo(strat)
-        down1 = self.bytes_down_per_silo()
         step_cadence = strat.cadence == "step"
         exchanges = local_steps if step_cadence else 1
         history: Dict[str, list] = {
@@ -839,7 +864,9 @@ class Server:
             # (docs/privacy.md §Accounting); custom schedulers without a
             # participation attribute are accounted at full participation.
             q = float(getattr(sched, "participation", 1.0))
-        base_key = jax.random.PRNGKey(self.seed)
+        with debug.host_bridge():
+            # repro-lint: allow[R1] — root of the round stream; every key below folds in the absolute round index, so resume replays it exactly
+            base_key = jax.random.PRNGKey(self.seed)
         for r in range(start_round, start_round + num_rounds):
             # A step-cadence strategy synchronizes every local step, so
             # each of the round's `exchanges` gathers is its OWN
@@ -849,24 +876,33 @@ class Server:
             # one draw per round.
             ex_idx = ([r * local_steps + t for t in range(local_steps)]
                       if step_cadence else [r])
-            ex_masks = [sched.mask(i) for i in ex_idx]
-            active = [int(np.sum(np.asarray(m))) for m in ex_masks]
-            # Stragglers received the broadcast before dropping: bill their
-            # download. Custom schedulers without invited() bill reporters.
+            # Mask/key construction transfers tiny host scalars to
+            # device, so it runs in the sanctioned control-plane window
+            # (repro.debug.host_bridge); metric pulls below stay under
+            # the transfer guard and must use explicit device_get.
+            with debug.host_bridge():
+                ex_masks = [sched.mask(i) for i in ex_idx]
+                padded = [self._pad_mask(m) for m in ex_masks]
+                mask = (jnp.stack(padded) if step_cadence else padded[0])
+                round_key = jax.random.fold_in(base_key, r)
+                # Stragglers received the broadcast before dropping:
+                # bill their download. Schedulers without the optional
+                # invited() protocol attribute bill reporters.
+                invited_fn = getattr(sched, "invited", None)
+                inv_masks = [
+                    invited_fn(i) if invited_fn is not None else ex_masks[k]
+                    for k, i in enumerate(ex_idx)
+                ]
+            active = [int(np.sum(jax.device_get(m))) for m in ex_masks]
             invited = [
-                max(int(np.sum(np.asarray(
-                    sched.invited(i) if hasattr(sched, "invited")
-                    else ex_masks[k]))), active[k])
-                for k, i in enumerate(ex_idx)
+                max(int(np.sum(jax.device_get(m))), active[k])
+                for k, m in enumerate(inv_masks)
             ]
-            ex_masks = [self._pad_mask(m) for m in ex_masks]
-            mask = (jnp.stack(ex_masks) if step_cadence else ex_masks[0])
-            round_key = jax.random.fold_in(base_key, r)
             # Sync rounds aggregate with the participation mask itself;
             # the async engine passes staleness-decayed weights instead.
             self.state, metrics = fn(self.state, self.data, round_key,
                                      mask, mask)
-            elbos = np.asarray(metrics["elbo"])
+            elbos = jax.device_get(metrics["elbo"])
             up = sum(active) * up1
             down = sum(invited) * down1
             n_active = active[-1]  # the round's final exchange

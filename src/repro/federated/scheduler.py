@@ -67,6 +67,7 @@ class RoundScheduler:
     seed: int = 0
 
     def _keys(self, round_idx: int):
+        # repro-lint: allow[R1] — participation stream root, folded with the absolute round index on the same line
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_idx)
         return jax.random.split(key)
 
@@ -239,7 +240,7 @@ class Scenario:
             bits.append(f"{self.aggregator}({self.trim_frac:g})")
         return " ".join(bits)
 
-    def validate(self, num_silos: Optional[int] = None) -> "Scenario":
+    def validate(self, num_silos: Optional[int] = None) -> Scenario:
         """Reject physically-meaningless knob combinations (returns self).
 
         Async mode composes with compression, aggregation and DP, but
@@ -281,7 +282,7 @@ class Scenario:
         return self
 
     @classmethod
-    def from_dict(cls, d: dict) -> "Scenario":
+    def from_dict(cls, d: dict) -> Scenario:
         """Inverse of ``dataclasses.asdict`` (rebuilds the async block).
 
         Validates on deserialization: a hand-edited spec JSON combining

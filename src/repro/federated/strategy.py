@@ -304,11 +304,11 @@ def strategy_names() -> Tuple[str, ...]:
     return tuple(sorted(STRATEGIES))
 
 
-def resolve_strategy(algorithm) -> "ServerStrategy":
+def resolve_strategy(algorithm) -> ServerStrategy:
     """Name / spec / instance → a ServerStrategy instance."""
-    if isinstance(algorithm, ServerStrategy):
+    if isinstance(algorithm, ServerStrategy):  # repro-lint: allow[R6] — registry front door: input-KIND dispatch (instance | spec | name), not a capability probe
         return algorithm
-    if isinstance(algorithm, StrategySpec):
+    if isinstance(algorithm, StrategySpec):  # repro-lint: allow[R6] — registry front door: input-kind dispatch, see above
         return algorithm.build()
     return get_strategy(algorithm)()
 
@@ -337,7 +337,7 @@ class StrategySpec:
         return cls(**self.kwargs)
 
     @staticmethod
-    def from_dict(d: Dict[str, Any]) -> "StrategySpec":
+    def from_dict(d: Dict[str, Any]) -> StrategySpec:
         return StrategySpec(
             name=d.get("name", DEFAULT_STRATEGY),
             kwargs=dict(d.get("kwargs", {})),

@@ -57,9 +57,11 @@ def main(argv=None):
     if args.out:
         rows = []
         if os.path.exists(args.out):
-            rows = json.load(open(args.out))
+            with open(args.out) as f:
+                rows = json.load(f)
         rows.append(rec)
-        json.dump(rows, open(args.out, "w"), indent=1)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
     return 0
 
 

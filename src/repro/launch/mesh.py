@@ -26,7 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     # jax < 0.5 has neither sharding.AxisType nor make_mesh(axis_types=...);
     # Auto is the default there, so the kwarg is only needed when it exists.
-    if hasattr(jax.sharding, "AxisType"):
+    if hasattr(jax.sharding, "AxisType"):  # repro-lint: allow[R6] — jax cross-version feature shim, not a protocol probe
         return jax.make_mesh(
             shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
         )
@@ -37,7 +37,7 @@ def use_mesh(mesh):
     """Version-portable mesh context: ``jax.set_mesh`` where it exists
     (jax >= 0.6), else the ``Mesh`` object itself (a context manager that
     sets the physical mesh on 0.4.x)."""
-    if hasattr(jax, "set_mesh"):
+    if hasattr(jax, "set_mesh"):  # repro-lint: allow[R6] — jax cross-version feature shim, not a protocol probe
         return jax.set_mesh(mesh)
     return mesh
 

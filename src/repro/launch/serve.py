@@ -35,6 +35,7 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
+    # repro-lint: allow[R1] — demo CLI entry point roots its own init stream
     key = jax.random.PRNGKey(0)
     state, _ = S.init_train_state(key, cfg, args.silos)
     max_len = args.prompt_len + args.gen + cfg.num_vision_tokens

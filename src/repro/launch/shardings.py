@@ -23,6 +23,19 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
+
+def path_names(path) -> list:
+    """Key names along a ``tree_map_with_path`` path.
+
+    Param/optimizer trees are nested dicts, so the named entries are
+    ``DictKey`` (plus ``FlattenedIndexKey`` after partial flattens);
+    sequence positions carry no name and are skipped.
+    """
+    return [p.key for p in path
+            if isinstance(p, (jax.tree_util.DictKey,
+                              jax.tree_util.FlattenedIndexKey))]
+
+
 # Column-parallel leaf names (shard LAST dim over 'model').
 _COL = {
     "wq", "wk", "wv", "w_gate", "w_up", "w_ff1", "in_proj", "w_in",
@@ -39,7 +52,7 @@ def _num_stack_dims(path_names) -> int:
 
 
 def param_spec(path, leaf, model_size: int, uneven_vocab: bool = False) -> P:
-    names = [p.key for p in path if hasattr(p, "key")]
+    names = path_names(path)
     name = names[-1] if names else ""
     stack = _num_stack_dims(names)
     ndim = leaf.ndim
@@ -98,7 +111,7 @@ def opt_state_shardings(mesh, opt_state: PyTree, dp: tuple,
 
     def rule(path, leaf):
         spec = list(param_spec(path, leaf, m, uneven_vocab))
-        names = [p.key for p in path if hasattr(p, "key")]
+        names = path_names(path)
         if ("units" in names and leaf.ndim >= 1 and spec and spec[0] is None
                 and leaf.shape[0] % dp_size == 0 and leaf.shape[0] >= dp_size):
             spec[0] = dp

@@ -16,7 +16,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import steps as S
 from repro.launch.mesh import data_axes, data_world
-from repro.launch.shardings import batch_spec, opt_state_shardings, param_shardings
+from repro.launch.shardings import (
+    batch_spec,
+    opt_state_shardings,
+    param_shardings,
+    path_names,
+)
 from repro.models.backbone import transformer as T
 from repro.models.backbone.config import ArchConfig, InputShape
 
@@ -105,7 +110,7 @@ def cache_shardings(mesh, cache_struct: PyTree) -> PyTree:
     dp = data_axes(mesh)
 
     def rule(path, leaf):
-        names = [p.key for p in path if hasattr(p, "key")]
+        names = path_names(path)
         stacked = "units" in names
         name = (("stacked:" if stacked else "") + (names[-1] if names else ""))
         return NamedSharding(mesh, _cache_spec(mesh, name, leaf, dp))
@@ -124,6 +129,7 @@ def build_lowering(cfg: ArchConfig, shape: InputShape, mesh,
         cfg = cfg.long_context_variant()
     silos = num_silos_for(shape, mesh)
 
+    # repro-lint: allow[R1] — shape-only lowering spec: the key feeds eval_shape and is never executed
     key = jax.random.PRNGKey(0)
     uneven = False  # vocab lever realized via padding (cfg.padded_vocab)
     theta_struct = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
@@ -204,6 +210,7 @@ def build_avg_lowering(cfg: ArchConfig, shape: InputShape, mesh,
     from repro.optim.adam import adam
 
     silos = num_silos_for(shape, mesh)
+    # repro-lint: allow[R1] — shape-only lowering spec: the key feeds eval_shape and is never executed
     key = jax.random.PRNGKey(0)
     dp = data_axes(mesh)
     theta_struct = jax.eval_shape(lambda k: T.init_params(k, cfg), key)

@@ -167,7 +167,7 @@ class ArchConfig:
             return True
         return self.sliding_window is not None
 
-    def long_context_variant(self) -> "ArchConfig":
+    def long_context_variant(self) -> ArchConfig:
         """Sub-quadratic variant used for long_500k: dense archs get a
         sliding window (block-sparse-in-time attention); SSM/hybrid archs
         are already O(1)-state and return themselves."""
@@ -177,7 +177,7 @@ class ArchConfig:
             self, name=self.name + "-swa", sliding_window=8192
         )
 
-    def reduced(self) -> "ArchConfig":
+    def reduced(self) -> ArchConfig:
         """CPU smoke-test variant of the same family."""
         return dataclasses.replace(
             self,

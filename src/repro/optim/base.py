@@ -31,7 +31,7 @@ def chain(*transforms: GradientTransformation) -> GradientTransformation:
 
     def update(grads, state, params=None):
         new_state = []
-        for t, s in zip(transforms, state):
+        for t, s in zip(transforms, state, strict=True):
             grads, s = t.update(grads, s, params)
             new_state.append(s)
         return grads, tuple(new_state)

@@ -51,7 +51,7 @@ def _spec(sc: Scenario, *, silos=3, rounds=4, seed=3) -> ExperimentSpec:
 def _assert_trees_bit_equal(a, b):
     la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
@@ -150,7 +150,7 @@ class TestEventLoop:
         part = BufferState.from_state(
             json.loads(json.dumps(part.state_dict())))
         got += [simulate_flush(part, cfg, 2, 4) for _ in range(3)]
-        for (c0, s0, t0), (c1, s1, t1) in zip(ref, got):
+        for (c0, s0, t0), (c1, s1, t1) in zip(ref, got, strict=True):
             np.testing.assert_array_equal(c0, c1)
             np.testing.assert_array_equal(s0, s1)
             assert t0 == t1

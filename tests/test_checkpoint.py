@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 
@@ -14,7 +15,7 @@ def test_roundtrip(tmp_path):
     path = str(tmp_path / "ckpt.msgpack")
     save_pytree(path, tree)
     restored = load_pytree(path, tree)
-    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert a.dtype == b.dtype
 
@@ -54,8 +55,5 @@ def test_manager_per_silo_shards(tmp_path):
 def test_structure_mismatch_raises(tmp_path):
     path = str(tmp_path / "c.msgpack")
     save_pytree(path, {"a": jnp.zeros(2)})
-    try:
+    with pytest.raises(ValueError):
         load_pytree(path, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
-        assert False, "should have raised"
-    except ValueError:
-        pass

@@ -82,6 +82,7 @@ def _rand_params(fam, seed, scale=0.6):
 
 def _dense_cov(fam, params):
     """(mean, covariance) as dense arrays, family-agnostic."""
+    # repro-lint: allow[R6] — oracle helper: densifies the covariance of the two full-covariance families under test
     if isinstance(fam, (CholeskyGaussian, LowRankGaussian)):
         return params["mu"], fam.covariance(params)
     mu, sigma = fam.to_moments(params)
@@ -281,6 +282,7 @@ class TestRegistryAndSpec:
 
     def test_build_family_fills_model_dims(self):
         fam = build_family(FamilySpec("cholesky"), dim=7)
+        # repro-lint: allow[R6] — registry-construction test: asserting WHICH class was built is the point
         assert isinstance(fam, CholeskyGaussian) and fam.dim == 7
         lfam = build_family(FamilySpec("conditional"), dim=3, global_dim=5)
         assert lfam.dim == 3 and lfam.global_dim == 5

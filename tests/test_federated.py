@@ -259,7 +259,7 @@ class TestScheduling:
         # Frozen stragglers: silos 1..3 kept their exact η_L.
         for j in range(1, 4):
             for a, b in zip(jax.tree_util.tree_leaves(eta_L0),
-                            jax.tree_util.tree_leaves(srv.eta_L)):
+                            jax.tree_util.tree_leaves(srv.eta_L), strict=True):
                 np.testing.assert_array_equal(np.asarray(a[j]), np.asarray(b[j]))
         # All 4 invited silos received the broadcast each round.
         assert h["bytes_down"][0] == 4 * srv.bytes_down_per_silo()

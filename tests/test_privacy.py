@@ -149,7 +149,7 @@ class TestPolicy:
         pol = PrivacyPolicy(clip_norm=1e6, noise_multiplier=0.0)
         t = _tree(jax.random.PRNGKey(1))
         for l_in, l_out in zip(jax.tree_util.tree_leaves(t),
-                               jax.tree_util.tree_leaves(pol.clip(t))):
+                               jax.tree_util.tree_leaves(pol.clip(t)), strict=True):
             np.testing.assert_allclose(l_in, l_out, rtol=1e-6)
 
     def test_noise_scale_and_replayability(self):
@@ -170,7 +170,7 @@ class TestPolicy:
         t = _tree(jax.random.PRNGKey(4))
         out = pol.privatize(t, jax.random.PRNGKey(5), reference=ref)
         for l_t, l_o in zip(jax.tree_util.tree_leaves(t),
-                            jax.tree_util.tree_leaves(out)):
+                            jax.tree_util.tree_leaves(out), strict=True):
             np.testing.assert_allclose(l_t, l_o, rtol=1e-5, atol=1e-6)
 
     def test_upload_keys_are_distinct(self):

@@ -1,0 +1,154 @@
+"""Tests for the runtime sanitizer harness (repro.debug).
+
+The watchdog's core promise: the compiled federated round traces
+EXACTLY ONCE per (strategy, local_steps, wire) config — across R > 1
+rounds, across both wire layouts, and across a save→resume boundary on
+the same device count (the process-level graph cache of
+repro.federated.graph_cache shares compiled round fns between
+structurally identical Servers).  The transfer guard and NaN check are
+smoke-tested end to end through ``Experiment.run(sanitize=True)``.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import debug
+from repro.federated import graph_cache
+from repro.federated.api import (
+    Experiment,
+    ExperimentSpec,
+    ModelSpec,
+    OptimizerSpec,
+    build,
+)
+from repro.federated.scheduler import AsyncConfig, Scenario
+
+
+def _spec(algorithm="sfvi_avg", rounds=3, **over):
+    base = dict(
+        model=ModelSpec("toy"),
+        scenario=Scenario(algorithm=algorithm),
+        num_silos=4,
+        rounds=rounds,
+        local_steps=2,
+        server_opt=OptimizerSpec("adam", 2e-2),
+        seed=0,
+    )
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_graph_cache():
+    """Each test sees an empty process-level cache (and leaves none)."""
+    graph_cache.clear()
+    yield
+    graph_cache.clear()
+
+
+@pytest.mark.parametrize("algorithm", ["sfvi_avg", "pvi"])
+@pytest.mark.parametrize("wire", ["flat", "fused"])
+def test_one_trace_per_config(algorithm, wire):
+    """R > 1 rounds compile the round graph exactly once per config."""
+    exp = build(_spec(algorithm), wire=wire)
+    with debug.watch_recompiles() as wd:
+        h = exp.run(3)
+    assert wd.total == 1, dict(wd.counts)
+    (tag,) = wd.counts
+    assert tag[-1] == wire
+    assert len(h["elbo"]) == 3
+    assert np.all(np.isfinite(h["elbo"]))
+
+
+@pytest.mark.parametrize("wire", ["flat", "fused"])
+def test_resume_does_not_retrace(wire, tmp_path):
+    """save→resume on the same device count reuses the compiled round.
+
+    Experiment.resume builds a fresh Server; without the process-level
+    graph cache that would be a second trace of an identical graph.
+    """
+    with debug.watch_recompiles() as wd:
+        exp = build(_spec(rounds=4), wire=wire)
+        exp.run(2)
+        ckpt = str(tmp_path / "ckpt")
+        exp.save(ckpt)
+        resumed = Experiment.resume(ckpt)
+        assert resumed.remaining_rounds == 2
+        resumed.run()
+    assert wd.total == 1, dict(wd.counts)
+
+
+def test_watchdog_raises_on_retrace():
+    """A second trace of the same config raises RecompileError.
+
+    Two bundle-built Servers share a tag but not a graph cache entry
+    (caller-supplied bundles opt out of the cache), so the second
+    Server's first round is a genuine retrace the watchdog must stop.
+    """
+    from repro.models.paper.registry import get_model
+
+    spec = _spec()
+    bundle = get_model("toy").build(spec.seed, spec.num_silos)
+    with debug.watch_recompiles() as wd:
+        build(spec, bundle=bundle).run(1)
+        assert wd.total == 1
+        with pytest.raises(debug.RecompileError, match="traced 2 times"):
+            build(spec, bundle=bundle).run(1)
+
+
+def test_watchdog_suspension_and_inactive():
+    """suspended_tracing() windows are free; no watchdog, no counting."""
+    # trace_event with no active watchdog is a no-op.
+    debug.trace_event(("round", "x"))
+    wd = debug.TraceWatchdog(limit=1)
+    wd.record("a")
+    with wd.suspended():
+        wd.record("a")  # deliberate (e.g. .lower() inspection): not billed
+    assert wd.counts["a"] == 1
+    with pytest.raises(debug.RecompileError):
+        wd.record("a")
+
+
+def test_sanitize_run_end_to_end():
+    """Experiment.run(sanitize=True): guard + NaN check + watchdog live."""
+    exp = build(_spec())
+    h = exp.run(sanitize=True)
+    assert len(h["elbo"]) == 3
+    assert np.all(np.isfinite(h["elbo"]))
+
+
+def test_sanitize_async_end_to_end():
+    """The buffered-async flush loop is transfer-guard clean too."""
+    spec = _spec(
+        scenario=Scenario(algorithm="sfvi_avg",
+                          async_cfg=AsyncConfig(buffer_size=2)))
+    exp = build(spec)
+    h = exp.run(sanitize=True)
+    assert len(h["elbo"]) == 3
+    assert np.all(np.isfinite(h["elbo"]))
+
+
+def test_sanitize_matches_unsanitized_trajectory():
+    """Sanitizers observe; they must not change the trajectory."""
+    h_plain = build(_spec()).run()
+    graph_cache.clear()
+    h_guarded = build(_spec()).run(sanitize=True)
+    np.testing.assert_array_equal(h_plain["elbo"], h_guarded["elbo"])
+
+
+def test_graph_cache_token_sensitivity():
+    """Structurally different builds never share a cache entry."""
+    s = _spec()
+    t1 = graph_cache.build_token(s.to_json(indent=0), "flat", s.num_silos)
+    assert t1 == graph_cache.build_token(
+        s.to_json(indent=0), "flat", s.num_silos)
+    assert t1 != graph_cache.build_token(s.to_json(indent=0), "fused",
+                                         s.num_silos)
+    s2 = _spec(seed=1)
+    assert t1 != graph_cache.build_token(s2.to_json(indent=0), "flat",
+                                         s2.num_silos)
+    d1 = graph_cache.round_fns(t1)
+    d1["k"] = "v"
+    assert graph_cache.round_fns(t1) is d1
+    assert graph_cache.round_fns(None) == {}

@@ -72,7 +72,7 @@ class TestTreeSpec:
         assert jax.tree_util.tree_structure(back) == \
             jax.tree_util.tree_structure(tree)
         for x, y in zip(jax.tree_util.tree_leaves(tree),
-                        jax.tree_util.tree_leaves(back)):
+                        jax.tree_util.tree_leaves(back), strict=True):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
             assert x.dtype == y.dtype
 

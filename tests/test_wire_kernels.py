@@ -62,7 +62,7 @@ def _keys(J, salt=0):
 
 def _exact(a, b):
     if isinstance(a, tuple):
-        for x, y in zip(a, b):
+        for x, y in zip(a, b, strict=True):
             _exact(x, y)
         return
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -315,7 +315,7 @@ else:
     _rng = np.random.default_rng(515151)
     _CASES = [(int(j), int(p), int(t), int(m)) for j, p, t, m in zip(
         _rng.integers(1, 18, 12), _rng.integers(1, 301, 12),
-        _rng.integers(0, 3, 12), _rng.integers(0, 5, 12))]
+        _rng.integers(0, 3, 12), _rng.integers(0, 5, 12), strict=True)]
 
     @pytest.mark.parametrize("J,P,trim_i,pattern_i", _CASES)
     def test_wire_kernels_property(J, P, trim_i, pattern_i):

@@ -1,0 +1,31 @@
+"""repro-lint: AST checks for this repo's load-bearing invariants.
+
+The repo guarantees a handful of properties only by construction — DP
+clip+noise before compression and the gather, every random stream a pure
+function of ``(seed, round, step, silo)``, a strategy-generic compiled
+round, no ad-hoc protocol probes.  ``repro-lint`` turns each of those
+conventions into an enforced rule:
+
+    python -m tools.repro_lint src tests        # lint (CI gate)
+    python -m tools.repro_lint --selftest       # run the rule fixtures
+    python -m tools.repro_lint --list-rules     # what is checked and why
+
+Violations are suppressed per line with a justified pragma::
+
+    key = jax.random.PRNGKey(seed)  # repro-lint: allow[R1] — root of the round stream
+
+A pragma without a reason is itself a violation.  See docs/dev.md for
+the rule catalogue and the policy on when to fix vs. when to pragma.
+
+The package is dependency-free on purpose (stdlib ``ast`` only): the CI
+static-analysis job runs it without installing jax.
+"""
+
+from tools.repro_lint.engine import (  # noqa: F401
+    FileContext,
+    Rule,
+    Violation,
+    iter_py_files,
+    lint_paths,
+    registered_rules,
+)

@@ -1,0 +1,5 @@
+import sys
+
+from tools.repro_lint.engine import main
+
+sys.exit(main())

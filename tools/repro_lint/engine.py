@@ -1,0 +1,301 @@
+"""Rule engine: file model, pragma parsing, registry, runner.
+
+Design notes
+------------
+* Rules are AST visitors over a :class:`FileContext`; they never import
+  repo code, so the linter runs in a bare-stdlib environment.
+* Paths are normalized to posix form relative to the lint root (the
+  current working directory).  Rules scope themselves with
+  :func:`path_in` prefix matching — e.g. ``path_in(path,
+  "src/repro/federated/")``.
+* Suppression is per line: ``# repro-lint: allow[R1] — reason`` on the
+  flagged line, or on its own comment line immediately above.  Rule ids
+  ("R1") and names ("rng-discipline") both work; a pragma with no
+  reason is reported as rule R0.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+# ``—`` (em dash) is the documented separator; plain ``-``/``--`` are
+# accepted so pragmas survive editors that strip non-ASCII.
+PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*allow\[([^\]]*)\]\s*(?:(?:—|–|--|-)\s*(\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: ``path:line: RULE[name] message``."""
+
+    rule: str  # "R1"
+    rule_name: str  # "rng-discipline"
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}[{self.rule_name}] {self.message}"
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int  # line the pragma appears on
+    target: int  # line it suppresses
+    rules: Set[str]  # lowercased ids/names; "*" allowed
+    reason: Optional[str]
+
+
+@dataclasses.dataclass
+class FileContext:
+    """A parsed source file plus its suppression table."""
+
+    path: str  # posix, relative to lint root
+    source: str
+    tree: ast.Module
+    lines: List[str]
+    pragmas: List[Pragma]
+    _by_target: Dict[int, Set[str]] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str, source: str) -> FileContext:
+        tree = ast.parse(source, filename=path)
+        lines = source.splitlines()
+        pragmas = _collect_pragmas(lines)
+        by_target: Dict[int, Set[str]] = {}
+        for p in pragmas:
+            by_target.setdefault(p.target, set()).update(p.rules)
+        return cls(path=path, source=source, tree=tree, lines=lines,
+                   pragmas=pragmas, _by_target=by_target)
+
+    def suppressed(self, rule: Rule, line: int) -> bool:
+        toks = self._by_target.get(line)
+        if not toks:
+            return False
+        return bool(toks & {"*", rule.id.lower(), rule.name.lower()})
+
+
+def _collect_pragmas(lines: Sequence[str]) -> List[Pragma]:
+    out: List[Pragma] = []
+    for i, raw in enumerate(lines, start=1):
+        m = PRAGMA_RE.search(raw)
+        if not m:
+            continue
+        rules = {t.strip().lower() for t in m.group(1).split(",") if t.strip()}
+        reason = m.group(2).strip() if m.group(2) else None
+        before = raw[: raw.index("#")].strip() if "#" in raw else ""
+        # A standalone comment line shields the next line; an inline
+        # pragma shields its own.
+        target = i + 1 if not before else i
+        out.append(Pragma(line=i, target=target, rules=rules, reason=reason))
+    return out
+
+
+class Rule:
+    """Base class: subclass, set id/name/docs, implement ``check``."""
+
+    id = ""  # "R1"
+    name = ""  # "rng-discipline"
+    summary = ""  # one line for --list-rules
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> List[Violation]:  # pragma: no cover
+        raise NotImplementedError
+
+    def violation(self, ctx: FileContext, node_or_line, message: str) -> Violation:
+        line = node_or_line if isinstance(node_or_line, int) else node_or_line.lineno
+        return Violation(rule=self.id, rule_name=self.name, path=ctx.path,
+                         line=line, message=message)
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator adding a rule instance to the global registry."""
+    inst = cls()
+    if inst.id in _REGISTRY:  # defensive: duplicate ids corrupt pragma semantics
+        raise ValueError(f"duplicate rule id {inst.id}")
+    _REGISTRY[inst.id] = inst
+    return cls
+
+
+def registered_rules() -> List[Rule]:
+    import tools.repro_lint.rules  # noqa: F401  (side-effect: registration)
+
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by the rule modules)
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.random.PRNGKey`` for an Attribute/Name chain, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    if parts:  # e.g. ``something().attr`` — keep the attr tail
+        return "." + ".".join(reversed(parts))
+    return ""
+
+
+def call_name(node: ast.Call) -> str:
+    return dotted_name(node.func)
+
+
+def path_in(path: str, *prefixes: str) -> bool:
+    return any(path == p or path.startswith(p) for p in prefixes)
+
+
+def iter_functions(tree: ast.Module) -> Iterator[Tuple[ast.AST, str]]:
+    """Yield every (def node, qualname) including nested defs."""
+
+    def walk(node: ast.AST, prefix: str) -> Iterator[Tuple[ast.AST, str]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}"
+                yield child, qn
+                yield from walk(child, f"{qn}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def scope_walk(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a def's body without descending into nested defs/classes.
+
+    ``iter_functions`` yields nested defs separately, so per-function
+    rules pair the two to analyze each lexical scope exactly once.
+    """
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def docstring_lines(tree: ast.Module) -> Set[int]:
+    """Line numbers covered by module/class/function docstrings."""
+    covered: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            body = getattr(node, "body", [])
+            if body and isinstance(body[0], ast.Expr) and \
+                    isinstance(body[0].value, ast.Constant) and \
+                    isinstance(body[0].value.value, str):
+                c = body[0].value
+                covered.update(range(c.lineno, (c.end_lineno or c.lineno) + 1))
+    return covered
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+SKIP_DIRS = {"__pycache__", ".git", "fixtures"}
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterator[Path]:
+    for p in paths:
+        root = Path(p)
+        if root.is_file() and root.suffix == ".py":
+            yield root
+            continue
+        for f in sorted(root.rglob("*.py")):
+            if not SKIP_DIRS.intersection(f.parts):
+                yield f
+
+
+def lint_file(path: Path, rules: Sequence[Rule],
+              rel_to: Optional[Path] = None,
+              virtual_path: Optional[str] = None) -> List[Violation]:
+    source = path.read_text()
+    rel = virtual_path or _relpath(path, rel_to)
+    try:
+        ctx = FileContext.parse(rel, source)
+    except SyntaxError as e:
+        return [Violation("R0", "parse", rel, e.lineno or 1,
+                          f"could not parse: {e.msg}")]
+    out: List[Violation] = []
+    for pragma in ctx.pragmas:
+        if pragma.reason is None:
+            out.append(Violation(
+                "R0", "pragma-reason", rel, pragma.line,
+                "pragma without a reason: write "
+                "`# repro-lint: allow[RULE] — why this is sound`"))
+    for rule in rules:
+        if not rule.applies(rel):
+            continue
+        for v in rule.check(ctx):
+            if not ctx.suppressed(rule, v.line):
+                out.append(v)
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+def _relpath(path: Path, rel_to: Optional[Path]) -> str:
+    base = rel_to or Path.cwd()
+    try:
+        return path.resolve().relative_to(base.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def lint_paths(paths: Sequence[str], rules: Optional[Sequence[Rule]] = None,
+               rel_to: Optional[Path] = None) -> List[Violation]:
+    rules = list(rules) if rules is not None else registered_rules()
+    out: List[Violation] = []
+    for f in iter_py_files(paths):
+        out.extend(lint_file(f, rules, rel_to=rel_to))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description=__doc__.splitlines()[0] if __doc__ else "repro-lint")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint (default: src tests)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run every rule against its positive/negative fixtures")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = registered_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id}[{r.name}] {r.summary}")
+        return 0
+    if args.selftest:
+        from tools.repro_lint.selftest import run_selftest
+
+        return run_selftest()
+
+    violations = lint_paths(args.paths or ["src", "tests"], rules)
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"repro-lint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    return 0

@@ -1,0 +1,6 @@
+# virtual-path: src/repro/federated/runtime.py
+# Reason-less pragmas are themselves violations: suppression must be
+# auditable, so the engine demands the "why" on the pragma line.
+import jax
+
+key = jax.random.PRNGKey(0)  # repro-lint: allow[R1]  # LINT-HIT

@@ -1,0 +1,8 @@
+# virtual-path: src/repro/federated/runtime.py
+# A justified pragma (id or rule name, em dash or plain dash) is clean,
+# inline or on its own line above the suppressed statement.
+import jax
+
+key = jax.random.PRNGKey(0)  # repro-lint: allow[R1] — fixture: root of a documented stream
+# repro-lint: allow[rng-discipline] — fixture: standalone pragma shields the next line
+key2 = jax.random.PRNGKey(1)

@@ -1,0 +1,11 @@
+# virtual-path: src/repro/federated/scheduler.py
+import jax
+
+
+def invite(seed, r):
+    key = jax.random.PRNGKey(seed)  # LINT-HIT
+    return jax.random.bernoulli(key, 0.5, (4,))  # LINT-HIT
+
+
+def noise(shape):
+    return jax.random.normal(jax.random.PRNGKey(0), shape)  # LINT-HIT

@@ -1,0 +1,13 @@
+# virtual-path: src/repro/federated/scheduler.py
+import jax
+
+
+def invite(key, r):
+    round_key = jax.random.fold_in(key, r)
+    return jax.random.bernoulli(round_key, 0.5, (4,))
+
+
+def staged(seed):
+    base = jax.random.PRNGKey(seed)  # repro-lint: allow[R1] — fixture: root of the invite stream, folded per round below
+    base = jax.random.fold_in(base, 0)
+    return base

@@ -1,0 +1,9 @@
+# virtual-path: src/repro/models/paper/fixtures.py
+# Staging modules (models/, data/, the async latency model) own their
+# seeds: roots are legal here without pragmas.
+import numpy as np
+
+
+def synth(seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(3,))

@@ -1,0 +1,13 @@
+# virtual-path: src/repro/federated/runtime.py
+import jax
+
+
+def ship_encode_first(comp, privacy, upload, axis):
+    coded = comp.encode(upload)  # LINT-HIT
+    noisy = privacy.privatize(coded)
+    return jax.lax.all_gather(noisy, axis)
+
+
+def ship_gather_first(privacy, upload, axis):
+    gathered = jax.lax.all_gather(upload, axis)  # LINT-HIT
+    return privacy.privatize(gathered)

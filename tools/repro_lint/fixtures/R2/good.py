@@ -1,0 +1,18 @@
+# virtual-path: src/repro/federated/runtime.py
+import jax
+
+
+def ship(comp, privacy, upload, axis):
+    noisy = privacy.privatize(upload)
+    coded = comp.encode(noisy)
+    return jax.lax.all_gather(coded, axis)
+
+
+def gather_only(tree, axis):
+    # Non-DP helper: no privatization in scope, so ordering is moot.
+    return jax.lax.all_gather(tree, axis)
+
+
+def manifest(msg):
+    # String codecs are not wire compressors.
+    return msg.encode("utf-8")

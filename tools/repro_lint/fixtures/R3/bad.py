@@ -1,0 +1,28 @@
+# virtual-path: src/repro/federated/runtime.py
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def step(x, y):
+    if x > 0:  # LINT-HIT
+        return y
+    assert y.sum() > 0  # LINT-HIT
+    return x
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def run(x, mode=[]):  # LINT-HIT
+    while x:  # LINT-HIT
+        x = x - 1
+    return x
+
+
+def build():
+    def body(x):
+        if x:  # LINT-HIT
+            return x
+        return -x
+
+    return jax.jit(body)

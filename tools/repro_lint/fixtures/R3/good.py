@@ -1,0 +1,27 @@
+# virtual-path: src/repro/federated/runtime.py
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x, y):
+    if x is None:  # optional-arg plumbing is a trace-time constant
+        return y
+    if x.ndim == 2:  # shape metadata is static under tracing
+        return x + y
+    return jnp.where(x > 0, x, y)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def run(x, mode="fast"):
+    if mode == "fast":  # static arg: branching is legal and hashable
+        return x
+    return x * 2
+
+
+def host(x):
+    if x > 0:  # not a jitted scope
+        return x
+    return -x

@@ -1,0 +1,18 @@
+# virtual-path: src/repro/kernels/wire.py
+import jax
+import numpy as np
+
+STATS = {}
+
+
+def kernel(x):
+    print("tracing", x)  # LINT-HIT
+    global STATS  # LINT-HIT
+    STATS = {"n": 1}
+    host = np.asarray(x)  # LINT-HIT
+    return host.sum().item()  # LINT-HIT
+
+
+def debug_tap(x):
+    jax.debug.print("x={}", x)  # LINT-HIT
+    return x

@@ -1,0 +1,19 @@
+# virtual-path: src/repro/kernels/wire.py
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel(x):
+    return jnp.asarray(x).sum()
+
+
+def host_loop(fn, state):
+    # Explicit device_get is the sanctioned pull: transfer-guard clean.
+    state, metrics = fn(state)
+    elbo = jax.device_get(metrics["elbo"])
+    return state, float(elbo[-1])
+
+
+def staging(num_obs):
+    return np.asarray(num_obs, np.float32)  # repro-lint: allow[R4] — fixture: host staging of a Python list at init, not a device pull

@@ -1,0 +1,12 @@
+# virtual-path: src/repro/federated/runtime.py
+
+
+def round_body(strategy, state):
+    if strategy.name == "sfvi_avg":  # LINT-HIT
+        return state
+    sfvi_lr = 0.1  # LINT-HIT
+    return state, sfvi_lr  # LINT-HIT
+
+
+def pvi_update(state):  # LINT-HIT
+    return state

@@ -1,0 +1,11 @@
+# virtual-path: src/repro/federated/runtime.py
+"""Round driver fixture.
+
+Docstrings may discuss sfvi_avg or fed_ep freely — only code literals
+couple the runtime to a registry entry.
+"""
+
+
+def round_body(strategy, state, weights):
+    """Delegates combine to the strategy — even pvi-specific damping."""
+    return strategy.combine(state, weights)

@@ -1,0 +1,8 @@
+# virtual-path: tests/_legacy_server.py
+# The frozen pre-refactor oracle is definitionally algorithm-specific
+# and exempt from R5 (and R6) — see docs/dev.md.
+
+
+def sfvi_round(state):
+    algo = "sfvi_avg"
+    return state, algo

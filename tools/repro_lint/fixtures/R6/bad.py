@@ -1,0 +1,11 @@
+# virtual-path: src/repro/federated/aggregation.py
+
+
+def combine(agg, comp, x, MeanAggregator, Int8Compressor):
+    if hasattr(x, "shape"):  # LINT-HIT
+        x = x + 1
+    if isinstance(agg, MeanAggregator):  # LINT-HIT
+        return x
+    if type(comp) is Int8Compressor:  # LINT-HIT
+        return x * 2
+    return x

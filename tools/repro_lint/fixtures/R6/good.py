@@ -1,0 +1,18 @@
+# virtual-path: src/repro/federated/aggregation.py
+import jax
+import jax.sharding
+import numpy as np
+
+
+def combine(agg, comp, x):
+    if isinstance(x, (jax.Array, np.ndarray)):  # data type, not a protocol
+        x = x + 1
+    codec = getattr(comp, "wire_codec", "custom")  # documented capability
+    if codec == "int8":
+        return x * 2
+    reduction = getattr(agg, "fused_reduction", None)
+    return x if reduction is None else x + 1
+
+
+def shim():
+    return hasattr(jax.sharding, "AxisType")  # repro-lint: allow[R6] — fixture: jax cross-version feature shim, not a protocol probe

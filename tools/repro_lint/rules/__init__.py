@@ -1,0 +1,16 @@
+"""Rule modules — importing this package registers every rule.
+
+To add a rule: create a module here subclassing
+:class:`tools.repro_lint.engine.Rule`, decorate it with ``@register``,
+import it below, add ``fixtures/<ID>/bad.py`` + ``good.py``, and
+document it in docs/dev.md.
+"""
+
+from tools.repro_lint.rules import (  # noqa: F401
+    genericity,
+    privacy_order,
+    probes,
+    purity,
+    rng,
+    tracer,
+)

@@ -1,0 +1,97 @@
+"""R5 — strategy genericity.
+
+PR 7 made the compiled round strategy-agnostic: ``runtime.py`` drives
+any registered :class:`ServerStrategy` through its hooks and must never
+branch on *which* algorithm is running — that is exactly the coupling
+the registry refactor removed, and the property the old source-grep
+test (`tests/test_strategies.py`) protected for SFVI only.  This rule
+generalizes it: no algorithm-name literal (string constant, identifier,
+attribute, or parameter name) may appear in the strategy-generic
+runtime modules, for *any* registry entry, current or future.
+
+``tests/_legacy_server.py`` is the frozen pre-refactor oracle — it is
+definitionally algorithm-specific and exempt (see docs/dev.md).
+
+The name list is maintained here rather than imported from
+``repro.federated.strategy`` so the linter stays importable without
+jax; extend it when registering a new strategy (the fixture selftest
+reminds you how).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from tools.repro_lint.engine import (
+    FileContext,
+    Rule,
+    Violation,
+    docstring_lines,
+    path_in,
+    register,
+)
+
+# Keep in sync with the @register_strategy entries in
+# src/repro/federated/strategy.py.
+ALGORITHM_NAMES = ("sfvi", "sfvi_avg", "pvi", "fed_ep")
+
+# Modules that must stay strategy-generic.
+GENERIC_MODULES = (
+    "src/repro/federated/runtime.py",
+    "src/repro/federated/async_engine.py",
+    "src/repro/federated/aggregation.py",
+    "src/repro/federated/metering.py",
+)
+
+EXEMPT = ("tests/_legacy_server.py",)
+
+_WORD = re.compile("|".join(re.escape(a) for a in
+                            sorted(ALGORITHM_NAMES, key=len, reverse=True)))
+
+
+def _hits(text: str) -> List[str]:
+    return _WORD.findall(text.lower())
+
+
+@register
+class StrategyGenericity(Rule):
+    id = "R5"
+    name = "strategy-genericity"
+    summary = ("no algorithm-name literals (sfvi/pvi/fed_ep/...) in the "
+               "strategy-generic runtime modules")
+
+    def applies(self, path: str) -> bool:
+        return path_in(path, *GENERIC_MODULES) and path not in EXEMPT
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        doc_lines = docstring_lines(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                if node.lineno in doc_lines:
+                    continue
+                for hit in _hits(node.value):
+                    out.append(self.violation(
+                        ctx, node,
+                        f"algorithm name {hit!r} in a string literal — the "
+                        "runtime must stay strategy-generic; dispatch "
+                        "through the ServerStrategy registry"))
+            elif isinstance(node, ast.Name) and _hits(node.id):
+                out.append(self.violation(
+                    ctx, node,
+                    f"identifier `{node.id}` names an algorithm — the "
+                    "runtime must not special-case registry entries"))
+            elif isinstance(node, ast.Attribute) and _hits(node.attr):
+                out.append(self.violation(
+                    ctx, node,
+                    f"attribute `.{node.attr}` names an algorithm — "
+                    "dispatch through strategy hooks instead"))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and _hits(node.name):
+                out.append(self.violation(
+                    ctx, node,
+                    f"function `{node.name}` names an algorithm in a "
+                    "strategy-generic module"))
+        return out

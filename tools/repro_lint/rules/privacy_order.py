@@ -1,0 +1,90 @@
+"""R2 — privacy ordering.
+
+The RDP accountant's guarantee (docs/privacy.md, Heikkilä et al.,
+arXiv:2209.11595) is stated for the *transmitted* message: per-silo L2
+clip + Gaussian noise must be applied before the upload is compressed
+and before it crosses the wire in the all-gather.  Noise-after-compress
+(or gather-then-noise) silently voids the (ε, δ) ledger while every
+test on ELBO trajectories keeps passing.
+
+The check is an intra-function ordering approximation of the dataflow
+rule: in any ``src/repro/federated/`` function that both privatizes and
+encodes/gathers, the first privatization call must precede every
+compressor ``.encode`` and every all-gather.  Functions that never
+privatize (non-DP helpers, the gather primitive itself) are out of
+scope — the rule guards the *ordering* of the DP pipeline, not DP
+coverage.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Tuple
+
+from tools.repro_lint.engine import (
+    FileContext,
+    Rule,
+    Violation,
+    call_name,
+    iter_functions,
+    path_in,
+    register,
+    scope_walk,
+)
+
+# Calls that apply (or contain) the clip+noise stage.
+PRIVATIZE_TAILS = ("privatize", "_ship_upload", "_fused_ship")
+# Calls that put bits on the wire or transform the message for the wire.
+GATHER_TAILS = ("all_gather", "_coalesced_all_gather")
+ENCODE_TAIL = "encode"
+# ``.encode`` receivers that are string codecs, not wire compressors.
+ENCODE_IGNORE_RECV = {"json", "str"}
+
+
+def _events(fn: ast.AST) -> List[Tuple[int, str, str]]:
+    out: List[Tuple[int, str, str]] = []
+    for node in scope_walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        tail = name.rsplit(".", 1)[-1]
+        if tail in PRIVATIZE_TAILS:
+            out.append((node.lineno, "priv", name))
+        elif any(tail == g for g in GATHER_TAILS):
+            out.append((node.lineno, "gather", name))
+        elif tail == ENCODE_TAIL:
+            recv = name.rsplit(".", 2)[0] if name.count(".") else ""
+            if recv not in ENCODE_IGNORE_RECV and not isinstance(
+                    getattr(node.func, "value", None), ast.Constant):
+                out.append((node.lineno, "encode", name))
+    out.sort()
+    return out
+
+
+@register
+class PrivacyOrdering(Rule):
+    id = "R2"
+    name = "privacy-ordering"
+    summary = ("DP clip+noise must precede compressor.encode and the "
+               "all-gather inside any federated function that privatizes")
+
+    def applies(self, path: str) -> bool:
+        return path_in(path, "src/repro/federated/")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for fn, qualname in iter_functions(ctx.tree):
+            events = _events(fn)
+            privs = [e for e in events if e[1] == "priv"]
+            if not privs:
+                continue
+            first_priv = privs[0][0]
+            for line, kind, name in events:
+                if kind in ("gather", "encode") and line < first_priv:
+                    out.append(self.violation(
+                        ctx, line,
+                        f"`{name}` at line {line} precedes the first "
+                        f"privatization (line {first_priv}) in {qualname}() "
+                        "— clip+noise must dominate compression and the "
+                        "gather or the RDP ledger is unsound"))
+        return out

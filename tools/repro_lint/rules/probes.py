@@ -1,0 +1,102 @@
+"""R6 — protocol probes.
+
+PR 5 replaced runtime ``isinstance``/``hasattr`` type sniffing with the
+:class:`VariationalFamily` protocol, and PR 7 did the same for
+strategies.  Probes regress that: they silently mask typos (``hasattr``
+swallows *any* missing attribute), freeze concrete types into generic
+code, and hide capability contracts that belong on the protocol.  The
+sanctioned patterns are (a) a documented protocol attribute read with
+``getattr(obj, "cap", default)`` — a typo'd capability then *visibly*
+falls back — and (b) the one documented structural fallback in
+``core/family.py``.
+
+Flags, in ``src/`` and ``tests/`` outside the exempt files:
+
+* any ``hasattr(...)`` call
+* ``isinstance(x, P)`` / ``type(x) is P`` where ``P`` is one of the
+  repo's protocol/capability types (families, strategies, aggregators,
+  compressors) — checks against plain data types (dict, bytes,
+  jax.Array...) are not probes and stay legal.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.repro_lint.engine import (
+    FileContext,
+    Rule,
+    Violation,
+    dotted_name,
+    path_in,
+    register,
+)
+
+# The documented structural fallback + the frozen pre-refactor oracle.
+EXEMPT = ("src/repro/core/family.py", "tests/_legacy_server.py")
+
+# Protocol/capability types: probing these is type-sniffing a protocol.
+PROTOCOL_TYPES = {
+    "VariationalFamily", "DiagGaussian", "CholeskyGaussian",
+    "BatchedDiagGaussian", "LowRankGaussian", "ConditionalGaussian",
+    "FamilySpec",
+    "ServerStrategy", "StrategySpec",
+    "Aggregator", "MeanAggregator", "TrimmedMeanAggregator",
+    "Compressor", "NoCompression", "Int8Compressor",
+}
+
+
+def _protocol_types_in(node: ast.AST) -> List[str]:
+    names = []
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            tail = dotted_name(sub).rsplit(".", 1)[-1]
+            if tail in PROTOCOL_TYPES:
+                names.append(tail)
+    return names
+
+
+@register
+class ProtocolProbes(Rule):
+    id = "R6"
+    name = "protocol-probes"
+    summary = ("no hasattr()/isinstance/type-is probes of protocol types "
+               "outside family.py's documented fallback")
+
+    def applies(self, path: str) -> bool:
+        return path_in(path, "src/repro/", "tests/") and path not in EXEMPT
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name == "hasattr":
+                    out.append(self.violation(
+                        ctx, node,
+                        "hasattr() probe — read the documented protocol "
+                        "attribute with getattr(obj, name, default), or "
+                        "pragma a version shim"))
+                elif name == "isinstance" and len(node.args) == 2:
+                    hits = _protocol_types_in(node.args[1])
+                    if hits:
+                        out.append(self.violation(
+                            ctx, node,
+                            f"isinstance probe of protocol type(s) "
+                            f"{', '.join(sorted(set(hits)))} — dispatch "
+                            "through the protocol, not the concrete class"))
+            elif isinstance(node, ast.Compare) and \
+                    any(isinstance(op, (ast.Is, ast.Eq)) for op in node.ops):
+                left = node.left
+                if isinstance(left, ast.Call) and \
+                        dotted_name(left.func) == "type":
+                    hits = []
+                    for comp in node.comparators:
+                        hits += _protocol_types_in(comp)
+                    if hits:
+                        out.append(self.violation(
+                            ctx, node,
+                            f"`type(x) is {hits[0]}` exact-type probe — use "
+                            "a protocol capability attribute instead"))
+        return out

@@ -1,0 +1,101 @@
+"""R4 — purity of compiled modules.
+
+``runtime.py``, ``strategy.py``, and ``kernels/*`` assemble code that
+runs *inside* ``jit``/``shard_map``/Pallas traces.  Host effects there
+either fire at trace time (once, silently — a print that "works" on the
+first round and never again), force device→host syncs that stall the
+round pipeline, or desynchronize with the actual execution.  The
+sanctioned idioms: metrics leave the graph as return values; the host
+loop pulls them with an *explicit* ``jax.device_get`` (transfer-guard
+clean — see src/repro/debug.py); debugging goes through the sanitizer
+harness, not ad-hoc callbacks.
+
+Flags, module-wide in the compiled modules:
+
+* ``print`` and host-callback escapes (``jax.debug.print``,
+  ``jax.debug.callback``, ``jax.pure_callback``, ``io_callback``,
+  ``host_callback``)
+* ``global`` statements (trace-time mutation of module state)
+* host pulls: ``.item()``, ``np.asarray``/``np.array``/``np.copy`` —
+  use ``jax.device_get`` in host loops, ``jnp.*`` in traced code;
+  genuinely host-side staging gets a pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.repro_lint.engine import (
+    FileContext,
+    Rule,
+    Violation,
+    call_name,
+    path_in,
+    register,
+)
+
+COMPILED_MODULES = (
+    "src/repro/federated/runtime.py",
+    "src/repro/federated/strategy.py",
+    "src/repro/kernels/",
+)
+
+CALLBACK_NAMES = (
+    "jax.debug.print",
+    "jax.debug.callback",
+    "jax.pure_callback",
+    "jax.experimental.io_callback",
+    "io_callback",
+    "host_callback",
+)
+
+HOST_PULL_CALLS = ("np.asarray", "np.array", "np.copy",
+                   "numpy.asarray", "numpy.array", "numpy.copy")
+
+
+@register
+class CompiledPurity(Rule):
+    id = "R4"
+    name = "compiled-purity"
+    summary = ("no print/host callbacks/global mutation/.item()/np.asarray "
+               "in runtime.py, strategy.py, kernels/*")
+
+    def applies(self, path: str) -> bool:
+        return path_in(path, *COMPILED_MODULES)
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Global):
+                out.append(self.violation(
+                    ctx, node,
+                    "`global` mutation in a compiled module — keep state "
+                    "in the carry or on the host object"))
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name == "print":
+                out.append(self.violation(
+                    ctx, node,
+                    "print() in a compiled module fires at trace time, not "
+                    "per round — return the value as a metric instead"))
+            elif name in CALLBACK_NAMES or \
+                    name.rsplit(".", 1)[-1] in ("io_callback",) or \
+                    name.startswith("host_callback."):
+                out.append(self.violation(
+                    ctx, node,
+                    f"host callback `{name}` in a compiled module — "
+                    "debugging goes through repro.debug.sanitize()"))
+            elif name in HOST_PULL_CALLS:
+                out.append(self.violation(
+                    ctx, node,
+                    f"`{name}` is a host pull — use jax.device_get in host "
+                    "loops / jnp.* in traced code, or pragma host staging"))
+            elif name.endswith(".item") and not node.args:
+                out.append(self.violation(
+                    ctx, node,
+                    "`.item()` forces a device→host sync inside a compiled "
+                    "module — return the array and device_get on the host"))
+        return out

@@ -1,0 +1,137 @@
+"""R1 — RNG discipline.
+
+Bit-exact save→resume (and the paper's subsampled-RDP accounting) both
+rest on one property: every random stream in the runtime is a pure
+function of ``(seed, round, step, silo)``.  That holds iff PRNG *roots*
+(``jax.random.PRNGKey`` / ``np.random.default_rng``) are created only in
+staging code — model/data initialization and the async latency model —
+and everything inside the compiled federated path derives its keys by
+``fold_in`` from a key it was handed.
+
+Two checks:
+
+* **roots** — a PRNG root constructor anywhere in ``src/repro/`` outside
+  the allowlisted staging modules must carry a pragma explaining which
+  stream it roots and why that is resume-sound.
+* **fold-in chain** — inside ``federated/`` and ``kernels/``, a
+  ``jax.random.<draw>`` whose key argument is (or is locally assigned
+  from) a fresh ``PRNGKey`` never mixes in round/step/silo indices: two
+  rounds would replay identical noise.  Derive via ``fold_in`` instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.repro_lint.engine import (
+    FileContext,
+    Rule,
+    Violation,
+    call_name,
+    iter_functions,
+    path_in,
+    register,
+    scope_walk,
+)
+
+ROOT_CALLS = (
+    "jax.random.PRNGKey",
+    "random.PRNGKey",
+    "np.random.default_rng",
+    "numpy.random.default_rng",
+    "np.random.seed",
+    "numpy.random.seed",
+)
+
+# Staging modules that legitimately create roots: model/problem fixtures,
+# data synthesis/partitioning, and the async engine's latency model.
+ROOT_ALLOWED = (
+    "src/repro/models/",
+    "src/repro/data/",
+    "src/repro/federated/async_engine.py",
+)
+
+FOLD_SCOPES = ("src/repro/federated/", "src/repro/kernels/")
+
+
+def _is_root_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    return any(name == r or name.endswith("." + r) for r in ROOT_CALLS)
+
+
+@register
+class RngDiscipline(Rule):
+    id = "R1"
+    name = "rng-discipline"
+    summary = ("PRNG roots only in staging modules; federated/kernel draws "
+               "must derive keys via fold_in, never a fresh PRNGKey")
+
+    def applies(self, path: str) -> bool:
+        return path_in(path, "src/repro/")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        if not path_in(ctx.path, *ROOT_ALLOWED):
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.Call) and _is_root_call(node):
+                    out.append(self.violation(
+                        ctx, node,
+                        f"PRNG root `{call_name(node)}` outside staging "
+                        "modules — derive from a handed-in key with "
+                        "fold_in, or pragma with the stream it roots"))
+        if path_in(ctx.path, *FOLD_SCOPES):
+            out.extend(self._check_fold_chain(ctx))
+        return out
+
+    # -- fold-in chain ----------------------------------------------------
+
+    def _check_fold_chain(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for fn, qualname in iter_functions(ctx.tree):
+            fresh = self._fresh_key_names(fn)
+            for node in scope_walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if not name.startswith("jax.random.") or not node.args:
+                    continue
+                tail = name.rsplit(".", 1)[1]
+                if tail in ("PRNGKey", "fold_in", "key"):
+                    continue
+                key = node.args[0]
+                if isinstance(key, ast.Call) and _is_root_call(key):
+                    out.append(self.violation(
+                        ctx, node,
+                        f"jax.random.{tail} keyed on a fresh PRNGKey in "
+                        f"{qualname}() — fold the round/step/silo indices "
+                        "in (fold_in) so the stream is resume-pure"))
+                elif isinstance(key, ast.Name) and key.id in fresh:
+                    out.append(self.violation(
+                        ctx, node,
+                        f"jax.random.{tail} keyed on `{key.id}`, assigned "
+                        f"from a fresh PRNGKey in {qualname}() — derive it "
+                        "via fold_in instead"))
+        return out
+
+    @staticmethod
+    def _fresh_key_names(fn: ast.AST) -> set:
+        """Local names whose (only) assignments are direct PRNGKey calls.
+
+        One-hop provenance only — deliberately shallow.  A name that is
+        ever reassigned from anything else (``k = fold_in(k, r)``) is
+        considered laundered and drops out.
+        """
+        fresh: set = set()
+        assigns = sorted(
+            (n for n in scope_walk(fn) if isinstance(n, ast.Assign)),
+            key=lambda n: n.lineno)
+        for node in assigns:
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if not targets:
+                continue
+            if isinstance(node.value, ast.Call) and _is_root_call(node.value):
+                fresh.update(targets)
+            else:
+                fresh.difference_update(targets)
+        return fresh

@@ -1,0 +1,177 @@
+"""R3 — tracer safety.
+
+Python control flow on a traced value inside a ``jit``/``shard_map``
+scope either raises ``TracerBoolConversionError`` at first call or —
+worse — silently bakes one branch into the compiled graph when the
+value happens to be concrete during tracing.  Static arguments must be
+hashable or every call recompiles.
+
+Flags, inside functions that are jitted (decorator, ``jax.jit(f)`` /
+``shard_map(f, ...)`` wrapping of a local def):
+
+* ``if`` / ``while`` / ``assert`` whose condition reads a traced
+  parameter directly.  Exempt: ``is None`` / ``is not None`` tests and
+  parameters only touched through static metadata (``.shape``,
+  ``.ndim``, ``.dtype``, ``.size``) — both are trace-time constants.
+* parameters named in ``static_argnames`` whose default is a mutable
+  (unhashable) literal.
+
+Name-level only, on purpose: values *derived* from params are assumed
+traced-safe to test only via jnp ops, and chasing provenance here would
+trade precision for noise.  The runtime sanitizer's recompile watchdog
+(src/repro/debug.py) is the dynamic backstop.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.repro_lint.engine import (
+    FileContext,
+    Rule,
+    Violation,
+    call_name,
+    dotted_name,
+    iter_functions,
+    path_in,
+    register,
+    scope_walk,
+)
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+JIT_TAILS = {"jit", "pmap", "shard_map"}
+
+
+def _decorator_jit_info(fn: ast.AST) -> Optional[Tuple[Set[str], Set[int]]]:
+    """(static_argnames, static_argnums) if fn is jit-decorated, else None."""
+    for dec in getattr(fn, "decorator_list", []):
+        name = dotted_name(dec) if not isinstance(dec, ast.Call) else call_name(dec)
+        tail = name.rsplit(".", 1)[-1]
+        if tail in JIT_TAILS:
+            return set(), set()
+        if isinstance(dec, ast.Call) and tail == "partial":
+            inner = dec.args[0] if dec.args else None
+            if inner is not None and \
+                    dotted_name(inner).rsplit(".", 1)[-1] in JIT_TAILS:
+                return _static_from_call(dec)
+    return None
+
+
+def _static_from_call(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    names.add(c.value)
+        elif kw.arg == "static_argnums":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, int):
+                    nums.add(c.value)
+    return names, nums
+
+
+def _locally_wrapped(tree: ast.Module) -> Set[str]:
+    """Names of local defs passed to jax.jit(f)/shard_map(f, ...)."""
+    wrapped: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                call_name(node).rsplit(".", 1)[-1] in JIT_TAILS:
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    wrapped.add(arg.id)
+    return wrapped
+
+
+def _traced_params(fn, static_names: Set[str], static_nums: Set[int]) -> Set[str]:
+    args = fn.args
+    ordered = [a.arg for a in args.posonlyargs + args.args]
+    traced = set(ordered) | {a.arg for a in args.kwonlyargs}
+    traced.discard("self")
+    traced -= static_names
+    for i in static_nums:
+        if 0 <= i < len(ordered):
+            traced.discard(ordered[i])
+    return traced
+
+
+def _offending_names(test: ast.AST, traced: Set[str]) -> List[Tuple[ast.Name, str]]:
+    """Traced-param Name reads in a condition, after exemptions."""
+    exempt: Set[int] = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) and \
+                all(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators):
+            for sub in ast.walk(node):
+                exempt.add(id(sub))
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            for sub in ast.walk(node):
+                exempt.add(id(sub))
+    out = []
+    for node in ast.walk(test):
+        if isinstance(node, ast.Name) and node.id in traced \
+                and id(node) not in exempt:
+            out.append((node, node.id))
+    return out
+
+
+@register
+class TracerSafety(Rule):
+    id = "R3"
+    name = "tracer-safety"
+    summary = ("no Python if/while/assert on traced params in jit/shard_map "
+               "scopes; static args must be hashable")
+
+    def applies(self, path: str) -> bool:
+        return path_in(path, "src/repro/", "tests/")
+
+    def check(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        wrapped = _locally_wrapped(ctx.tree)
+        for fn, qualname in iter_functions(ctx.tree):
+            info = _decorator_jit_info(fn)
+            if info is None and fn.name in wrapped:
+                info = (set(), set())
+            if info is None:
+                continue
+            static_names, static_nums = info
+            out.extend(self._check_unhashable_defaults(ctx, fn, qualname,
+                                                       static_names))
+            traced = _traced_params(fn, static_names, static_nums)
+            for node in scope_walk(fn):
+                conds: Sequence[Tuple[ast.AST, str]] = ()
+                if isinstance(node, (ast.If, ast.While)):
+                    conds = ((node.test, type(node).__name__.lower()),)
+                elif isinstance(node, ast.Assert):
+                    conds = ((node.test, "assert"),)
+                for test, kind in conds:
+                    for name_node, pname in _offending_names(test, traced):
+                        out.append(self.violation(
+                            ctx, node,
+                            f"Python `{kind}` on traced parameter "
+                            f"`{pname}` in {qualname}() — use jnp.where/"
+                            "lax.cond, or mark the arg static"))
+        return out
+
+    def _check_unhashable_defaults(self, ctx, fn, qualname,
+                                   static_names: Set[str]) -> List[Violation]:
+        out: List[Violation] = []
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        defaults: Dict[str, ast.AST] = {}
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults, strict=True):
+            defaults[a.arg] = d
+        for a, d in zip(args.kwonlyargs, args.kw_defaults, strict=True):
+            if d is not None:
+                defaults[a.arg] = d
+        for pname in static_names & set(defaults):
+            if isinstance(defaults[pname], (ast.List, ast.Dict, ast.Set)):
+                out.append(self.violation(
+                    ctx, defaults[pname],
+                    f"static arg `{pname}` of {qualname}() defaults to an "
+                    "unhashable literal — jit static args must be hashable "
+                    "(use a tuple/frozenset/None)"))
+        return out

@@ -1,0 +1,75 @@
+"""Fixture-driven self-test: every rule proves it fires and stays quiet.
+
+Layout: ``fixtures/<RULE_ID>/bad*.py`` (positive — must flag exactly the
+lines marked ``# LINT-HIT``) and ``fixtures/<RULE_ID>/good*.py``
+(negative — must produce zero violations; these double as documentation
+of the sanctioned idioms, including justified pragmas).
+
+Each fixture declares the path it pretends to live at::
+
+    # virtual-path: src/repro/federated/runtime.py
+
+so path-scoped rules apply.  ``fixtures/R0`` exercises the engine's own
+pragma machinery (reason-less pragmas are violations).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+from tools.repro_lint.engine import lint_file, registered_rules
+
+FIXTURES = Path(__file__).parent / "fixtures"
+VPATH_RE = re.compile(r"#\s*virtual-path:\s*(\S+)")
+
+
+def _expected_lines(source: str) -> List[int]:
+    return [i for i, line in enumerate(source.splitlines(), start=1)
+            if "# LINT-HIT" in line]
+
+
+def run_selftest() -> int:
+    rules = {r.id: r for r in registered_rules()}
+    failures: List[str] = []
+    checked = 0
+    for rule_dir in sorted(FIXTURES.iterdir()):
+        if not rule_dir.is_dir():
+            continue
+        rid = rule_dir.name
+        if rid != "R0" and rid not in rules:
+            failures.append(f"{rule_dir}: fixture dir for unknown rule {rid}")
+            continue
+        active = [rules[rid]] if rid != "R0" else []
+        fixture_files = sorted(rule_dir.glob("*.py"))
+        if not any(f.name.startswith("bad") for f in fixture_files) or \
+                not any(f.name.startswith("good") for f in fixture_files):
+            failures.append(
+                f"{rid}: every rule needs at least one bad*.py (positive) "
+                "and one good*.py (negative) fixture")
+        for f in fixture_files:
+            checked += 1
+            source = f.read_text()
+            m = VPATH_RE.search(source)
+            if not m:
+                failures.append(f"{f}: missing `# virtual-path:` header")
+                continue
+            got = {v.line for v in lint_file(f, active, virtual_path=m.group(1))
+                   if v.rule == rid}
+            want = set(_expected_lines(source))
+            if f.name.startswith("good") and want:
+                failures.append(f"{f}: good fixtures must not mark LINT-HIT")
+            if got != want:
+                failures.append(
+                    f"{f}: {rid} flagged lines {sorted(got)}, fixture "
+                    f"expects {sorted(want)}")
+    for rid in rules:
+        if not (FIXTURES / rid).is_dir():
+            failures.append(f"{rid}: no fixture directory")
+    for msg in failures:
+        print(f"SELFTEST FAIL: {msg}", file=sys.stderr)
+    print(f"repro-lint selftest: {checked} fixtures, "
+          f"{len(failures)} failure(s)")
+    return 1 if failures else 0
