@@ -22,6 +22,8 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
+import subprocess
 import sys
 import time
 
@@ -172,6 +174,18 @@ SMOKE_SCENARIOS = [
 ]
 
 
+# 1-D vs 2-D mesh scaling row: the smoke config on a forced 4-host-device
+# world, once on a (silo=2) mesh and once on (silo=2, model=2) — same
+# J, same rounds, SFVI (the gather-heaviest cadence, one sync per local
+# step). The 2-D mesh must reproduce the 1-D ELBO bit for bit (the
+# sharding-layout contract, docs/federated.md) and both rows ride the
+# same check_perf.py gate as every other scenario. Runs in a subprocess
+# because XLA_FLAGS must be set before JAX initializes.
+_MESH_PROBE_DEVICES = 4
+_MESH_PROBE_MESHES = [("silo=2", {"silo": 2}),
+                      ("silo=2,model=2", {"silo": 2, "model": 2})]
+_MESH_PROBE_ROUNDS = 9  # 1 compile + 8 timed
+
 _YARD_INPUT = None
 
 
@@ -197,6 +211,69 @@ def _yardstick(reps: int = 3) -> float:
     for _ in range(reps):
         x = np.tanh(x) * 0.5 + 0.25
     return time.perf_counter() - t0
+
+
+def _mesh_probe_rows() -> dict:
+    """The 1-D vs 2-D mesh rows — call only under forced host devices."""
+    import statistics
+
+    from repro.federated import MeshSpec
+
+    cfg = dict(SMOKE_CONFIG)
+    bundle = get_model(cfg["model"]).build(
+        cfg["seed"], cfg["silos"], **cfg["model_kwargs"])
+    rows = {}
+    for label, axes in _MESH_PROBE_MESHES:
+        exp = staged_experiment(
+            cfg["model"], bundle, scenario=Scenario(algorithm="sfvi"),
+            num_silos=cfg["silos"], rounds=_MESH_PROBE_ROUNDS,
+            local_steps=cfg["local_steps"], lr=cfg["lr"], seed=cfg["seed"],
+            model_kwargs=cfg["model_kwargs"], mesh=MeshSpec(**axes))
+        exp.run(1)  # compile
+        per, ratios = [], []
+        while exp.remaining_rounds:
+            tick = _yardstick()
+            t0 = time.perf_counter()
+            exp.run(1)
+            dt = time.perf_counter() - t0
+            per.append(dt)
+            ratios.append(dt / tick)
+        rows[f"SFVI [mesh {label}]"] = {
+            "elbo": float(exp.history["elbo"][-1]),
+            "bytes_per_round": float(exp.comm.per_round),
+            "s_per_round": statistics.median(per),
+            "calibrated_round": statistics.median(ratios),
+            "sim_seconds": 0.0,
+            "epsilon": None,
+        }
+    one_d, two_d = (rows[f"SFVI [mesh {label}]"]
+                    for label, _ in _MESH_PROBE_MESHES)
+    assert one_d["elbo"] == two_d["elbo"], (
+        "2-D (silo, model) mesh must reproduce the 1-D silo mesh "
+        "bit-exactly", one_d["elbo"], two_d["elbo"])
+    return rows
+
+
+def _mesh_probe() -> dict:
+    """Run the mesh rows in a fresh subprocess with forced host devices."""
+    here = os.path.abspath(__file__)
+    repo = os.path.dirname(os.path.dirname(here))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_MESH_PROBE_DEVICES}")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, here, "--mesh-probe"],
+                         capture_output=True, text=True, env=env, cwd=repo)
+    if out.returncode != 0:
+        raise RuntimeError("mesh probe failed:\n"
+                           + out.stdout[-2000:] + out.stderr[-2000:])
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("MESHPROBE ")][-1]
+    return json.loads(line[len("MESHPROBE "):])
 
 
 def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
@@ -329,6 +406,18 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
             "calibrated_round": statistics.median(ratios),
         }
 
+    # 1-D vs 2-D mesh scaling (subprocess, 4 forced host devices): both
+    # rows land in ``scenarios`` so check_perf.py gates their bytes,
+    # ELBO and calibrated time like every other row.
+    mesh_rows = _mesh_probe()
+    scenarios.update(mesh_rows)
+    (l1, _), (l2, _) = _MESH_PROBE_MESHES
+    r1 = mesh_rows[f"SFVI [mesh {l1}]"]["calibrated_round"]
+    r2 = mesh_rows[f"SFVI [mesh {l2}]"]["calibrated_round"]
+    print(f"\nmesh scaling ({_MESH_PROBE_DEVICES} forced host devices): "
+          f"{l1} {r1:.3f} vs {l2} {r2:.3f} calibrated s/round "
+          f"(x{r1 / r2:.2f}); ELBO bit-identical")
+
     result = {
         "benchmark": "bench_federated-smoke",
         "config": cfg,
@@ -389,7 +478,12 @@ def main(argv=None) -> int:
                     help="write machine-readable results to FILE")
     ap.add_argument("--full", action="store_true",
                     help="non-quick sizes for the hier_bnn tables")
+    ap.add_argument("--mesh-probe", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: smoke's subprocess
     args = ap.parse_args(argv)
+    if args.mesh_probe:
+        print("MESHPROBE " + json.dumps(_mesh_probe_rows()))
+        return 0
     if args.smoke:
         smoke(json_path=args.json)
         return 0

@@ -41,7 +41,7 @@ def staged_experiment(model: str, bundle, *, num_silos: int, rounds: int,
                       lr: float = 2e-2, local_lr=None, seed: int = 0,
                       data_seed=None, eta_mode: str = "barycenter",
                       model_kwargs=None, eval_every: int = 0,
-                      wire: str = "flat"):
+                      wire: str = "flat", mesh=None):
     """Spec-build an Experiment over a pre-staged registry bundle.
 
     One bundle (one dataset staging) can serve many specs — algorithms,
@@ -54,8 +54,8 @@ def staged_experiment(model: str, bundle, *, num_silos: int, rounds: int,
     restricted with :func:`silo_subset` are NOT spec-describable — don't
     resume those from disk.
     """
-    from repro.federated import (ExperimentSpec, ModelSpec, OptimizerSpec,
-                                 Scenario, build)
+    from repro.federated import (ExperimentSpec, MeshSpec, ModelSpec,
+                                 OptimizerSpec, RuntimeSpec, Scenario, build)
 
     sc = scenario if scenario is not None else Scenario(
         algorithm=algorithm or "sfvi")
@@ -71,10 +71,13 @@ def staged_experiment(model: str, bundle, *, num_silos: int, rounds: int,
         eval_every=eval_every,
         seed=seed,
         data_seed=data_seed,
+        # Execution topology rides the spec (RuntimeSpec), so every
+        # benchmarked row is fully spec-describable — wire layout and
+        # device mesh included.
+        runtime=RuntimeSpec(wire=wire, mesh=mesh if mesh is not None
+                            else MeshSpec()),
     )
-    # ``wire`` is the Server's silo->server layout ("flat" packed (J, P)
-    # vs per-leaf "legacy") — an execution knob, not part of the spec.
-    return build(spec, bundle=bundle, wire=wire)
+    return build(spec, bundle=bundle)
 
 
 def silo_subset(bundle, indices):

@@ -76,10 +76,12 @@ from repro.federated.api import (
     ExperimentSpec,
     ModelSpec,
     OptimizerSpec,
+    RuntimeSpec,
     build,
     run_spec,
     scenario_specs,
 )
+from repro.launch.mesh import MeshSpec
 
 __all__ = [
     "AsyncConfig",
@@ -89,8 +91,10 @@ __all__ = [
     "Experiment",
     "ExperimentSpec",
     "FamilySpec",
+    "MeshSpec",
     "ModelSpec",
     "OptimizerSpec",
+    "RuntimeSpec",
     "build",
     "run_spec",
     "scenario_specs",

@@ -38,6 +38,7 @@ import contextlib
 import dataclasses
 import json
 import os
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
@@ -47,11 +48,27 @@ from repro.checkpoint import CheckpointManager
 from repro.core.family import FamilySpec
 from repro.federated.scheduler import RoundScheduler, Scenario
 from repro.federated.strategy import StrategySpec
+from repro.launch.mesh import MeshSpec, build_mesh
 
 PyTree = Any
 
 _SPEC_FILE = "spec.json"
 _SERVER_KEYS = ("theta", "eta_G", "opt_server")
+
+# The deprecated out-of-band wire kwarg warns ONCE per process — sweeps
+# over many specs shouldn't drown their output in repeats.
+_WIRE_KWARG_WARNED = False
+
+
+def _warn_wire_kwarg(where: str) -> None:
+    global _WIRE_KWARG_WARNED
+    if not _WIRE_KWARG_WARNED:
+        warnings.warn(
+            f"the wire= kwarg on {where} is deprecated; set it on the spec "
+            "instead: ExperimentSpec(runtime=RuntimeSpec(wire=...)). The "
+            "kwarg still overrides the spec for now.",
+            DeprecationWarning, stacklevel=3)
+        _WIRE_KWARG_WARNED = True
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +146,44 @@ class ModelSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class RuntimeSpec:
+    """Execution topology and wire layout — spec-carried, JSON-native.
+
+    Historically the wire layout rode an out-of-band ``wire=`` kwarg on
+    :func:`build` and the mesh was whatever ``make_silo_mesh`` decided;
+    both now live on the spec so a run's topology serializes, resumes
+    and sweeps like every other knob.
+
+    Attributes:
+      wire: silo→server wire layout — ``"flat"`` (packed (J, P)
+        matrix, the default), ``"fused"`` (same layout, Pallas-kernel
+        pipeline) or ``"legacy"`` (per-leaf reference).
+      mesh: the federated mesh topology
+        (:class:`~repro.launch.mesh.MeshSpec`): ``silo`` devices × a
+        ``model`` axis sharding each row's P wire parameters, plus the
+        ``multiprocess`` flag for ``jax.distributed`` runs.
+      sanitize: default for :meth:`Experiment.run`'s runtime sanitizer
+        (transfer guard + NaN checks + recompile watchdog); an explicit
+        ``run(sanitize=...)`` still overrides.
+    """
+
+    wire: str = "flat"
+    mesh: MeshSpec = MeshSpec()
+    sanitize: bool = False
+
+    def __post_init__(self):
+        if self.wire not in ("flat", "fused", "legacy"):
+            raise ValueError(
+                f"unknown wire layout {self.wire!r} (flat/fused/legacy)")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> RuntimeSpec:
+        return cls(wire=d.get("wire", "flat"),
+                   mesh=MeshSpec.from_dict(d.get("mesh") or {}),
+                   sanitize=d.get("sanitize", False))
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The complete, serializable description of one federated run.
 
@@ -164,6 +219,11 @@ class ExperimentSpec:
       data_seed: seed the registry stages data with; None mirrors
         ``seed``. Separate so one dataset can be crossed with many run
         seeds while the spec still rebuilds the exact data on resume.
+      runtime: execution topology — wire layout, federated mesh
+        (:class:`~repro.launch.mesh.MeshSpec`) and the sanitizer
+        default, as one :class:`RuntimeSpec`. A resume may change the
+        topology (device or process count): silo re-padding and
+        resharding keep the REAL silos' trajectory bit-exact.
     """
 
     model: ModelSpec
@@ -178,6 +238,7 @@ class ExperimentSpec:
     eval_every: int = 0
     seed: int = 0
     data_seed: Optional[int] = None
+    runtime: RuntimeSpec = RuntimeSpec()
 
     @property
     def algorithm(self) -> str:
@@ -213,6 +274,7 @@ class ExperimentSpec:
             eval_every=d.get("eval_every", 0),
             seed=d.get("seed", 0),
             data_seed=d.get("data_seed"),
+            runtime=RuntimeSpec.from_dict(d.get("runtime") or {}),
         )
 
     def to_json(self, indent: int = 2) -> str:
@@ -241,26 +303,35 @@ class ExperimentSpec:
 # ---------------------------------------------------------------------------
 
 
-def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> Experiment:
+def build(spec: ExperimentSpec, bundle=None, *,
+          wire: Optional[str] = None) -> Experiment:
     """Assemble the compiled runtime for ``spec``.
 
     Resolves the model through the registry (unless a pre-staged
     ``bundle`` is supplied — benchmarks reuse one dataset across many
     scenario specs that way), applies the spec's family overrides
     (``ModelSpec.global_family`` / ``local_family``), instantiates
-    optimizers, aggregation, compression and the privacy policy from
-    the scenario, and returns a ready-to-run :class:`Experiment`.
+    optimizers, aggregation, compression, the privacy policy AND the
+    execution topology — wire layout and federated mesh, from
+    ``spec.runtime`` — and returns a ready-to-run :class:`Experiment`.
 
-    ``wire`` selects the silo→server wire layout: ``"flat"`` (the
-    packed (J, P) path), ``"fused"`` (the same layout driven by the
-    fused Pallas kernels of :mod:`repro.kernels.wire`), or the
-    per-leaf ``"legacy"`` reference — an execution knob, deliberately
-    NOT part of the spec.
+    ``wire`` is a DEPRECATED override of ``spec.runtime.wire`` (warns
+    once); topology belongs on the spec so it serializes and resumes
+    with everything else.
     """
+    if wire is not None:
+        _warn_wire_kwarg("build()")
+    return _build(spec, bundle, wire)
+
+
+def _build(spec: ExperimentSpec, bundle=None,
+           wire: Optional[str] = None) -> Experiment:
+    """The warning-free core of :func:`build` (resume calls this)."""
     from repro.federated import graph_cache
     from repro.federated.runtime import Server
     from repro.models.paper.registry import apply_family_spec, get_model
 
+    wire = wire if wire is not None else spec.runtime.wire
     spec.scenario.validate(spec.num_silos)
     strat_spec = (spec.strategy if spec.strategy is not None
                   else StrategySpec(spec.scenario.algorithm))
@@ -271,6 +342,7 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> Experimen
             f"agree (the scenario label drives scheduling/validation, the "
             f"StrategySpec only adds hyperparameters)")
     strategy = strat_spec.build()
+    mesh = build_mesh(spec.runtime.mesh, num_silos=spec.num_silos)
     token = None
     if bundle is None:
         entry = get_model(spec.model.name)
@@ -281,7 +353,8 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> Experimen
         # resume then re-traces nothing. A caller-supplied bundle is
         # opaque to the token and opts out.
         token = graph_cache.build_token(
-            spec.to_json(indent=0), wire, spec.num_silos)
+            spec.to_json(indent=0), wire, spec.num_silos,
+            mesh_shape=tuple(sorted(mesh.shape.items())))
     if len(bundle.datas) != spec.num_silos:
         raise ValueError(
             f"bundle stages {len(bundle.datas)} silos, spec.num_silos is "
@@ -305,6 +378,7 @@ def build(spec: ExperimentSpec, bundle=None, *, wire: str = "flat") -> Experimen
         compressor=spec.scenario.compressor(),
         eta_mode=spec.eta_mode,
         wire=wire,
+        mesh=mesh,
         privacy=spec.scenario.privacy(),
         seed=spec.seed,
         strategy=strategy,
@@ -380,7 +454,8 @@ class Experiment:
 
     def run(self, rounds: Optional[int] = None,
             callback: Optional[Callable[[int, dict], None]] = None,
-            sanitize: Union[bool, Dict[str, Any]] = False) -> Dict[str, list]:
+            sanitize: Union[None, bool, Dict[str, Any]] = None
+            ) -> Dict[str, list]:
         """Advance ``rounds`` rounds (default: the spec's remaining budget).
 
         Returns the accumulated history. ``callback(r, metrics)`` fires
@@ -392,7 +467,8 @@ class Experiment:
         ``sanitize=True`` wraps the loop in :func:`repro.debug.sanitize`
         — transfer guard, NaN debugging and the recompile watchdog (a
         dict passes keyword options through, e.g.
-        ``sanitize={"debug_nans": False}``). See docs/dev.md.
+        ``sanitize={"debug_nans": False}``). The default (``None``)
+        defers to ``spec.runtime.sanitize``. See docs/dev.md.
 
         When the scenario carries an async block, "rounds" are buffered
         flushes driven by :func:`repro.federated.async_engine.run_buffered`
@@ -404,6 +480,8 @@ class Experiment:
         if n <= 0:
             return self.history
         spec = self.spec
+        if sanitize is None:
+            sanitize = spec.runtime.sanitize
         start = self.round
 
         def cb(r: int, metrics: dict) -> None:
@@ -526,32 +604,66 @@ class Experiment:
             counters, RDP ledger (JSON so the float64 ledger round-trips
             exactly).
 
+        On a multi-process run, host I/O is routed through silo
+        ownership: process 0 writes the spec, the replicated server
+        state and the meta sidecar, and each process writes ONLY the
+        silo shards it owns (its addressable rows of the stacked silo
+        axis — reading another host's rows would dispatch a cross-host
+        collective). Every process must call ``save``; the shared
+        ``directory`` must be visible to all of them.
+
         Returns the directory.
         """
+        from repro.federated import distributed
+
+        multi = self.server.n_processes > 1
+        lead = (not multi) or jax.process_index() == 0
         os.makedirs(directory, exist_ok=True)
-        self.spec.save(os.path.join(directory, _SPEC_FILE))
         mgr = CheckpointManager(directory, keep=keep)
         state = self.server.state
-        mgr.save(self.round, {k: state[k] for k in _SERVER_KEYS})
+        if lead:
+            self.spec.save(os.path.join(directory, _SPEC_FILE))
+            mgr.save(self.round, {k: state[k] for k in _SERVER_KEYS})
         silo_state = self._silo_state_tree(state)
         if silo_state:
-            for j in range(self.server.J):
-                mgr.save(
-                    self.round,
-                    jax.tree_util.tree_map(lambda x: x[j], silo_state),
-                    shard=f"silo_{j:04d}",
-                )
-        tmp = self._meta_path(directory, self.round) + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._meta_dict(), f)
-        os.replace(tmp, self._meta_path(directory, self.round))
-        # Retention for the JSON sidecars mirrors the manager's msgpack GC.
-        live = set(mgr.steps())
-        for fn in os.listdir(directory):
-            if fn.startswith("step_") and fn.endswith(".meta.json"):
-                s = fn[len("step_"):-len(".meta.json")]
-                if s.isdigit() and int(s) not in live:
-                    os.remove(os.path.join(directory, fn))
+            if multi:
+                rows = [r for r in distributed.owned_rows(
+                    self.server.mesh, self.server.J_pad)
+                    if r < self.server.J]
+                for j in rows:
+                    mgr.save(
+                        self.round,
+                        jax.tree_util.tree_map(
+                            lambda x, jj=j: distributed.host_rows(
+                                x, [jj])[jj],
+                            silo_state),
+                        shard=f"silo_{j:04d}",
+                    )
+            else:
+                for j in range(self.server.J):
+                    mgr.save(
+                        self.round,
+                        jax.tree_util.tree_map(lambda x: x[j], silo_state),
+                        shard=f"silo_{j:04d}",
+                    )
+        if lead:
+            tmp = self._meta_path(directory, self.round) + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._meta_dict(), f)
+            os.replace(tmp, self._meta_path(directory, self.round))
+            # Retention for the JSON sidecars mirrors the msgpack GC.
+            live = set(mgr.steps())
+            for fn in os.listdir(directory):
+                if fn.startswith("step_") and fn.endswith(".meta.json"):
+                    s = fn[len("step_"):-len(".meta.json")]
+                    if s.isdigit() and int(s) not in live:
+                        os.remove(os.path.join(directory, fn))
+        if multi:
+            # All shards on disk before ANY process proceeds — a resume
+            # right after save must never read a half-written step.
+            from jax.experimental import multihost_utils
+
+            multihost_utils.sync_global_devices(f"repro_save_{self.round}")
         return directory
 
     @classmethod
@@ -568,13 +680,24 @@ class Experiment:
         checkpoint. Continuing with :meth:`run` reproduces the
         uninterrupted run bit-exactly.
 
-        ``wire`` overrides the checkpoint's recorded wire layout —
+        ``wire`` is a DEPRECATED override (warns once; prefer
+        ``spec.runtime.wire``) of the checkpoint's recorded layout —
         switching between ``"flat"`` and ``"fused"`` mid-run is safe
         (the fused kernels replay the identical op sequence and DP
         noise stream, so the continued trajectory is unchanged);
         switching to/from ``"legacy"`` changes per-leaf DP fold-ins and
         int8 scale granularity and will diverge under DP/compression.
+
+        A resume may land on a DIFFERENT topology than the run that
+        saved (device count, ``MeshSpec`` shape, process count):
+        checkpoints hold the J real silos one file each, so the stacked
+        axis is re-padded and resharded for the new mesh and the real
+        silos' trajectory stays bit-exact. On a multi-process resume
+        every process calls this; each reads only the silo shards it
+        owns on the new mesh.
         """
+        if wire is not None:
+            _warn_wire_kwarg("Experiment.resume()")
         if spec is None:
             spec = ExperimentSpec.load(os.path.join(directory, _SPEC_FILE))
         mgr = CheckpointManager(directory)
@@ -587,17 +710,39 @@ class Experiment:
         # so resuming a wire='legacy' run as 'flat' would diverge).
         with open(cls._meta_path(directory, step)) as f:
             meta = json.load(f)
-        exp = build(spec, bundle=bundle,
-                    wire=wire if wire is not None
-                    else meta.get("wire", "flat"))
+        exp = _build(spec, bundle,
+                     wire if wire is not None
+                     else meta.get("wire", spec.runtime.wire))
 
+        from repro.federated import distributed
+
+        multi = exp.server.n_processes > 1
         state = exp.server.state
         like = {k: state[k] for k in _SERVER_KEYS}
         restored = mgr.restore(step, like)
+        if multi:
+            # Host trees -> global arrays replicated over the new mesh
+            # (every process read the identical file).
+            restored = distributed.globalize(
+                restored, exp.server.mesh,
+                jax.sharding.PartitionSpec())
         for k in _SERVER_KEYS:
             state[k] = restored[k]
         silo_like = cls._silo_state_tree(state)
-        if silo_like:
+        if silo_like and multi:
+            J, J_pad = exp.server.J, exp.server.J_pad
+            row_like = jax.tree_util.tree_map(
+                lambda x: np.zeros(x.shape[1:], x.dtype), silo_like)
+            loaded = {
+                j: mgr.restore(step, row_like, shard=f"silo_{j:04d}")
+                for j in distributed.owned_rows(exp.server.mesh, J_pad)
+                if j < J
+            }
+            for k in silo_like:
+                state[k] = distributed.silo_sharded_from_rows(
+                    silo_like[k], exp.server.mesh,
+                    {j: t[k] for j, t in loaded.items()})
+        elif silo_like:
             slices = [
                 mgr.restore(
                     step,

@@ -41,17 +41,24 @@ _LIMIT = 8
 _CACHE: OrderedDict[str, Dict[tuple, Callable]] = OrderedDict()
 
 
-def build_token(spec_json: str, wire: str, num_silos: int) -> str:
+def build_token(spec_json: str, wire: str, num_silos: int,
+                mesh_shape=None) -> str:
     """Structural identity of a registry-staged build.
 
     Covers everything the round graph closes over: the full spec (model,
     strategy, optimizers, privacy, compression — via its canonical
-    JSON), the wire layout, J, and the device signature (the mesh is a
-    pure function of J and the device list).
+    JSON), the wire layout, J, the RESOLVED mesh shape, the process
+    count, and the device signature. The mesh shape and process count
+    must be hashed explicitly: the device signature alone let two
+    builds with different forced-device counts (or different
+    ``MeshSpec`` topologies over the same devices) collide on one
+    compiled graph whose shard_map was traced for the other mesh.
     """
     devices = tuple((d.platform, d.id) for d in jax.devices())
+    shape = [list(t) for t in (mesh_shape or ())]
     payload = json.dumps(
-        [spec_json, wire, num_silos, devices], sort_keys=True)
+        [spec_json, wire, num_silos, devices, shape, jax.process_count()],
+        sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 

@@ -5,6 +5,17 @@ compiled :class:`~repro.federated.runtime.Server` bills its rounds into a
 :class:`CommMeter`, and the deprecated eager adapters in
 ``repro.core.runtime`` alias it as ``CommLog``. :func:`tree_bytes` is the
 one primitive every byte figure in the repo is computed with.
+
+The meter is topology-independent: it bills ALGORITHM-level bytes
+(what each silo ships), so its figures are identical on a 1-device
+mesh, a 2-D (silo x model) mesh, or a multi-process world — and every
+process of a ``jax.distributed`` run meters the same totals, since the
+control plane is replicated. The compiled-HLO cross-check
+(``Server.compiled_collective_bytes``) is the per-topology view: on a
+2-D mesh it additionally counts the model-axis rejoin gather
+(``docs/federated.md`` §Sharding layout), while the silo gather's
+result bytes still equal J x the per-silo upload metered here
+(asserted end to end in ``tests/test_multiprocess.py``).
 """
 from __future__ import annotations
 

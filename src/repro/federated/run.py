@@ -45,6 +45,18 @@ scenario matrix (participation × stragglers × compression × DP from
 the ``silo`` mesh axis actually spans devices and
 ``Server.compiled_collective_bytes`` reports real collective traffic.
 
+Execution topology is spec state (``spec.runtime``), set here with:
+
+    ... --mesh silo=4,model=2 --devices 8    # 2-D (silo x model) mesh
+    ... --wire fused                          # Pallas wire pipeline
+
+Multi-process federation (one jax process per host; every process runs
+the SAME command plus its process identity — or exports the
+REPRO_COORDINATOR / REPRO_NUM_PROCESSES / REPRO_PROCESS_ID env schema):
+
+    ... --mesh silo=8,multiprocess \
+        --coordinator 10.0.0.1:8476 --num-processes 2 --process-id 0
+
 JAX is imported *after* argument parsing so --devices can set XLA_FLAGS
 (the registry lists model names without importing JAX).
 """
@@ -131,6 +143,27 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sweep-compress", default="none,int8")
     ap.add_argument("--sweep-dp-noise", default="0.0,1.0")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="", metavar="SPEC",
+                    help="federated mesh topology as 'silo=N,model=N' "
+                         "(append ',multiprocess' for jax.distributed "
+                         "runs), e.g. --mesh silo=4,model=2; default: the "
+                         "auto 1-D silo mesh. Lands on spec.runtime.mesh; "
+                         "with --resume, overrides the checkpointed "
+                         "topology (re-padding/resharding keeps the real "
+                         "silos bit-exact)")
+    ap.add_argument("--wire", default="flat",
+                    choices=["flat", "fused", "legacy"],
+                    help="silo->server wire layout (spec.runtime.wire)")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator address; starts the "
+                         "multi-process runtime before any jax use "
+                         "(or export REPRO_COORDINATOR)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="with --coordinator: total process count "
+                         "(or REPRO_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="with --coordinator: this process's rank "
+                         "(or REPRO_PROCESS_ID)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N XLA host devices (0 = real devices)")
     ap.add_argument("--hlo-bytes", action="store_true",
@@ -183,9 +216,11 @@ def _family_spec(name, kwargs_json):
 
 def _spec_from_args(args, algorithm: str):
     """The thin spec-builder: CLI flags -> declarative ExperimentSpec."""
-    from repro.federated.api import ExperimentSpec, ModelSpec, OptimizerSpec
+    from repro.federated.api import (ExperimentSpec, ModelSpec,
+                                     OptimizerSpec, RuntimeSpec)
     from repro.federated.scheduler import Scenario
     from repro.federated.strategy import StrategySpec
+    from repro.launch.mesh import MeshSpec
 
     strat_kwargs = json.loads(args.strategy_kwargs or "{}")
     async_cfg = _async_cfg_from_args(args)
@@ -220,6 +255,11 @@ def _spec_from_args(args, algorithm: str):
         eta_mode=args.eta_mode,
         eval_every=args.eval_every,
         seed=args.seed,
+        runtime=RuntimeSpec(
+            wire=args.wire,
+            mesh=MeshSpec.parse(args.mesh),
+            sanitize=args.sanitize,
+        ),
     )
 
 
@@ -257,7 +297,7 @@ def _report(exp, hlo_bytes: bool) -> None:
 
 
 def _run_one(spec, bundle, hlo_bytes: bool = False, ckpt_dir=None,
-             ckpt_every: int = 0, sanitize: bool = False):
+             ckpt_every: int = 0, sanitize=None):
     """Build + run one spec against a pre-staged bundle; print a report."""
     from repro.federated.api import build
 
@@ -345,6 +385,15 @@ def _resume(args) -> int:
     spec = ExperimentSpec.load(os.path.join(args.resume, "spec.json"))
     if args.rounds is not None:
         spec = dataclasses.replace(spec, rounds=args.rounds)
+    if args.mesh:
+        # Topology override at resume time: the runtime re-pads and
+        # reshards the stacked silo state for the new mesh; the real
+        # silos' trajectory is unchanged.
+        from repro.launch.mesh import MeshSpec
+
+        spec = dataclasses.replace(
+            spec, runtime=dataclasses.replace(
+                spec.runtime, mesh=MeshSpec.parse(args.mesh)))
     exp = Experiment.resume(args.resume, spec=spec)
     remaining = exp.remaining_rounds
     print(f"== resume: {spec.name} at round {exp.round}/{spec.rounds} "
@@ -360,7 +409,7 @@ def _resume(args) -> int:
                     and (r + 1) < spec.rounds:
                 exp.save(out)
 
-        exp.run(callback=cb, sanitize=args.sanitize)
+        exp.run(callback=cb, sanitize=True if args.sanitize else None)
         exp.save(out)
     _report(exp, args.hlo_bytes)
     return 0
@@ -379,6 +428,14 @@ def main(argv=None) -> int:
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         )
+    if args.coordinator or os.environ.get("REPRO_COORDINATOR"):
+        # Multi-process runtime must start before ANY other jax use —
+        # the gloo CPU-collectives switch and the device topology are
+        # locked at first jax init.
+        from repro.federated import distributed
+
+        distributed.initialize(args.coordinator, args.num_processes,
+                               args.process_id)
     if args.resume:
         return _resume(args)
 
@@ -429,7 +486,7 @@ def main(argv=None) -> int:
     exps = {s.algorithm: _run_one(s, bundle, args.hlo_bytes,
                                   ckpt_dir=ckpt_dir_for(s),
                                   ckpt_every=args.ckpt_every,
-                                  sanitize=args.sanitize)
+                                  sanitize=True if args.sanitize else None)
             for s in specs}
     if len(exps) == 2:
         sfvi_pr = exps["sfvi"].comm.per_round

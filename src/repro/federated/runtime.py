@@ -3,8 +3,8 @@
 The host-level runtime (``repro.core.runtime``) exchanges explicit Python
 message dicts — faithful to the protocol, but it executes silos serially
 and re-enters Python every round. This module is the scale path: all J
-silos advance together inside a single ``shard_map`` over the dedicated
-``silo`` mesh axis (``launch.mesh.make_silo_mesh``), with the server
+silos advance together inside a single ``shard_map`` over the federated
+``(silo[, model])`` mesh (``launch.mesh.build_mesh``), with the server
 virtualized into collectives:
 
   * silo state (η_{L_j}, its optimizer, its data shard, and any per-silo
@@ -22,7 +22,26 @@ virtualized into collectives:
     and the server-side aggregation all operate on a single (J, P)
     matrix instead of per-leaf tree_maps;
   * the server reduction is a pluggable aggregator (mean, trimmed mean)
-    evaluated redundantly on every device (standard SPMD replication).
+    evaluated redundantly on every device (standard SPMD replication);
+  * on a 2-D ``(silo, model)`` mesh each row's P wire parameters are
+    additionally sharded along ``model``: the whole upload pipeline
+    (pack → DP clip+noise → mask → encode, or the fused kernel pass)
+    runs on full rows — so noise streams and int8 row scales are
+    bit-identical to the 1-D mesh — and each device then slices its
+    model-column block, so the big gather over ``silo`` moves
+    ``(J_pad, P/model)`` blocks; a second row-local ``all_gather`` over
+    ``model`` rejoins the blocks before decode/aggregation, so the
+    combine sees the exact (J_pad, P) matrix of the 1-D mesh and 2-D
+    trajectories are bit-exact, reported ELBO included.
+    ``model > 1`` requires the flat/fused wire and an identity or int8
+    codec (custom codecs see arbitrary pytrees the runtime cannot
+    column-slice).
+
+Multi-process execution (``jax.distributed``) runs the same SPMD graph
+over a global mesh: every process computes the identical control plane
+(masks, keys, metering — pure functions of seed and round) while silo
+state and data exist only on the owning process's devices
+(:mod:`repro.federated.distributed`).
 
 WHAT each silo computes and HOW the server folds the aggregate back into
 (θ, η_G) is not this module's business: both live behind the
@@ -67,7 +86,12 @@ from repro.federated.strategy import (
 from repro.kernels import wire as wire_kernels
 from repro.federated.privacy import PrivacyPolicy, RdpAccountant
 from repro.federated.scheduler import RoundScheduler
-from repro.launch.mesh import make_silo_mesh
+from repro.launch.mesh import (
+    MeshSpec,
+    build_mesh,
+    mesh_process_count,
+    model_world,
+)
 from repro.optim.base import GradientTransformation
 
 __all__ = [
@@ -241,7 +265,18 @@ class Server:
         broadcast for broadcast-reference ones). The Server then owns an
         :class:`~repro.federated.privacy.RdpAccountant` composing every
         exchange; ``run`` reports cumulative ε per round.
-      mesh: optional silo mesh (default ``make_silo_mesh(J)``).
+      mesh: optional pre-built federated mesh (a 1-D ``(silo,)`` or 2-D
+        ``(silo, model)`` :class:`jax.sharding.Mesh`). Mutually
+        exclusive with ``mesh_spec``; default ``build_mesh`` over the
+        spec (or ``MeshSpec()`` — the historical 1-D auto mesh).
+      mesh_spec: declarative topology
+        (:class:`~repro.launch.mesh.MeshSpec`) — what
+        ``ExperimentSpec.runtime.mesh`` carries. ``model > 1`` shards
+        each silo row's P wire parameters across the ``model`` axis
+        (flat/fused wire with identity or int8 codec only);
+        ``multiprocess=True`` builds the mesh over the global device
+        list of a ``jax.distributed`` run and globalizes silo state,
+        data and control inputs accordingly.
       seed: base seed for the round key stream.
       strategy: default update rule for :meth:`run` — a registry name,
         a :class:`~repro.federated.strategy.StrategySpec`, or a
@@ -266,6 +301,7 @@ class Server:
         wire: str = "flat",
         privacy: Optional[PrivacyPolicy] = None,
         mesh=None,
+        mesh_spec: Optional[MeshSpec] = None,
         seed: int = 0,
         strategy: Union[str, ServerStrategy, None] = None,
         graph_cache_token: Optional[str] = None,
@@ -276,7 +312,13 @@ class Server:
         self.compressor = compressor or NoCompression()
         self.privacy = privacy
         self.accountant = RdpAccountant() if privacy is not None else None
-        self.mesh = mesh if mesh is not None else make_silo_mesh(self.J)
+        if mesh is not None and mesh_spec is not None:
+            raise ValueError(
+                "pass either a pre-built mesh or a MeshSpec, not both")
+        self.mesh = (mesh if mesh is not None
+                     else build_mesh(mesh_spec, num_silos=self.J))
+        self.model_world = model_world(self.mesh)
+        self.n_processes = mesh_process_count(self.mesh)
         # The stacked silo axis is padded up to a multiple of the mesh
         # size with dummy silos (copies of silo 0's data, permanently
         # masked out), so ANY J shards over every device — a prime J on
@@ -308,6 +350,20 @@ class Server:
             raise ValueError(
                 f"unknown wire layout {wire!r} (flat/fused/legacy)")
         self.wire = wire
+        if self.model_world > 1:
+            # Model-sharding slices the (J, P) wire by columns, which
+            # needs the single-matrix layout and a codec whose payload
+            # IS that matrix (identity/int8); per-leaf wires and custom
+            # codecs carry pytrees the runtime cannot column-slice.
+            if wire == "legacy":
+                raise ValueError(
+                    "wire='legacy' cannot shard parameters along the "
+                    "model axis; use wire='flat' or 'fused' (or model=1)")
+            if _wire_codec(self.compressor) == "custom":
+                raise ValueError(
+                    f"compressor {type(self.compressor).__name__} has no "
+                    "wire_codec capability; model-axis sharding supports "
+                    "identity/int8 codecs only (or set model=1)")
 
         if num_obs is None:
             num_obs = [
@@ -345,6 +401,21 @@ class Server:
             "strategy": {},
         }
         self.state["strategy"] = self._strategy.init_silo_state(self)
+        if self.n_processes > 1:
+            # Every process computed identical host values (pure
+            # functions of the spec); turn them into global arrays so
+            # the jitted round accepts them — silo-sharded leaves cost
+            # each host only its own rows.
+            from repro.federated import distributed
+
+            self.data = distributed.globalize(self.data, self.mesh,
+                                              P("silo"))
+            for k in ("eta_L", "opt_local", "strategy"):
+                self.state[k] = distributed.globalize(
+                    self.state[k], self.mesh, P("silo"))
+            for k in ("theta", "eta_G", "opt_server"):
+                self.state[k] = distributed.globalize(
+                    self.state[k], self.mesh, P())
         self.comm = CommMeter()
         # Shared across structurally-identical Servers (resume!) when the
         # builder hands in a token; private otherwise. See graph_cache.
@@ -398,6 +469,11 @@ class Server:
             self.state.get("strategy", {})
         ):
             self.state["strategy"] = strat.init_silo_state(self)
+            if self.n_processes > 1:
+                from repro.federated import distributed
+
+                self.state["strategy"] = distributed.globalize(
+                    self.state["strategy"], self.mesh, P("silo"))
         self.state.setdefault("strategy", {})
 
     # -- silo-axis padding ---------------------------------------------------
@@ -425,6 +501,70 @@ class Server:
         if pad == 0:
             return mask
         return jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
+
+    # -- model-axis wire sharding -------------------------------------------
+    #
+    # On a 2-D (silo, model) mesh each device uploads one model-column
+    # block of its silo rows' wire. The upload pipeline runs on FULL
+    # rows first (DP noise and int8 row scales stay bit-identical to
+    # the 1-D mesh), then every device slices its P/model_world column
+    # block, so the big gather over "silo" moves (J_pad, Pb) blocks —
+    # 1/model_world of the 1-D mesh's per-device gather traffic. A
+    # second, row-local gather over "model" reconstructs the full
+    # (J_pad, P) matrix BEFORE decode/aggregation, so the combine
+    # compiles against the exact shapes and values of the 1-D mesh.
+
+    def _model_block(self, P_dim: int):
+        """(Pb, pad): the column-block width and zero-pad up to mw·Pb."""
+        mw = self.model_world
+        Pb = -(-P_dim // mw)
+        return Pb, Pb * mw - P_dim
+
+    def _shard_model_cols(self, enc: PyTree, P_dim: int) -> PyTree:
+        """Slice every (rows, P) wire leaf to this device's column block.
+
+        Per-silo side leaves (the int8 scale vector) have no P trailing
+        dim and stay replicated over ``model``.
+        """
+        if self.model_world == 1:
+            return enc
+        Pb, pad = self._model_block(P_dim)
+        mi = jax.lax.axis_index("model")
+
+        def leaf(x):
+            if x.ndim < 2 or x.shape[-1] != P_dim:
+                return x
+            xp = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+            return jax.lax.dynamic_slice_in_dim(
+                xp, mi * Pb, Pb, axis=x.ndim - 1)
+
+        return jax.tree_util.tree_map(leaf, enc)
+
+    def _gather_model_cols(self, enc: PyTree, P_dim: int) -> PyTree:
+        """Silo-gathered (J_pad, Pb) blocks -> the full (J_pad, P) wire.
+
+        The inverse of :meth:`_shard_model_cols`, run BEFORE decode and
+        aggregation: the combine then compiles against the exact shapes
+        and values of the 1-D mesh, which is what keeps 2-D trajectories
+        bit-exact. (XLA's axis-0 reductions are not bitwise invariant
+        under column slicing — a columnwise combine + concat drifts at
+        the last bit for some widths — so the blocks must be rejoined
+        first.) The int8 wire gathers its quantized bytes here; per-row
+        side leaves (the f32 scale vector) were never sliced and stay
+        as gathered over ``silo``.
+        """
+        if self.model_world == 1:
+            return enc
+        Pb, pad = self._model_block(P_dim)
+
+        def leaf(x):
+            if x.ndim < 2 or x.shape[-1] != Pb:
+                return x
+            full = jax.lax.all_gather(x, "model", axis=x.ndim - 1,
+                                      tiled=True)
+            return full[..., :P_dim] if pad else full
+
+        return jax.tree_util.tree_map(leaf, enc)
 
     # -- wire accounting -----------------------------------------------------
 
@@ -463,7 +603,10 @@ class Server:
         ``launch.roofline.collective_bytes`` to the optimized HLO. On a
         single-device mesh XLA elides the collectives entirely (all
         entries 0); run under a multi-device mesh (or the forced-host-
-        device trick of ``launch/comm.py``) for real numbers.
+        device trick of ``launch/comm.py``) for real numbers. On a 2-D
+        ``(silo, model)`` mesh the total covers BOTH collectives: the
+        silo gather of model-column blocks (1/model_world of the 1-D
+        gather) plus the small reconstruction gather over ``model``.
         """
         from repro.launch.roofline import collective_bytes
 
@@ -561,7 +704,11 @@ class Server:
                 check_rep=False,
             )
 
-            trace_tag = ("round", strat.cache_key(), local_steps, self.wire)
+            # Mesh shape rides the tag (a topology change is a
+            # legitimate new trace); the wire stays LAST — that suffix
+            # is part of the watchdog-tag contract (tests/test_sanitize).
+            trace_tag = ("round", strat.cache_key(), local_steps,
+                         tuple(sorted(self.mesh.shape.items())), self.wire)
 
             def round_fn(state, data, round_key, mask, weights):
                 # Trace-time only: the recompile watchdog's counter
@@ -693,7 +840,14 @@ class Server:
                         enc, mask_sh,
                         _fused_keys(privacy, round_key, t, sids),
                         ref, privacy, comp, int8)
+                if wire is not None:
+                    # 2-D mesh: slice AFTER the full-row pipeline so DP
+                    # noise / int8 scales match the 1-D mesh bit-exactly,
+                    # then rejoin the gathered blocks before decoding.
+                    enc = self._shard_model_cols(enc, wire.dim)
                 enc = _coalesced_all_gather(enc, "silo")
+                if wire is not None:
+                    enc = self._gather_model_cols(enc, wire.dim)
                 hatL_sum = jax.lax.psum(jnp.sum(hatL), "silo")
 
                 if fused and int8 and trim is not None:
@@ -765,7 +919,14 @@ class Server:
                 enc = _fused_ship(
                     enc, mask_sh, _fused_keys(privacy, round_key, 0, sids),
                     ref, privacy, comp, int8)
+            if wire is not None:
+                # 2-D mesh: slice AFTER the full-row pipeline so DP
+                # noise / int8 scales match the 1-D mesh bit-exactly,
+                # then rejoin the gathered blocks before decoding.
+                enc = self._shard_model_cols(enc, wire.dim)
             enc = _coalesced_all_gather(enc, "silo")
+            if wire is not None:
+                enc = self._gather_model_cols(enc, wire.dim)
             elbo_t = jax.lax.psum(jnp.sum(elbos, axis=0), "silo") / n_active
 
             if fused:
@@ -779,7 +940,7 @@ class Server:
                     if trim is not None else agg.combine(shipped, w_full))
                 combined = wire.unpack(vec)
             elif wire is not None:
-                shipped = jax.vmap(comp.decode)(enc)  # (J, P)
+                shipped = jax.vmap(comp.decode)(enc)  # (J, P) matrix
                 combined = wire.unpack(agg.combine(shipped, w_full))
             else:
                 shipped = jax.vmap(comp.decode)(enc)  # stacked pytree
@@ -885,6 +1046,16 @@ class Server:
                 padded = [self._pad_mask(m) for m in ex_masks]
                 mask = (jnp.stack(padded) if step_cadence else padded[0])
                 round_key = jax.random.fold_in(base_key, r)
+                if self.n_processes > 1:
+                    # Control inputs must be global arrays in a
+                    # multi-process run; every process computed the
+                    # identical host values (scheduler and key stream
+                    # are pure functions of seed and absolute round).
+                    from repro.federated import distributed
+
+                    mask = distributed.replicated(mask, self.mesh)
+                    round_key = distributed.replicated(
+                        round_key, self.mesh)
                 # Stragglers received the broadcast before dropping:
                 # bill their download. Schedulers without the optional
                 # invited() protocol attribute bill reporters.

@@ -42,6 +42,15 @@ key) so it is bit-exact with the host policy's stream; a Mosaic TPU
 lowering would swap it for ``pltpu.prng_random_bits`` (a *different*
 stream) and is deliberately out of scope — ``wire="fused"`` therefore
 requires interpret mode off-TPU and documents the stream contract.
+
+Mesh contract: on a 2-D (silo x model) mesh the runtime calls
+:func:`fused_upload` on each silo's FULL P-row (clip norms, noise keys
+and the one-scale-per-row int8 quantization are row-global and must
+never see a column slice), slices the result into model-axis column
+blocks only for the silo gather, and rejoins the full ``(J, P)`` matrix
+before :func:`fused_combine` — so both kernels always operate on
+complete rows regardless of topology (``docs/federated.md`` §Sharding
+layout explains why the rejoin also keeps the reduction bit-exact).
 """
 from __future__ import annotations
 

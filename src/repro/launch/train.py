@@ -14,6 +14,7 @@ invariance), only the mesh differs.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -23,10 +24,11 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import make_token_stream
 from repro.checkpoint.io import CheckpointManager
-from repro.federated import (CommMeter, ExperimentSpec, ModelSpec,
-                             NoCompression, OptimizerSpec, Scenario,
-                             run_rounds)
+from repro.federated import (CommMeter, ExperimentSpec, MeshSpec, ModelSpec,
+                             NoCompression, OptimizerSpec, RuntimeSpec,
+                             Scenario, run_rounds)
 from repro.launch import steps as S
+from repro.launch.mesh import build_mesh, use_mesh
 from repro.models.backbone import transformer as T
 
 
@@ -61,6 +63,12 @@ def main(argv=None):
                          "cadence.")
     ap.add_argument("--dp-clip", type=float, default=1.0)
     ap.add_argument("--dp-delta", type=float, default=1e-5)
+    ap.add_argument("--mesh", default="", metavar="SPEC",
+                    help="federated mesh topology ('silo=N[,model=N]'), "
+                         "recorded on the run's provenance spec "
+                         "(spec.runtime.mesh) and activated for the jitted "
+                         "step via launch.mesh.build_mesh; empty = the "
+                         "default single-process device set")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--dump-spec", action="store_true",
@@ -88,10 +96,18 @@ def main(argv=None):
         local_steps=1 if args.algo == "sfvi" else args.avg_every,
         server_opt=OptimizerSpec("adam", args.lr),
         seed=0,
+        runtime=RuntimeSpec(mesh=MeshSpec.parse(args.mesh)),
     )
     if args.dump_spec:
         print(spec.to_json())
         return None
+
+    # The declared topology is also the executed one: the jitted step
+    # lowers against the spec's mesh (one factory, launch.mesh.build_mesh,
+    # for the CLI, api.build and the benchmarks alike).
+    mesh_ctx = (use_mesh(build_mesh(spec.runtime.mesh,
+                                    num_silos=args.silos))
+                if args.mesh else contextlib.nullcontext())
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -180,13 +196,14 @@ def main(argv=None):
     exchanges = (1 if args.algo == "sfvi"
                  else (lambda i: 1 if (i + 1) % args.avg_every == 0 else 0))
 
-    state, hist = run_rounds(
-        lambda st, batch, i: step_fn(st, batch, jnp.int32(i)),
-        state, batches(), meter=meter,
-        bytes_per_round=(per_round, per_round),
-        privacy=privacy, exchanges_per_round=exchanges,
-        on_metrics=on_metrics,
-    )
+    with mesh_ctx:
+        state, hist = run_rounds(
+            lambda st, batch, i: step_fn(st, batch, jnp.int32(i)),
+            state, batches(), meter=meter,
+            bytes_per_round=(per_round, per_round),
+            privacy=privacy, exchanges_per_round=exchanges,
+            on_metrics=on_metrics,
+        )
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
           f"comm {meter.total/2**20:.1f} MiB "
           f"({meter.per_round/2**20:.2f} MiB/step, algo={args.algo})")

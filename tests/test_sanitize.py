@@ -20,6 +20,7 @@ from repro.federated.api import (
     ExperimentSpec,
     ModelSpec,
     OptimizerSpec,
+    RuntimeSpec,
     build,
 )
 from repro.federated.scheduler import AsyncConfig, Scenario
@@ -51,7 +52,7 @@ def _fresh_graph_cache():
 @pytest.mark.parametrize("wire", ["flat", "fused"])
 def test_one_trace_per_config(algorithm, wire):
     """R > 1 rounds compile the round graph exactly once per config."""
-    exp = build(_spec(algorithm), wire=wire)
+    exp = build(_spec(algorithm, runtime=RuntimeSpec(wire=wire)))
     with debug.watch_recompiles() as wd:
         h = exp.run(3)
     assert wd.total == 1, dict(wd.counts)
@@ -69,7 +70,7 @@ def test_resume_does_not_retrace(wire, tmp_path):
     graph cache that would be a second trace of an identical graph.
     """
     with debug.watch_recompiles() as wd:
-        exp = build(_spec(rounds=4), wire=wire)
+        exp = build(_spec(rounds=4, runtime=RuntimeSpec(wire=wire)))
         exp.run(2)
         ckpt = str(tmp_path / "ckpt")
         exp.save(ckpt)
