@@ -406,6 +406,16 @@ def smoke(json_path: str | None = None, seed: int | None = None) -> dict:
             "calibrated_round": statistics.median(ratios),
         }
 
+    # Posterior-serving row (bench_serving.federated_posterior_row):
+    # trains + checkpoints a small CHURN run, restores the q(Z_L|Z_G)
+    # endpoint and times batched query serving. Lands in ``scenarios``
+    # so check_perf.py gates its ELBO (training determinism), refresh
+    # bytes and calibrated batch latency like every other row; the
+    # ungated queries_per_s / samples_per_s extras ride along for
+    # visibility.
+    from benchmarks.bench_serving import federated_posterior_row
+    scenarios["serving(posterior)"] = federated_posterior_row(_yardstick)
+
     # 1-D vs 2-D mesh scaling (subprocess, 4 forced host devices): both
     # rows land in ``scenarios`` so check_perf.py gates their bytes,
     # ELBO and calibrated time like every other row.

@@ -12,7 +12,7 @@ Run:  PYTHONPATH=src python examples/llm_federated.py --arch qwen3-4b \
 """
 import argparse
 
-from repro.launch import serve as serve_mod
+from repro.launch import serve_backbone as serve_mod
 from repro.launch import train as train_mod
 
 

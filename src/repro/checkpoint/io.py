@@ -96,6 +96,15 @@ class CheckpointManager:
     def restore(self, step: int, like: PyTree, shard: Optional[str] = None) -> PyTree:
         return load_pytree(self._path(step, shard), like)
 
+    def has(self, step: int, shard: Optional[str] = None) -> bool:
+        """Whether ``step`` (optionally a specific shard) is on disk.
+
+        A resume may rebuild with MORE silos than the run that saved
+        (a grown roster): the missing shards keep their fresh init and
+        only the saved ones restore, so callers probe before reading.
+        """
+        return os.path.exists(self._path(step, shard))
+
     def latest_step(self, shard: Optional[str] = None) -> Optional[int]:
         steps = self._steps(shard)
         return steps[-1] if steps else None

@@ -32,6 +32,31 @@ def encoder_init(key, in_dim: int, hidden: int, latent_dim: int) -> Dict[str, An
     }
 
 
+def encoder_warm_init(in_dim: int, latent_dim: int, *, pre_scale: float = 0.1,
+                      gain: float = 1.0, log_sigma: float = -1.0
+                      ) -> Dict[str, Any]:
+    """Deterministic near-linear encoder for cold-silo warm starts.
+
+    A closed-form φ (no PRNG draw, so a resumed run re-derives it
+    bit-exactly): the hidden layer is a scaled identity kept inside
+    tanh's linear regime, and the mean head averages it back out, so
+    ``encode(φ, y)[0][k] ≈ gain · mean_i(y[k, i])`` per observation —
+    the data-mean statistic a joining silo's ``η_L`` should start from
+    (population engine, :mod:`repro.federated.population`). The
+    log-σ head is constant at ``log_sigma``.
+    """
+    w1 = pre_scale * jnp.eye(in_dim)
+    w_mu = jnp.full((in_dim, latent_dim), gain / (pre_scale * in_dim))
+    return {
+        "w1": w1,
+        "b1": jnp.zeros((in_dim,)),
+        "w_mu": w_mu,
+        "b_mu": jnp.zeros((latent_dim,)),
+        "w_ls": jnp.zeros((in_dim, latent_dim)),
+        "b_ls": jnp.full((latent_dim,), log_sigma),
+    }
+
+
 def encode(phi: Dict[str, Any], y: jnp.ndarray):
     """y: (N, in_dim) -> (mu, log_sigma), each (N, latent_dim)."""
     h = jnp.tanh(y @ phi["w1"] + phi["b1"])

@@ -27,6 +27,18 @@ staleness-weighted, under a deterministic per-(seed, silo, task)
 latency model — through the SAME compiled round graph, so DP,
 compression and the coalesced gather apply unchanged.
 
+Population dynamics (docs/federated.md §Population): an
+:class:`~repro.federated.population.PopulationSpec` on the spec layers
+deterministic silo churn over either event loop — cold silos join
+mid-run (amortized warm-start of their ``η_L`` through
+:mod:`repro.core.amortized`; the padded silo axis grows in mesh-sized
+chunks via ``Server.grow_silos``), depart with their state frozen in
+place, and return stale under the FedBuff staleness weighting — with
+bit-exact checkpoint/resume mid-event. A trained checkpoint serves
+``q(Z_L | Z_G)`` queries through
+:class:`~repro.federated.serve.Posterior`
+(``python -m repro.federated.serve --ckpt-dir ...``).
+
 Declarative layer (docs/api.md): an
 :class:`~repro.federated.api.ExperimentSpec` serializes a whole run
 (model ref + kwargs, scenario, optimizers, eval cadence, seed) to JSON;
@@ -71,6 +83,12 @@ from repro.federated.scheduler import (
     scenario_matrix,
 )
 from repro.core.family import FamilySpec
+from repro.federated.population import (
+    PopulationEngine,
+    PopulationSpec,
+    PopulationState,
+)
+from repro.federated.serve import Posterior, Query
 from repro.federated.api import (
     Experiment,
     ExperimentSpec,
@@ -102,6 +120,11 @@ __all__ = [
     "Int8Compressor",
     "MeanAggregator",
     "NoCompression",
+    "PopulationEngine",
+    "PopulationSpec",
+    "PopulationState",
+    "Posterior",
+    "Query",
     "PrivacyPolicy",
     "RdpAccountant",
     "RoundScheduler",

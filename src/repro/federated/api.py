@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.family import FamilySpec
+from repro.federated.population import PopulationEngine, PopulationSpec, PopulationState
 from repro.federated.scheduler import RoundScheduler, Scenario
 from repro.federated.strategy import StrategySpec
 from repro.launch.mesh import MeshSpec, build_mesh
@@ -224,6 +225,14 @@ class ExperimentSpec:
         default, as one :class:`RuntimeSpec`. A resume may change the
         topology (device or process count): silo re-padding and
         resharding keep the REAL silos' trajectory bit-exact.
+      population: optional dynamic-population churn
+        (:class:`~repro.federated.population.PopulationSpec`). When
+        set, ``num_silos`` is the ROSTER maximum (the registry stages
+        every shard up front); only ``population.initial`` silos are
+        live at round 0 and the rest join, depart and return through
+        the deterministic event process of
+        :mod:`repro.federated.population`. ``None`` (the default) is
+        the paper's fixed-J federation, byte-for-byte unchanged.
     """
 
     model: ModelSpec
@@ -239,6 +248,7 @@ class ExperimentSpec:
     seed: int = 0
     data_seed: Optional[int] = None
     runtime: RuntimeSpec = RuntimeSpec()
+    population: Optional[PopulationSpec] = None
 
     @property
     def algorithm(self) -> str:
@@ -275,6 +285,8 @@ class ExperimentSpec:
             seed=d.get("seed", 0),
             data_seed=d.get("data_seed"),
             runtime=RuntimeSpec.from_dict(d.get("runtime") or {}),
+            population=(PopulationSpec.from_dict(d["population"])
+                        if d.get("population") is not None else None),
         )
 
     def to_json(self, indent: int = 2) -> str:
@@ -324,9 +336,25 @@ def build(spec: ExperimentSpec, bundle=None, *,
     return _build(spec, bundle, wire)
 
 
+def _bundle_num_obs(bundle) -> List[int]:
+    """Per-silo N_j for the FULL staged roster (inferring when absent)."""
+    if bundle.num_obs is not None:
+        return [int(n) for n in bundle.num_obs]
+    return [int(jax.tree_util.tree_leaves(d)[0].shape[0])
+            for d in bundle.datas]
+
+
 def _build(spec: ExperimentSpec, bundle=None,
-           wire: Optional[str] = None) -> Experiment:
-    """The warning-free core of :func:`build` (resume calls this)."""
+           wire: Optional[str] = None,
+           joined: Optional[int] = None) -> Experiment:
+    """The warning-free core of :func:`build` (resume calls this).
+
+    ``joined`` is the resume path's population head-count: a churn
+    run's Server is built with exactly the silos that had joined at
+    the checkpoint (their shards restore on top), and the engine's
+    state is restored right after. A fresh population build starts at
+    ``spec.population.initial``.
+    """
     from repro.federated import graph_cache
     from repro.federated.runtime import Server
     from repro.models.paper.registry import apply_family_spec, get_model
@@ -343,6 +371,16 @@ def _build(spec: ExperimentSpec, bundle=None,
             f"StrategySpec only adds hyperparameters)")
     strategy = strat_spec.build()
     mesh = build_mesh(spec.runtime.mesh, num_silos=spec.num_silos)
+    pop = spec.population
+    # The live federation at build time: the full roster, or — under a
+    # population — the silos joined so far (churn grows the rest).
+    if pop is None:
+        j_live = spec.num_silos
+    else:
+        j_live = int(joined) if joined is not None else min(
+            pop.initial, spec.num_silos)
+    n_dev = int(mesh.shape["silo"])
+    j_pad = ((j_live + n_dev - 1) // n_dev) * n_dev
     token = None
     if bundle is None:
         entry = get_model(spec.model.name)
@@ -351,10 +389,12 @@ def _build(spec: ExperimentSpec, bundle=None,
         # Registry-staged builds are pure functions of the spec, so
         # structurally-equal Servers may share compiled round graphs —
         # resume then re-traces nothing. A caller-supplied bundle is
-        # opaque to the token and opts out.
+        # opaque to the token and opts out. J_pad rides the token: the
+        # compiled shapes are functions of the PADDED silo axis, which
+        # a population grows in mesh-sized chunks.
         token = graph_cache.build_token(
             spec.to_json(indent=0), wire, spec.num_silos,
-            mesh_shape=tuple(sorted(mesh.shape.items())))
+            mesh_shape=tuple(sorted(mesh.shape.items())), j_pad=j_pad)
     if len(bundle.datas) != spec.num_silos:
         raise ValueError(
             f"bundle stages {len(bundle.datas)} silos, spec.num_silos is "
@@ -365,13 +405,14 @@ def _build(spec: ExperimentSpec, bundle=None,
     problem = bundle.problem
     has_local = problem.model.has_local
     local_spec = spec.local_opt if spec.local_opt is not None else spec.server_opt
+    num_obs_full = _bundle_num_obs(bundle)
     server = Server(
         problem,
-        bundle.datas,
+        bundle.datas[:j_live],
         bundle.theta0,
         # repro-lint: allow[R1] — η_G init root: a pure function of spec.seed, re-derived bit-exactly by resume
         problem.global_family.init(jax.random.PRNGKey(spec.seed)),
-        num_obs=bundle.num_obs,
+        num_obs=num_obs_full[:j_live],
         server_opt=spec.server_opt.build(),
         local_opt=local_spec.build() if has_local else None,
         aggregator=spec.scenario.make_aggregator(),
@@ -383,9 +424,23 @@ def _build(spec: ExperimentSpec, bundle=None,
         seed=spec.seed,
         strategy=strategy,
         graph_cache_token=token,
+        # The estimators scale by the ROSTER width and total N: absent
+        # silos are non-participants of the full federation, so the
+        # optimization target is fixed while the population churns.
+        federation_size=spec.num_silos,
+        federation_obs=float(sum(num_obs_full)),
     )
+    population = None
+    if pop is not None:
+        if server.n_processes > 1:
+            raise ValueError(
+                "population churn is single-process for now (dynamic "
+                "growth re-shards silo rows, which multi-process "
+                "federations pin to their owning host)")
+        population = PopulationEngine(pop, bundle, spec.num_silos)
     scheduler = spec.scenario.scheduler(spec.num_silos, seed=spec.seed)
-    return Experiment(spec, bundle, server, scheduler)
+    return Experiment(spec, bundle, server, scheduler,
+                      population=population)
 
 
 # ---------------------------------------------------------------------------
@@ -401,11 +456,15 @@ class Experiment:
     absolute number of rounds completed so far.
     """
 
-    def __init__(self, spec: ExperimentSpec, bundle, server, scheduler: RoundScheduler):
+    def __init__(self, spec: ExperimentSpec, bundle, server, scheduler: RoundScheduler,
+                 population: Optional[PopulationEngine] = None):
         self.spec = spec
         self.bundle = bundle
         self.server = server
         self.scheduler = scheduler
+        # Churn driver (spec.population): joins/departures/returns fire
+        # between rounds; None for a fixed federation.
+        self.population = population
         self.round = 0
         self.history: Dict[str, list] = {}
         # Buffered-async event-loop state (None until the first async
@@ -508,14 +567,24 @@ class Experiment:
             guard = contextlib.nullcontext()
         with guard:
             if spec.scenario.async_cfg is not None:
-                from repro.federated.async_engine import run_buffered
+                from repro.federated.async_engine import (BufferState,
+                                                          run_buffered)
 
+                # Materialize the event-loop state BEFORE the loop: the
+                # engine mutates it in place, so a callback that saves
+                # mid-run checkpoints the live clock/tasks/buffer (and a
+                # resume replays the remaining flushes bit-exactly).
+                if self.async_state is None:
+                    self.async_state = BufferState.init(
+                        self.server.J, spec.scenario.async_cfg,
+                        self.server.seed)
                 chunk, self.async_state = run_buffered(
                     self.server, n, spec.scenario.async_cfg,
                     local_steps=spec.local_steps,
                     start_flush=start,
                     state=self.async_state,
                     callback=cb,
+                    population=self.population,
                 )
             else:
                 # algorithm=None: the Server already carries the built
@@ -528,6 +597,7 @@ class Experiment:
                     scheduler=self.scheduler,
                     callback=cb,
                     start_round=start,
+                    population=self.population,
                 )
         for k, v in chunk.items():
             self.history.setdefault(k, []).extend(v)
@@ -564,6 +634,11 @@ class Experiment:
             # and the partially-filled buffer (JSON doubles are exact, so
             # the arrival schedule resumes bit-exactly).
             meta["async_state"] = self.async_state.state_dict()
+        if self.population is not None:
+            # Roster head-count + per-silo status/last-present: resume
+            # rebuilds the Server at the saved width and replays the
+            # event stream from the saved index, mid-event included.
+            meta["population"] = self.population.state.state_dict()
         return meta
 
     @staticmethod
@@ -710,9 +785,14 @@ class Experiment:
         # so resuming a wire='legacy' run as 'flat' would diverge).
         with open(cls._meta_path(directory, step)) as f:
             meta = json.load(f)
+        pop_meta = meta.get("population")
         exp = _build(spec, bundle,
                      wire if wire is not None
-                     else meta.get("wire", spec.runtime.wire))
+                     else meta.get("wire", spec.runtime.wire),
+                     joined=(int(pop_meta["joined"])
+                             if pop_meta is not None else None))
+        if exp.population is not None and pop_meta is not None:
+            exp.population.state = PopulationState.from_state(pop_meta)
 
         from repro.federated import distributed
 
@@ -743,14 +823,17 @@ class Experiment:
                     silo_like[k], exp.server.mesh,
                     {j: t[k] for j, t in loaded.items()})
         elif silo_like:
-            slices = [
-                mgr.restore(
-                    step,
-                    jax.tree_util.tree_map(lambda x, jj=j: x[jj], silo_like),
-                    shard=f"silo_{j:04d}",
-                )
-                for j in range(exp.server.J)
-            ]
+            # Shard-tolerant: a resume may rebuild with MORE silos than
+            # the run that saved (e.g. a fixed-J spec override growing
+            # the roster) — silos with no shard on disk keep their fresh
+            # init row; every saved silo restores bit-exactly.
+            slices = []
+            for j in range(exp.server.J):
+                row = jax.tree_util.tree_map(
+                    lambda x, jj=j: x[jj], silo_like)
+                if mgr.has(step, shard=f"silo_{j:04d}"):
+                    row = mgr.restore(step, row, shard=f"silo_{j:04d}")
+                slices.append(row)
             stacked = jax.tree_util.tree_map(
                 lambda *xs: jax.numpy.stack(xs), *slices)
             # Checkpoints hold the J REAL silos; re-pad the stacked axis

@@ -168,7 +168,8 @@ class BufferState:
 
 
 def simulate_flush(
-    state: BufferState, cfg: AsyncConfig, seed: int, num_silos: int
+    state: BufferState, cfg: AsyncConfig, seed: int, num_silos: int,
+    active: Optional[List[int]] = None,
 ) -> Tuple[np.ndarray, np.ndarray, float]:
     """Advance the event loop to the next flush; mutates ``state``.
 
@@ -191,11 +192,22 @@ def simulate_flush(
     makes the ``buffer_size == J`` constant-latency schedule exactly
     synchronous: every silo re-pulls the just-flushed version, so the
     next flush is staleness 0 again.
+
+    ``active`` (population churn) restricts the arrival pop to the
+    currently-present silos: a departed silo's in-flight task is
+    frozen — never popped, never restarted — until it returns. The
+    flush target is clamped to the active head-count so a shrunken
+    population can still fill a buffer.
     """
     J = num_silos
+    pool = (list(range(J)) if active is None
+            else [i for i in range(J) if active[i]])
+    if not pool:
+        raise ValueError("simulate_flush needs at least one active silo")
+    target = min(cfg.buffer_size, len(pool))
     restarted = set()
-    while len(state.buffer) < cfg.buffer_size:
-        j = min(range(J), key=lambda i: (state.finish_time[i], i))
+    while len(state.buffer) < target:
+        j = min(pool, key=lambda i: (state.finish_time[i], i))
         state.clock = state.finish_time[j]
         state.buffer.append((j, state.version - state.start_version[j]))
         state.task_idx[j] += 1
@@ -253,6 +265,7 @@ def run_buffered(
     start_flush: int = 0,
     state: Optional[BufferState] = None,
     callback: Optional[Callable[[int, dict], None]] = None,
+    population=None,
 ) -> Tuple[Dict[str, list], BufferState]:
     """Drive a :class:`~repro.federated.runtime.Server` asynchronously.
 
@@ -280,6 +293,16 @@ def run_buffered(
     the accountant composes them at the Poisson surrogate rate
     ``q = buffer_size / J`` (same surrogate the synchronous path uses
     for its fixed-size invitations — docs/privacy.md).
+
+    ``population`` threads a
+    :class:`~repro.federated.population.PopulationEngine` through the
+    event loop: before each flush, ``begin_flush`` processes the churn
+    events (a join grows the silo axis and starts the new silo's first
+    task at the current simulated clock; a return restarts the silo's
+    interrupted task but keeps its stale pull version, so its
+    contribution enters :func:`flush_weights` with the server-version
+    staleness the gap implies) and hands back the activity mask the
+    flush simulation pops arrivals under.
 
     Returns ``(history, state)`` — pass ``state`` back in to continue.
     """
@@ -313,7 +336,17 @@ def run_buffered(
     with debug.host_bridge():
         base_key = jax.random.PRNGKey(server.seed)
     for f in range(start_flush, start_flush + num_flushes):
-        counts, staleness, t_flush = simulate_flush(state, cfg, server.seed, J)
+        active = None
+        if population is not None:
+            with debug.host_bridge():
+                # Churn first: joins grow the silo axis (stepping J_pad
+                # re-fetches the compiled round) and extend the event
+                # loop's per-silo task lists at the current clock.
+                active = population.begin_flush(server, state, cfg, f)
+                J = server.J
+                fn = server._get_round(strat, local_steps)
+        counts, staleness, t_flush = simulate_flush(
+            state, cfg, server.seed, J, active=active)
         mask = (counts > 0.0).astype(np.float32)
         weights = flush_weights(counts, staleness, cfg.staleness_decay)
         with debug.host_bridge():
@@ -324,6 +357,7 @@ def run_buffered(
         server.state, metrics = fn(
             server.state,
             server.data,
+            jax.device_put(np.asarray(server.num_obs, np.float32)),
             round_key,
             server._pad_mask(jax.device_put(mask)),
             server._pad_mask(jax.device_put(weights)),

@@ -42,22 +42,30 @@ _CACHE: OrderedDict[str, Dict[tuple, Callable]] = OrderedDict()
 
 
 def build_token(spec_json: str, wire: str, num_silos: int,
-                mesh_shape=None) -> str:
+                mesh_shape=None, j_pad: Optional[int] = None) -> str:
     """Structural identity of a registry-staged build.
 
     Covers everything the round graph closes over: the full spec (model,
     strategy, optimizers, privacy, compression — via its canonical
     JSON), the wire layout, J, the RESOLVED mesh shape, the process
-    count, and the device signature. The mesh shape and process count
-    must be hashed explicitly: the device signature alone let two
-    builds with different forced-device counts (or different
-    ``MeshSpec`` topologies over the same devices) collide on one
-    compiled graph whose shard_map was traced for the other mesh.
+    count, the device signature, and the padded silo-axis width
+    ``j_pad``. The mesh shape and process count must be hashed
+    explicitly: the device signature alone let two builds with
+    different forced-device counts (or different ``MeshSpec``
+    topologies over the same devices) collide on one compiled graph
+    whose shard_map was traced for the other mesh. ``j_pad`` is the
+    population-growth boundary: every silo-sharded shape in the round
+    graph is a function of it, so two builds whose live J differs but
+    lands in the same padded chunk share a token (and the compiled
+    graph — joined silos ride the runtime ``n_j``/mask arguments),
+    while crossing a chunk boundary changes the token exactly when the
+    shapes change.
     """
     devices = tuple((d.platform, d.id) for d in jax.devices())
     shape = [list(t) for t in (mesh_shape or ())]
     payload = json.dumps(
-        [spec_json, wire, num_silos, devices, shape, jax.process_count()],
+        [spec_json, wire, num_silos, devices, shape, jax.process_count(),
+         j_pad],
         sort_keys=True)
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 

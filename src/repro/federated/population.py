@@ -1,0 +1,374 @@
+"""Dynamic silo populations: arrivals, departures, stale returns.
+
+The paper's federation is a fixed set of J silos; a production
+federation is not — silos join mid-run, go offline, and come back
+stale. This module layers a deterministic population process over the
+compiled round engine (:class:`~repro.federated.runtime.Server`) and
+the buffered-async event loop (:mod:`~repro.federated.async_engine`):
+
+  * **join** — a cold silo enters the federation. Its data shard is
+    appended to the stacked silo axis (``Server.grow_silos``; the
+    padded ``(J_pad, P)`` wire grows in mesh-sized chunks, so the
+    compiled round graph only retraces when ``J_pad`` actually steps)
+    and its ``η_L`` is *warm-started* through the amortized encoder of
+    :mod:`repro.core.amortized`: the silo encodes its own observations
+    into an initial mean/scale instead of burning rounds of cold
+    optimization. PVI's continual-learning view (Bui et al.,
+    1811.11206) is the correctness anchor: the joining silo's site
+    state initializes at zero (its cavity is the current global
+    posterior), so the site-sum invariant is preserved.
+  * **depart** — the silo's participation mask goes to zero. Its
+    ``η_L``, optimizer moments and per-silo strategy state (PVI/FedEP
+    site λ_j) stay in place, frozen by the mask — a departure deletes
+    nothing, exactly as PVI's frozen-site semantics require.
+  * **return** — the silo re-enters with a staleness counter (rounds
+    absent on the sync path; server versions elapsed since its pull on
+    the async path) that feeds the existing FedBuff weighting
+    ``(1 + staleness)^-decay``.
+
+Every event is a pure function of ``(population seed, event index,
+silo)`` — no RNG state to checkpoint — and the tiny mutable remainder
+(:class:`PopulationState`) round-trips losslessly through JSON, so a
+churn run checkpoints and resumes **bit-exactly**, mid-event included
+(``tests/test_population.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import amortized
+
+PyTree = Any
+
+# Salt for the population event stream: distinct from the async
+# latency stream (0x5AF0) and the jax PRNG folds of the user seed, so
+# arrival draws can never collide with latency or noise draws.
+_POP_SALT = 0x9D07
+
+# Sub-stream codes per event kind (part of the SeedSequence entropy).
+_ARRIVAL, _DEPART, _RETURN = 0, 1, 2
+
+# Silo lifecycle codes (PopulationState.status).
+ACTIVE, DEPARTED = 1, 2
+
+
+def event_draw(pop_seed: int, kind: int, index: int, silo: int) -> float:
+    """U(0,1) draw for one (event kind, round/flush index, silo) cell.
+
+    A pure function — NumPy's ``SeedSequence`` hashing makes it
+    reproducible across runs, platforms and resume boundaries, the
+    same contract :func:`~repro.federated.async_engine.latency_draw`
+    gives the arrival schedule.
+    """
+    # repro-lint: allow[R1] — the churn stream's root: a pure function of (pop seed, kind, index, silo), replayed exactly from the spec
+    rng = np.random.default_rng([_POP_SALT, pop_seed, kind, index, silo])
+    return float(rng.random())
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """Declarative population dynamics — a node on ``ExperimentSpec``.
+
+    Attributes:
+      initial: silos present at round 0 (the rest of the roster is
+        cold and joins through the arrival process).
+      arrival_rate: per-round probability that the next cold silo
+        joins (at most one arrival per round; silos join in roster
+        order, so the stacked silo axis only ever appends).
+      departure_rate: per-round, per-active-silo probability of going
+        offline (the engine never lets the last active silo depart).
+      return_rate: per-round, per-departed-silo probability of coming
+        back.
+      max_silos: roster cap; ``None`` means ``spec.num_silos`` (the
+        registry stages the full roster's data up front, so joins
+        never re-stage anything).
+      warm_start: warm-start a joining silo's ``η_L`` through the
+        amortized encoder (:func:`amortized_warm_start`); ``False``
+        joins it with the cold family init (the ablation the
+        warm-start test measures against).
+      staleness_decay: sync-path weight decay for a returning silo:
+        its first round back aggregates with weight
+        ``(1 + rounds_absent)^-staleness_decay``. The async path
+        ignores this and reuses the flush weighting of
+        :func:`~repro.federated.async_engine.flush_weights` (staleness
+        there is the server-version gap of the silo's stale pull).
+      seed: population event stream seed (separate from the run seed
+        so one churn schedule can be crossed with many run seeds).
+    """
+
+    initial: int = 2
+    arrival_rate: float = 0.0
+    departure_rate: float = 0.0
+    return_rate: float = 0.0
+    max_silos: Optional[int] = None
+    warm_start: bool = True
+    staleness_decay: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.initial < 1:
+            raise ValueError(f"initial must be >= 1, got {self.initial}")
+        for name in ("arrival_rate", "departure_rate", "return_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.max_silos is not None and self.max_silos < self.initial:
+            raise ValueError(
+                f"max_silos ({self.max_silos}) < initial ({self.initial})")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PopulationSpec":
+        return cls(
+            initial=d.get("initial", 2),
+            arrival_rate=d.get("arrival_rate", 0.0),
+            departure_rate=d.get("departure_rate", 0.0),
+            return_rate=d.get("return_rate", 0.0),
+            max_silos=d.get("max_silos"),
+            warm_start=d.get("warm_start", True),
+            staleness_decay=d.get("staleness_decay", 0.5),
+            seed=d.get("seed", 0),
+        )
+
+
+@dataclasses.dataclass
+class PopulationState:
+    """The mutable remainder of the population process.
+
+    Everything else is a pure function of the spec, so this — like the
+    async engine's :class:`~repro.federated.async_engine.BufferState`
+    — is all a checkpoint needs to resume the churn schedule
+    bit-exactly mid-event.
+
+    Attributes:
+      round: next round/flush index whose events are unprocessed.
+      joined: silos that have ever joined (== the Server's current J;
+        silos join in roster order, so this is also the next arrival).
+      status: per-joined-silo lifecycle code (ACTIVE / DEPARTED).
+      last_present: per-joined-silo index of the last round it was
+        active — the sync path's staleness counter on return.
+    """
+
+    round: int
+    joined: int
+    status: List[int]
+    last_present: List[int]
+
+    @classmethod
+    def init(cls, initial: int) -> "PopulationState":
+        return cls(round=0, joined=initial, status=[ACTIVE] * initial,
+                   last_present=[-1] * initial)
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-native snapshot (checkpointed by ``federated.api``)."""
+        return {"round": self.round, "joined": self.joined,
+                "status": list(self.status),
+                "last_present": list(self.last_present)}
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any]) -> "PopulationState":
+        return cls(round=int(state["round"]), joined=int(state["joined"]),
+                   status=[int(x) for x in state["status"]],
+                   last_present=[int(x) for x in state["last_present"]])
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.status if s == ACTIVE)
+
+
+def amortized_warm_start(problem, data_j: PyTree, key) -> PyTree:
+    """Encode a joining silo's data into its initial ``η_L``.
+
+    The cold path draws ``local_family.init(key)`` and spends rounds
+    pulling the mean toward the data; the warm path keeps that init as
+    the template (so warm vs cold differ ONLY in the leaves the
+    encoder informs) and overwrites the mean/scale leaves with the
+    amortized statistics of :mod:`repro.core.amortized`: a
+    deterministic near-linear encoder (:func:`~repro.core.amortized.
+    encoder_warm_init`) maps each observation to a per-observation
+    (μ, log σ) and the silo-level init is their average, with the
+    posterior-contraction scale ``σ₀ = n^-1/2``. Families without a
+    recognized mean leaf (``mu`` / ``mu_bar``) fall back to the cold
+    init unchanged.
+    """
+    template = problem.local_family.init(key)
+    if not isinstance(template, dict):
+        return template
+    mu_leaf = "mu" if "mu" in template else (
+        "mu_bar" if "mu_bar" in template else None)
+    if mu_leaf is None:
+        return template
+    leaves = jax.tree_util.tree_leaves(data_j)
+    if not leaves:
+        return template
+    y = data_j["y"] if isinstance(data_j, dict) and "y" in data_j else leaves[0]
+    n = int(y.shape[0]) if y.ndim else 1
+    y2 = jnp.asarray(y, jnp.float32).reshape(n, -1)
+    latent_dim = int(np.prod(template[mu_leaf].shape)) or 1
+    phi = amortized.encoder_warm_init(
+        int(y2.shape[1]), latent_dim,
+        log_sigma=float(-0.5 * math.log(max(n, 1))))
+    mu_k, ls_k = amortized.encode(phi, y2)
+    out = dict(template)
+    out[mu_leaf] = jnp.mean(mu_k, axis=0).reshape(template[mu_leaf].shape)
+    if "log_sigma" in template:
+        out["log_sigma"] = jnp.mean(ls_k, axis=0).reshape(
+            template["log_sigma"].shape)
+    return out
+
+
+class PopulationEngine:
+    """Drives churn events against a live Server, one round at a time.
+
+    Owns a :class:`PopulationSpec` + :class:`PopulationState` and the
+    staged roster data (the registry bundle stages all ``max_silos``
+    shards up front). ``Experiment`` threads the engine into the run
+    loop: the sync path calls :meth:`begin_round` before each round,
+    the async path calls :meth:`begin_flush` before each flush — both
+    process the index's events exactly once, in a fixed order
+    (returns → arrival → departures), and both are replay-exact after
+    a resume because the draws are pure and the state is checkpointed.
+    """
+
+    def __init__(self, pop: PopulationSpec, bundle, num_silos: int,
+                 state: Optional[PopulationState] = None):
+        self.pop = pop
+        self.bundle = bundle
+        self.max_silos = (pop.max_silos if pop.max_silos is not None
+                          else num_silos)
+        if self.max_silos > num_silos:
+            raise ValueError(
+                f"population.max_silos ({self.max_silos}) exceeds the "
+                f"staged roster (num_silos={num_silos})")
+        if pop.initial > self.max_silos:
+            raise ValueError(
+                f"population.initial ({pop.initial}) exceeds max_silos "
+                f"({self.max_silos})")
+        self.state = state if state is not None else PopulationState.init(
+            pop.initial)
+
+    # -- event processing ----------------------------------------------------
+
+    def _bundle_row(self, j: int):
+        data_j = self.bundle.datas[j]
+        if self.bundle.num_obs is not None:
+            n_j = int(self.bundle.num_obs[j])
+        else:
+            n_j = int(jax.tree_util.tree_leaves(data_j)[0].shape[0])
+        return data_j, n_j
+
+    def _join(self, server, j: int) -> None:
+        """Append roster silo ``j`` to the live federation."""
+        data_j, n_j = self._bundle_row(j)
+        eta_row = None
+        if self.pop.warm_start and server._has_local:
+            # Same per-silo key the cold growth path uses, so warm vs
+            # cold differ only in the encoder-informed leaves.
+            # repro-lint: allow[R1] — deterministic per-silo warm-start root, re-derived bit-exactly on resume
+            root = jax.random.PRNGKey(server.seed + 1)
+            key = jax.random.fold_in(root, j)
+            eta_row = amortized_warm_start(server.problem, data_j, key)
+        server.grow_silos([data_j], num_obs=[n_j],
+                          eta_rows=None if eta_row is None else [eta_row])
+
+    def _advance(self, server, index: int) -> Tuple[List[int], List[int]]:
+        """Process event index ``index``; returns (joins, returns).
+
+        Events run in a fixed order — returns, then at most one
+        arrival, then departures — and each is one pure draw, so the
+        schedule is identical however the run is chunked or resumed.
+        """
+        st = self.state
+        if st.round != index:
+            raise RuntimeError(
+                f"population state is at event index {st.round}, but the "
+                f"run loop asked for index {index}; population runs must "
+                f"advance one round/flush at a time (resume restores the "
+                f"saved index)")
+        pop = self.pop
+        returns: List[int] = []
+        for j in range(st.joined):
+            if st.status[j] == DEPARTED and event_draw(
+                    pop.seed, _RETURN, index, j) < pop.return_rate:
+                st.status[j] = ACTIVE
+                returns.append(j)
+        joins: List[int] = []
+        if st.joined < self.max_silos and event_draw(
+                pop.seed, _ARRIVAL, index, st.joined) < pop.arrival_rate:
+            j = st.joined
+            self._join(server, j)
+            st.status.append(ACTIVE)
+            st.last_present.append(-1)
+            st.joined += 1
+            joins.append(j)
+        for j in range(st.joined):
+            if st.status[j] != ACTIVE or j in returns or j in joins:
+                continue
+            if st.n_active <= 1:
+                break  # never let the last active silo depart
+            if event_draw(pop.seed, _DEPART, index, j) < pop.departure_rate:
+                st.status[j] = DEPARTED
+        st.round = index + 1
+        return joins, returns
+
+    # -- sync path -----------------------------------------------------------
+
+    def begin_round(self, server, r: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Process round ``r``'s events; returns (presence, weights).
+
+        Both vectors cover the server's CURRENT J (post-growth).
+        ``presence`` is the 0/1 membership mask multiplied into the
+        scheduler's participation mask; ``weights`` additionally decays
+        a returning silo's first round back by
+        ``(1 + rounds_absent)^-staleness_decay`` — the same decay law
+        the async engine applies per flush.
+        """
+        st = self.state
+        _, returns = self._advance(server, r)
+        present = np.array(
+            [1.0 if s == ACTIVE else 0.0 for s in st.status], np.float32)
+        weights = present.copy()
+        for j in returns:
+            absent = max(r - st.last_present[j], 0) if st.last_present[j] >= 0 else 0
+            weights[j] = (1.0 + absent) ** (-self.pop.staleness_decay)
+        for j in range(st.joined):
+            if st.status[j] == ACTIVE:
+                st.last_present[j] = r
+        return present, weights
+
+    # -- async path ----------------------------------------------------------
+
+    def begin_flush(self, server, buf, cfg, f: int) -> List[int]:
+        """Process flush ``f``'s events against the async BufferState.
+
+        Joins start their first task at the current simulated clock;
+        a returning silo restarts its interrupted task from the return
+        instant but KEEPS its recorded pull version, so its
+        contribution arrives with the large staleness the version gap
+        implies — which is exactly what feeds
+        :func:`~repro.federated.async_engine.flush_weights`. Returns
+        the 0/1 activity mask ``simulate_flush`` pops arrivals under
+        (departed silos' in-flight tasks are frozen, not dropped).
+        """
+        from repro.federated.async_engine import latency_draw
+
+        st = self.state
+        joins, returns = self._advance(server, f)
+        for j in joins:
+            buf.task_idx.append(0)
+            buf.start_version.append(buf.version)
+            buf.start_time.append(buf.clock)
+            buf.finish_time.append(
+                buf.clock + latency_draw(cfg, server.seed, j, 0))
+        for j in returns:
+            buf.finish_time[j] = buf.clock + latency_draw(
+                cfg, server.seed, j, buf.task_idx[j])
+        for j in range(st.joined):
+            if st.status[j] == ACTIVE:
+                st.last_present[j] = f
+        return [1 if s == ACTIVE else 0 for s in st.status]

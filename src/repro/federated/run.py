@@ -187,6 +187,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "making long runs preemption-safe (0 = end only)")
     ap.add_argument("--resume", default=None, metavar="DIR",
                     help="resume a checkpointed run (reads DIR/spec.json)")
+    ap.add_argument("--population", default="", metavar="JSON",
+                    help="population dynamics (docs/federated.md): a "
+                         "PopulationSpec as JSON, e.g. "
+                         '\'{"initial": 2, "arrival_rate": 0.3, '
+                         '"departure_rate": 0.1, "return_rate": 0.5}\'. '
+                         "--silos becomes the roster MAXIMUM; only "
+                         "'initial' silos are live at round 0")
     return ap
 
 
@@ -218,6 +225,7 @@ def _spec_from_args(args, algorithm: str):
     """The thin spec-builder: CLI flags -> declarative ExperimentSpec."""
     from repro.federated.api import (ExperimentSpec, ModelSpec,
                                      OptimizerSpec, RuntimeSpec)
+    from repro.federated.population import PopulationSpec
     from repro.federated.scheduler import Scenario
     from repro.federated.strategy import StrategySpec
     from repro.launch.mesh import MeshSpec
@@ -260,6 +268,8 @@ def _spec_from_args(args, algorithm: str):
             mesh=MeshSpec.parse(args.mesh),
             sanitize=args.sanitize,
         ),
+        population=(PopulationSpec.from_dict(json.loads(args.population))
+                    if args.population else None),
     )
 
 

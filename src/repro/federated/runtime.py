@@ -283,6 +283,16 @@ class Server:
         :class:`~repro.federated.strategy.ServerStrategy` instance.
         Per-silo strategy state (if any) is initialized here so it
         checkpoints alongside ``eta_L``.
+      federation_size: the FULL federation width the estimators scale
+        by (SFVI's ``J`` inflation, the ELBO's ``J/n_active`` rescale).
+        Defaults to ``len(datas)``. A dynamic population sets this to
+        the roster maximum so the estimator target — the full-roster
+        ELBO — stays fixed while silos join through
+        :meth:`grow_silos` (absent silos are just non-participants of
+        the roster-wide federation, the §3 Remark).
+      federation_obs: the full federation's N = Σ_j N_j (SFVI-Avg's
+        N/N_j rescale). Defaults to the sum over ``datas``; a dynamic
+        population passes the roster-wide total for the same reason.
     """
 
     def __init__(
@@ -305,6 +315,8 @@ class Server:
         seed: int = 0,
         strategy: Union[str, ServerStrategy, None] = None,
         graph_cache_token: Optional[str] = None,
+        federation_size: Optional[int] = None,
+        federation_obs: Optional[float] = None,
     ):
         self.problem = problem
         self.J = len(datas)
@@ -373,6 +385,12 @@ class Server:
         num_obs = list(num_obs) + [num_obs[0]] * (self.J_pad - self.J)
         # repro-lint: allow[R4] — host staging of a Python list at init, not a device pull
         self.num_obs = np.asarray(num_obs, np.float32)
+        # Roster-wide constants the strategies' estimators scale by —
+        # trace-time facts that must NOT change when a dynamic
+        # population grows the live J (see class docstring).
+        self.fed_J = self.J if federation_size is None else int(federation_size)
+        self.fed_obs = (float(np.sum(self.num_obs[: self.J]))
+                        if federation_obs is None else float(federation_obs))
 
         if self._has_local:
             if local_opt is None:
@@ -501,6 +519,90 @@ class Server:
         if pad == 0:
             return mask
         return jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
+
+    # -- dynamic population growth ------------------------------------------
+
+    def grow_silos(self, datas: Sequence[PyTree],
+                   num_obs: Optional[Sequence[int]] = None,
+                   eta_rows: Optional[Sequence[PyTree]] = None) -> None:
+        """Append joining silos to the stacked silo axis, in place.
+
+        The population engine's join path: the new silos' data shards
+        (equal leaf shapes with the existing federation) are appended,
+        J and the mesh-chunked ``J_pad`` are recomputed, and every
+        silo-stacked tree is rebuilt — existing real rows are copied
+        bitwise, new rows are initialized, padding is re-tiled. The
+        compiled round retraces only when ``J_pad`` steps (the
+        round-fn cache is keyed by it); growth within the padded chunk
+        reuses the compiled graph, with the new silo entering through
+        the ``n_j`` argument and its mask column.
+
+        ``eta_rows`` optionally supplies each new silo's initial
+        ``η_L`` (the amortized warm start); ``None`` draws the cold
+        family init from a deterministic per-silo key — a pure
+        function of ``(seed, roster index)``, so a resumed run
+        re-grows bit-exactly whenever the join replays. New silos'
+        optimizer moments are fresh; per-silo strategy state rows are
+        the strategy's init (zero sites — PVI's continual-learning
+        join: the new silo's cavity is the current global posterior).
+        """
+        if not datas:
+            return
+        if self.n_processes > 1:
+            raise NotImplementedError(
+                "dynamic population growth is single-process for now "
+                "(multi-process federations own silo rows per host)")
+        old_J = self.J
+        new = list(datas)
+        if num_obs is None:
+            num_obs = [int(jax.tree_util.tree_leaves(d)[0].shape[0])
+                       for d in new]
+        real_data = jax.tree_util.tree_map(
+            lambda x: x[:old_J], self.data)
+        self.J = old_J + len(new)
+        n_dev = int(self.mesh.shape["silo"])
+        self.J_pad = ((self.J + n_dev - 1) // n_dev) * n_dev
+        grown = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            real_data, stack_silos(new))
+        self.data = self.pad_silo_axis(grown)
+        self.num_obs = np.concatenate([
+            self.num_obs[:old_J],
+            # repro-lint: allow[R4] — host staging of a Python list at growth time, not a device pull
+            np.asarray(list(num_obs), np.float32),
+        ])
+        self.num_obs = np.concatenate([
+            self.num_obs,
+            np.broadcast_to(self.num_obs[:1], (self.J_pad - self.J,)),
+        ]).astype(np.float32)
+
+        if self._has_local:
+            if eta_rows is None:
+                # repro-lint: allow[R1] — per-silo growth init root: a pure function of (seed, roster index), re-derived bit-exactly on resume
+                root = jax.random.PRNGKey(self.seed + 1)
+                keys = jnp.stack([
+                    jax.random.fold_in(root, j)
+                    for j in range(old_J, self.J)])
+                new_eta = jax.vmap(self.problem.local_family.init)(keys)
+            else:
+                if len(eta_rows) != len(new):
+                    raise ValueError(
+                        f"eta_rows has {len(eta_rows)} entries for "
+                        f"{len(new)} joining silos")
+                new_eta = stack_silos(list(eta_rows))
+            new_opt = jax.vmap(self._local_opt.init)(new_eta)
+            for k, rows in (("eta_L", new_eta), ("opt_local", new_opt)):
+                real = jax.tree_util.tree_map(
+                    lambda x: x[:old_J], self.state[k])
+                self.state[k] = self.pad_silo_axis(jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0),
+                    real, rows))
+
+        old_strat = self.state.get("strategy", {})
+        if jax.tree_util.tree_leaves(old_strat):
+            fresh = self._strategy.init_silo_state(self)
+            self.state["strategy"] = jax.tree_util.tree_map(
+                lambda f, o: f.at[:old_J].set(o[:old_J]), fresh, old_strat)
 
     # -- model-axis wire sharding -------------------------------------------
     #
@@ -646,8 +748,9 @@ class Server:
         ones = jnp.ones(mask_shape, jnp.float32)
         with debug.suspended_tracing():  # inspection traces are free
             return fn.lower(
+                self.state, self.data, jnp.asarray(self.num_obs),
                 # repro-lint: allow[R1] — dummy key for shape-only lowering; never executed
-                self.state, self.data, jax.random.PRNGKey(0), ones, ones
+                jax.random.PRNGKey(0), ones, ones
             )
 
     def _fused_trim(self):
@@ -671,7 +774,11 @@ class Server:
         strat = self._resolve(algorithm)
         strat.validate(self)
         self._ensure_strategy_state(strat)
-        key = (strat.cache_key(), local_steps)
+        # J_pad keys the entry: growing the silo axis past a mesh-chunk
+        # boundary is a NEW graph (every silo-sharded shape changes),
+        # while growth within the padded chunk reuses the compiled one
+        # — per-silo counts ride the jit boundary as the n_j argument.
+        key = (strat.cache_key(), local_steps, self.J_pad)
         if key not in self._round_fns:
             if strat.cadence == "step":
                 body = self._step_body(strat, local_steps)
@@ -704,18 +811,20 @@ class Server:
                 check_rep=False,
             )
 
-            # Mesh shape rides the tag (a topology change is a
-            # legitimate new trace); the wire stays LAST — that suffix
-            # is part of the watchdog-tag contract (tests/test_sanitize).
+            # Mesh shape and J_pad ride the tag (a topology change or a
+            # padded-chunk growth step is a legitimate new trace); the
+            # wire stays LAST — that suffix is part of the watchdog-tag
+            # contract (tests/test_sanitize).
             trace_tag = ("round", strat.cache_key(), local_steps,
+                         self.J_pad,
                          tuple(sorted(self.mesh.shape.items())), self.wire)
+            j_pad = self.J_pad
 
-            def round_fn(state, data, round_key, mask, weights):
+            def round_fn(state, data, n_j, round_key, mask, weights):
                 # Trace-time only: the recompile watchdog's counter
                 # (no-op unless repro.debug.sanitize is active).
                 debug.trace_event(trace_tag)
-                sids = jnp.arange(self.J_pad, dtype=jnp.int32)
-                n_j = jnp.asarray(self.num_obs)
+                sids = jnp.arange(j_pad, dtype=jnp.int32)
                 (theta, eta_G, opt_server, eta_L, opt_L, strat_state,
                  elbos) = sharded(
                     state["theta"], state["eta_G"], state["opt_server"],
@@ -737,7 +846,11 @@ class Server:
         """Static per-body facts handed to every strategy hook."""
         return StrategyContext(
             problem=self.problem,
-            J=self.J,
+            # The FULL federation width, not the currently-joined J: a
+            # dynamic population's estimators target the roster-wide
+            # ELBO, with absent silos as non-participants (§3 Remark).
+            # Without a population the two coincide.
+            J=self.fed_J,
             K=K,
             server_opt=self._server_opt,
             local_opt=self._local_opt,
@@ -746,10 +859,10 @@ class Server:
             aggregator=self.aggregator,
             wire=wire,
             fused=self.wire == "fused",
-            # N = Σ_j N_j over the REAL federation — the padded tail
+            # N = Σ_j N_j over the full federation — the padded tail
             # repeats silo 0's count purely to keep the dummy silos'
             # per-silo scale finite (their contribution is masked out).
-            total_obs=float(np.sum(self.num_obs[: self.J])),
+            total_obs=self.fed_obs,
         )
 
     def _ship_upload(self, ship, m_j, key, ref, wire, fused):
@@ -966,6 +1079,7 @@ class Server:
         scheduler: Optional[RoundScheduler] = None,
         callback: Optional[Callable[[int, dict], None]] = None,
         start_round: int = 0,
+        population=None,
     ) -> Dict[str, list]:
         """Advance the federation ``num_rounds`` rounds; returns history.
 
@@ -1001,6 +1115,17 @@ class Server:
         independent subsampling event and the per-exchange amplification
         is sound; a round-cadence strategy draws one mask per round
         (index ``r``).
+
+        ``population`` optionally threads a
+        :class:`~repro.federated.population.PopulationEngine` through
+        the loop: its ``begin_round`` hook processes the round's churn
+        events first (joins may grow the silo axis, which re-fetches
+        the compiled round for the new ``J_pad``), and the resulting
+        membership mask multiplies the scheduler's participation mask
+        — with a returning silo's first round back staleness-decayed
+        in the aggregation weights. The scheduler stays roster-wide
+        (its masks are sliced to the currently-joined J), so the
+        participation schedule is independent of the churn schedule.
         """
         if local_steps < 1:
             raise ValueError(f"local_steps must be >= 1, got {local_steps}")
@@ -1012,7 +1137,10 @@ class Server:
             fn = self._get_round(strat, local_steps)
             up1 = self.bytes_up_per_silo(strat)
             down1 = self.bytes_down_per_silo()
-        sched = scheduler or RoundScheduler(self.J, seed=self.seed)
+        # The default scheduler covers the FULL federation (fed_J == J
+        # without a population): churn multiplies membership into the
+        # roster-wide participation draws, it never re-shapes them.
+        sched = scheduler or RoundScheduler(self.fed_J, seed=self.seed)
         step_cadence = strat.cadence == "step"
         exchanges = local_steps if step_cadence else 1
         history: Dict[str, list] = {
@@ -1042,9 +1170,28 @@ class Server:
             # (repro.debug.host_bridge); metric pulls below stay under
             # the transfer guard and must use explicit device_get.
             with debug.host_bridge():
-                ex_masks = [sched.mask(i) for i in ex_idx]
+                present = stale_w = None
+                if population is not None:
+                    # Churn first: a join may grow J (and step J_pad,
+                    # re-fetching the compiled round); the membership
+                    # and staleness vectors cover the post-growth J.
+                    present, stale_w = population.begin_round(self, r)
+                    fn = self._get_round(strat, local_steps)
+                raw_masks = [sched.mask(i) for i in ex_idx]
+                if present is not None:
+                    pr = jnp.asarray(present)
+                    sw = jnp.asarray(stale_w)
+                    ex_masks = [m[: self.J] * pr for m in raw_masks]
+                    wt_masks = [m[: self.J] * sw for m in raw_masks]
+                else:
+                    ex_masks = raw_masks
+                    wt_masks = raw_masks
                 padded = [self._pad_mask(m) for m in ex_masks]
+                padded_w = [self._pad_mask(w) for w in wt_masks]
                 mask = (jnp.stack(padded) if step_cadence else padded[0])
+                weights = (jnp.stack(padded_w) if step_cadence
+                           else padded_w[0])
+                n_j = jnp.asarray(self.num_obs)
                 round_key = jax.random.fold_in(base_key, r)
                 if self.n_processes > 1:
                     # Control inputs must be global arrays in a
@@ -1054,25 +1201,31 @@ class Server:
                     from repro.federated import distributed
 
                     mask = distributed.replicated(mask, self.mesh)
+                    weights = distributed.replicated(weights, self.mesh)
+                    n_j = distributed.replicated(n_j, self.mesh)
                     round_key = distributed.replicated(
                         round_key, self.mesh)
                 # Stragglers received the broadcast before dropping:
                 # bill their download. Schedulers without the optional
-                # invited() protocol attribute bill reporters.
+                # invited() protocol attribute bill reporters — and an
+                # absent silo receives no broadcast at all.
                 invited_fn = getattr(sched, "invited", None)
                 inv_masks = [
                     invited_fn(i) if invited_fn is not None else ex_masks[k]
                     for k, i in enumerate(ex_idx)
                 ]
+                if present is not None:
+                    inv_masks = [m[: self.J] * pr for m in inv_masks]
             active = [int(np.sum(jax.device_get(m))) for m in ex_masks]
             invited = [
                 max(int(np.sum(jax.device_get(m))), active[k])
                 for k, m in enumerate(inv_masks)
             ]
-            # Sync rounds aggregate with the participation mask itself;
-            # the async engine passes staleness-decayed weights instead.
-            self.state, metrics = fn(self.state, self.data, round_key,
-                                     mask, mask)
+            # Sync rounds aggregate with the participation mask itself
+            # (population churn decays a returning silo's weight); the
+            # async engine passes staleness-decayed weights instead.
+            self.state, metrics = fn(self.state, self.data, n_j,
+                                     round_key, mask, weights)
             elbos = jax.device_get(metrics["elbo"])
             up = sum(active) * up1
             down = sum(invited) * down1

@@ -5,7 +5,7 @@ keeps its personal head adapter, so one batch can serve requests from
 different silos simultaneously (requests are grouped by silo along the
 batch axis, exactly how the decode shapes shard on the mesh).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+    PYTHONPATH=src python -m repro.launch.serve_backbone --arch qwen3-4b \
         --batch 8 --prompt-len 64 --gen 32
 """
 from __future__ import annotations

@@ -98,11 +98,16 @@ def build_hier_bnn(
         ll = jnp.sum(jnp.take_along_axis(logp, data_j["y"][:, None], axis=-1))
         return lp + ll
 
+    def predict(theta, z_G, z_L, x):
+        del theta
+        return _predict_logits(gspec, lspec, fedpop, z_G, z_L, x)
+
     model = StructuredModel(
         global_dim=gspec.dim,
         local_dim=lspec.dim,
         log_prior_global=log_prior_global,
         log_local=log_local,
+        predict=predict,
         name="fedpop_bnn" if fedpop else "hier_bnn",
     )
     gfam = DiagGaussian(gspec.dim)

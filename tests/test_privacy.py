@@ -277,8 +277,8 @@ class TestServerDP:
                          server_opt=sgd(3e-2), local_opt=sgd(3e-2),
                          privacy=pol, seed=11)
             fn = srv._get_round(algorithm, 2)
-            state, _ = fn(srv.state, srv.data, jax.random.PRNGKey(0),
-                          mask_arg, mask_arg)
+            state, _ = fn(srv.state, srv.data, jnp.asarray(srv.num_obs),
+                          jax.random.PRNGKey(0), mask_arg, mask_arg)
             outs.append((state["theta"], state["eta_G"]))
         np.testing.assert_array_equal(np.asarray(_flat(outs[0][0])),
                                       np.asarray(_flat(outs[1][0])))
@@ -337,7 +337,8 @@ _HLO_SCRIPT = textwrap.dedent("""
         fn = srv._get_round(algo, K)
         mask_shape = (K, 4) if algo == "sfvi" else (4,)
         ones = jnp.ones(mask_shape, jnp.float32)
-        args = (srv.state, srv.data, jax.random.PRNGKey(0), ones, ones)
+        args = (srv.state, srv.data, jnp.asarray(srv.num_obs),
+                jax.random.PRNGKey(0), ones, ones)
         hlo = fn.lower(*args).compile().as_text()
         n_ag = len(re.findall(r"\\ball-gather(?:-start)?\\(", hlo))
         coll = srv.compiled_collective_bytes(algo, K)

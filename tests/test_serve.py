@@ -1,0 +1,165 @@
+"""Posterior serving: q(Z_L|Z_G) queries from a federated checkpoint.
+
+Covers the serving acceptance surface: checkpoint restore, joint
+sampling through the problem's variational family, batched requests
+grouped by silo (slices of one vectorized draw), determinism across
+replicas, the predict hook, and the CLI endpoint.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.federated.api import ExperimentSpec, ModelSpec, build
+from repro.federated.population import PopulationSpec
+from repro.federated.scheduler import Scenario
+from repro.federated.serve import Posterior, Query
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _toy_ckpt(tmp_path, **over):
+    base = dict(model=ModelSpec("toy", {"num_obs": 16}),
+                scenario=Scenario(algorithm="sfvi"),
+                num_silos=3, rounds=2, seed=0)
+    base.update(over)
+    exp = build(ExperimentSpec(**base))
+    exp.run()
+    exp.save(str(tmp_path))
+    return exp
+
+
+class TestQuery:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            Query("flarb")
+        with pytest.raises(ValueError, match="silo"):
+            Query("sample")
+        with pytest.raises(ValueError, match="n must be"):
+            Query("sample", silo=0, n=0)
+        with pytest.raises(ValueError, match="inputs"):
+            Query("predict", silo=0)
+
+    def test_from_dict(self):
+        q = Query.from_dict({"kind": "sample", "silo": 2, "n": 3})
+        assert (q.kind, q.silo, q.n) == ("sample", 2, 3)
+
+
+class TestPosterior:
+    def test_joint_sampling_shapes_and_determinism(self, tmp_path):
+        _toy_ckpt(tmp_path)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        assert post.num_silos == 3 and post.round == 2
+        s = post.sample(1, n=4, seed=9)
+        assert np.asarray(s["z_G"]).shape == (4, 1)
+        assert np.asarray(s["z_L"]).shape == (4, 1)
+        # Same checkpoint + same seed on a second replica -> identical.
+        replica = Posterior.from_checkpoint(str(tmp_path))
+        s2 = replica.sample(1, n=4, seed=9)
+        np.testing.assert_array_equal(np.asarray(s["z_G"]),
+                                      np.asarray(s2["z_G"]))
+        np.testing.assert_array_equal(np.asarray(s["z_L"]),
+                                      np.asarray(s2["z_L"]))
+        # Different silos draw from different streams.
+        assert not np.array_equal(np.asarray(s["z_L"]),
+                                  np.asarray(replica.sample(2, n=4,
+                                                            seed=9)["z_L"]))
+
+    def test_global_sample(self, tmp_path):
+        _toy_ckpt(tmp_path)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        z = post.global_sample(6, seed=1)
+        assert np.asarray(z).shape == (6, 1)
+
+    def test_silo_index_validated(self, tmp_path):
+        _toy_ckpt(tmp_path)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        with pytest.raises(IndexError, match="out of range"):
+            post.sample(3)
+
+    def test_samples_match_the_variational_family(self, tmp_path):
+        """The serving path routes through SFVIProblem.sample_posterior:
+        a direct (eager) call with the restored state + the same key
+        gives the same draws — the endpoint adds batching and jit, not
+        math (jit fusion may differ by float32 ULPs, hence allclose)."""
+        _toy_ckpt(tmp_path)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        got = post.sample(0, n=3, seed=5)
+        prob = post.problem
+        z_G, z_L = prob.sample_posterior(
+            post.server.state["eta_G"], post.eta_row(0),
+            post._key(5, 0), num_samples=3)
+        np.testing.assert_allclose(np.asarray(got["z_G"]),
+                                   np.asarray(z_G), rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(got["z_L"]),
+                                   np.asarray(z_L), rtol=1e-6, atol=1e-7)
+
+    def test_batched_queries_are_slices_of_one_grouped_draw(self, tmp_path):
+        _toy_ckpt(tmp_path)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        qs = [Query("sample", silo=1, n=2), Query("global_sample", n=2),
+              Query("sample", silo=1, n=1), Query("sample", silo=0, n=1)]
+        ans = post.answer_batch(qs, seed=0)
+        grouped = post.sample(1, n=3, seed=0)
+        np.testing.assert_array_equal(np.asarray(ans[0]["z_G"]),
+                                      np.asarray(grouped["z_G"])[:2])
+        np.testing.assert_array_equal(np.asarray(ans[2]["z_G"]),
+                                      np.asarray(grouped["z_G"])[2:3])
+        assert ans[1]["z_L"] is None
+        assert np.asarray(ans[3]["z_G"]).shape == (1, 1)
+
+    def test_serves_population_checkpoint_mid_roster(self, tmp_path):
+        """A churn checkpoint restores with its live J; the endpoint
+        serves exactly the joined silos."""
+        exp = _toy_ckpt(
+            tmp_path, num_silos=6, rounds=4,
+            population=PopulationSpec(initial=2, arrival_rate=0.6,
+                                      departure_rate=0.2, return_rate=0.5,
+                                      seed=3))
+        post = Posterior.from_checkpoint(str(tmp_path))
+        assert post.num_silos == exp.population.state.joined
+        s = post.sample(post.num_silos - 1, n=2)
+        assert np.asarray(s["z_L"]).shape == (2, 1)
+        with pytest.raises(IndexError):
+            post.sample(post.num_silos)
+
+    def test_predict_requires_model_hook(self, tmp_path):
+        _toy_ckpt(tmp_path)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        with pytest.raises(ValueError, match="predict hook"):
+            post.predict(0, np.zeros((2, 1), np.float32))
+
+    def test_predict_posterior_average(self, tmp_path):
+        _toy_ckpt(tmp_path,
+                  model=ModelSpec("hier_bnn",
+                                  {"in_dim": 16, "hidden": 4,
+                                   "train_per_silo": 16,
+                                   "test_per_silo": 4}),
+                  num_silos=2)
+        post = Posterior.from_checkpoint(str(tmp_path))
+        x = np.random.default_rng(0).normal(size=(5, 16)).astype(np.float32)
+        out = post.predict(0, x, n=4, seed=2)
+        assert np.asarray(out).shape == (5, 10)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(post.predict(0, x, n=4, seed=2)))
+
+
+class TestCLI:
+    def test_cli_answers_batched_queries(self, tmp_path):
+        _toy_ckpt(tmp_path)
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.federated.serve",
+             "--ckpt-dir", str(tmp_path), "--queries",
+             json.dumps([{"kind": "sample", "silo": 0, "n": 2},
+                         {"kind": "global_sample", "n": 1}])],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        payload = json.loads(out.stdout)
+        assert payload["num_silos"] == 3 and payload["round"] == 2
+        assert len(payload["answers"]) == 2
+        assert np.asarray(payload["answers"][0]["z_G"]).shape == (2, 1)
+        assert payload["answers"][1]["z_L"] is None

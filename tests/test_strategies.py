@@ -210,7 +210,12 @@ class TestLegacyEquivalence:
                 return get_strategy("sfvi_avg")()
 
             def _get_round(self, algorithm, local_steps):
-                return super()._get_round("sfvi_avg", local_steps)
+                fn = super()._get_round("sfvi_avg", local_steps)
+                # The engine's round signature gained n_j (dynamic
+                # population growth); the frozen oracle predates it and
+                # bakes num_obs into the graph, so drop the argument.
+                return lambda state, data, n_j, key, mask, weights: fn(
+                    state, data, key, mask, weights)
 
             def bytes_up_per_silo(self, algorithm=None):
                 return super().bytes_up_per_silo("sfvi_avg")

@@ -340,7 +340,8 @@ _HLO_SCRIPT = textwrap.dedent("""
                 fn = srv._get_round(algo, K)
                 mask_shape = (K, 4) if algo == "sfvi" else (4,)
                 ones = jnp.ones(mask_shape, jnp.float32)
-                args = (srv.state, srv.data, jax.random.PRNGKey(0), ones, ones)
+                args = (srv.state, srv.data, jnp.asarray(srv.num_obs),
+                        jax.random.PRNGKey(0), ones, ones)
                 hlo = fn.lower(*args).compile().as_text()
                 got = gathers_by_dtype(hlo)
                 assert got == expect, (wire, algo, K, type(comp).__name__,
